@@ -1,0 +1,76 @@
+"""Shared corpus/cache/timing utilities for the paper benchmarks."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+CACHE: Dict = {}
+
+QUICK = os.environ.get("BENCH_FULL", "0") != "1"
+
+
+def corpus(n_docs: int = None, seed: int = 11):
+    """Synthetic expanded-rcv1 corpus (cached per size)."""
+    from repro.data import SynthRcv1Config, generate_arrays
+    n_docs = n_docs or (800 if QUICK else 3000)
+    key = ("corpus", n_docs, seed)
+    if key not in CACHE:
+        cfg = SynthRcv1Config(seed=seed, topic_tokens=150,
+                              background_frac=0.35,
+                              max_pairs_per_doc=6000,
+                              max_triples_per_doc=3000)
+        CACHE[key] = generate_arrays(n_docs, cfg)
+    return CACHE[key]
+
+
+def hashed_codes(k: int, b: int, seed: int = 1):
+    from repro.data import preprocess_rows
+    rows, labels = corpus()
+    key = ("codes", k, b, seed, len(rows))
+    if key not in CACHE:
+        CACHE[key] = preprocess_rows(rows, k=k, b=b, seed=seed, chunk=256)
+    return CACHE[key], labels
+
+
+def vw_sketches(m: int, seed: int = 2):
+    import jax.numpy as jnp
+    from repro.core.vw import vw_hash_sparse
+    from repro.data.packing import pad_rows
+    rows, labels = corpus()
+    key = ("vw", m, seed, len(rows))
+    if key not in CACHE:
+        order = np.argsort([len(r) for r in rows])
+        sk = np.empty((len(rows), m), np.float32)
+        for lo in range(0, len(rows), 256):
+            sel = order[lo:lo + 256]
+            idx, nnz = pad_rows([rows[i] for i in sel])
+            mask = np.arange(idx.shape[1])[None, :] < nnz[:, None]
+            sk[sel] = np.asarray(vw_hash_sparse(
+                jnp.asarray(idx), jnp.asarray(mask), None, m, seed=seed))
+        CACHE[key] = sk
+    return CACHE[key], labels
+
+
+def split(arrays_labels):
+    x, y = arrays_labels
+    n_tr = len(y) // 2                      # paper: 50/50 split (Table 1)
+    return x[:n_tr], y[:n_tr], x[n_tr:], y[n_tr:]
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def emit(rows: List[Tuple[str, float, str]]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: jnp (XLA-CPU) production path timings + the
+arithmetic each Pallas kernel must sustain on TPU (derived columns).
+
+Interpret-mode Pallas timings are NOT meaningful performance numbers
+(python-per-grid-step); the jnp oracle path is what actually runs on
+this host, and the derived column reports the work per call so TPU
+projections can be made (bytes/FLOP counts are hardware-independent).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+
+
+def minhash_bench():
+    from repro.core.minhash import minhash_jnp
+    rng = np.random.default_rng(0)
+    rows = []
+    for (n, m, k) in [(256, 1024, 64), (256, 1024, 512),
+                      (1024, 4096, 200)]:
+        idx = jnp.asarray(rng.integers(0, 1 << 30, (n, m)).astype(np.int32))
+        mask = jnp.ones((n, m), bool)
+        a = jnp.asarray((rng.integers(0, 1 << 32, k, dtype=np.uint64) | 1
+                         ).astype(np.uint32))
+        b = jnp.asarray(rng.integers(0, 1 << 32, k, dtype=np.uint64
+                                     ).astype(np.uint32))
+        fn = jax.jit(lambda i, ms: minhash_jnp(i, ms, a, b))
+        fn(idx, mask).block_until_ready()
+        _, dt = timed(lambda: fn(idx, mask).block_until_ready(),
+                      repeats=3)
+        hashes = n * m * k
+        rows.append((f"kernel/minhash_n{n}_m{m}_k{k}", dt * 1e6,
+                     f"Mhash_per_s={hashes / dt / 1e6:.0f}"))
+    return emit(rows)
+
+
+def bbit_linear_bench():
+    from repro.kernels import ref
+    rng = np.random.default_rng(1)
+    rows = []
+    for (n, k, b, c) in [(4096, 200, 8, 2), (4096, 500, 12, 2)]:
+        v = 1 << b
+        codes = jnp.asarray(rng.integers(0, v, (n, k)).astype(np.int32))
+        w = jnp.asarray(rng.normal(size=(k, v, c)).astype(np.float32))
+        fn = jax.jit(ref.bbit_linear_fwd)
+        fn(codes, w).block_until_ready()
+        _, dt = timed(lambda: fn(codes, w).block_until_ready(), repeats=5)
+        rows.append((f"kernel/bbit_linear_n{n}_k{k}_b{b}", dt * 1e6,
+                     f"Mlookup_per_s={n * k / dt / 1e6:.0f}"))
+    return emit(rows)
+
+
+def vw_sketch_bench():
+    from repro.core.vw import vw_hash_sparse
+    rng = np.random.default_rng(2)
+    rows = []
+    for (n, m, buckets) in [(1024, 2048, 1024), (256, 8192, 16384)]:
+        idx = jnp.asarray(rng.integers(0, 1 << 30, (n, m)).astype(np.int32))
+        mask = jnp.ones((n, m), bool)
+        fn = jax.jit(lambda i, ms: vw_hash_sparse(i, ms, None, buckets))
+        fn(idx, mask).block_until_ready()
+        _, dt = timed(lambda: fn(idx, mask).block_until_ready(),
+                      repeats=3)
+        rows.append((f"kernel/vw_sketch_n{n}_m{m}_M{buckets}", dt * 1e6,
+                     f"Mnnz_per_s={n * m / dt / 1e6:.0f}"))
+    return emit(rows)

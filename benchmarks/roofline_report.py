@@ -1,0 +1,36 @@
+"""Roofline summary bench: reads artifacts/dryrun JSONs and emits the
+per-cell terms as CSV (the table EXPERIMENTS.md §Roofline renders)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def roofline_rows(art_dir: str = "artifacts/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rec = json.load(open(path))
+        name = f"{rec.get('arch')}×{rec.get('shape')}×{rec.get('mesh')}"
+        if rec.get("status") == "skipped":
+            rows.append((f"dryrun/{name}", 0.0, "skipped"))
+            continue
+        if rec.get("status") != "ok":
+            rows.append((f"dryrun/{name}", 0.0,
+                         f"error={rec.get('error', '?')[:60]}"))
+            continue
+        mem = rec.get("memory", {})
+        rl = rec.get("roofline", {})
+        derived = (f"fits={mem.get('fits')};"
+                   f"resident_gib={mem.get('resident_bytes', 0)/2**30:.2f};"
+                   f"dominant={rl.get('dominant')};"
+                   f"bound_s={rl.get('step_lower_bound_s', 0):.3g};"
+                   f"frac={rl.get('roofline_fraction', 0):.3f}")
+        rows.append((f"dryrun/{name}",
+                     rec.get("compile_seconds", 0) * 1e6, derived))
+    if not rows:
+        rows.append(("dryrun/none", 0.0, "no artifacts; run "
+                     "python -m repro.launch.dryrun --all"))
+    return emit(rows)

@@ -1,0 +1,43 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  QUICK grids by default;
+``BENCH_FULL=1`` restores the paper's full sweeps.  Select subsets with
+``python -m benchmarks.run fig1 fig8 table2``.
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figures, roofline_report
+
+    suites = {
+        "fig1": paper_figures.fig1_fig2_svm,
+        "fig3": paper_figures.fig3_fig4_logistic,
+        "fig5": paper_figures.fig5_fig6_vw_vs_bbit,
+        "fig7": paper_figures.fig7_train_time_vw_vs_bbit,
+        "fig8": paper_figures.fig8_universal_vs_permutations,
+        "table2": paper_figures.table2_preprocessing_cost,
+        "variance": paper_figures.variance_check,
+        "compact": paper_figures.compact_index_trick,
+        "kernels_minhash": kernel_bench.minhash_bench,
+        "kernels_bbit": kernel_bench.bbit_linear_bench,
+        "kernels_vw": kernel_bench.vw_sketch_bench,
+        "roofline": roofline_report.roofline_rows,
+    }
+    selected = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        try:
+            suites[name]()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Figure 5/6 style comparison: b-bit minwise hashing vs the VW
+algorithm at EQUAL STORAGE (the paper's central empirical claim).
+
+Run:  PYTHONPATH=src python examples/compare_vw_bbit.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.vw import vw_hash_sparse
+from repro.data import SynthRcv1Config, generate_arrays, preprocess_rows
+from repro.data.packing import pad_rows
+from repro.models.linear import BBitLinearConfig, VWLinearConfig
+from repro.train import train_bbit_liblinear, train_vw_liblinear
+
+
+def main() -> None:
+    cfg = SynthRcv1Config(seed=11, topic_tokens=150, background_frac=0.35,
+                          max_pairs_per_doc=4000, max_triples_per_doc=2000)
+    rows, labels = generate_arrays(1000, cfg)
+    n_tr = 500
+
+    print(f"{'method':28s} {'bits/doc':>9s} {'test acc':>9s}")
+    print("-" * 50)
+
+    for (k, b) in [(30, 12), (64, 8), (128, 8)]:
+        codes = preprocess_rows(rows, k=k, b=b, seed=1, chunk=256)
+        res = train_bbit_liblinear(
+            codes[:n_tr], labels[:n_tr], codes[n_tr:], labels[n_tr:],
+            BBitLinearConfig(k=k, b=b), loss="logistic", C=1.0,
+            max_iter=25)
+        print(f"b-bit minwise  k={k:<4d} b={b:<3d} {k*b:>9d} "
+              f"{res.test_acc:>9.3f}")
+
+    order = np.argsort([len(r) for r in rows])
+    for m in (12, 32, 128, 1024):
+        sk = np.empty((len(rows), m), np.float32)
+        for lo in range(0, len(rows), 256):
+            sel = order[lo:lo + 256]
+            idx, nnz = pad_rows([rows[i] for i in sel])
+            mask = np.arange(idx.shape[1])[None, :] < nnz[:, None]
+            sk[sel] = np.asarray(vw_hash_sparse(
+                jnp.asarray(idx), jnp.asarray(mask), None, m, seed=2))
+        res = train_vw_liblinear(
+            sk[:n_tr], labels[:n_tr], sk[n_tr:], labels[n_tr:],
+            VWLinearConfig(m=m), loss="logistic", C=1.0, max_iter=25)
+        print(f"VW hashing     m={m:<8d} {32*m:>9d} {res.test_acc:>9.3f}")
+
+    print("\npaper's claim: at the same storage budget, b-bit minwise"
+          "\nhashing dominates VW; VW needs orders of magnitude more"
+          "\nbins to catch up (compare 360-1024-bit rows).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Elastic re-sharding: move a restored host-numpy pytree onto any mesh.
+
+A job checkpointed on one topology (e.g. 512 chips) restores on another
+(e.g. 256 after losing a pod): checkpoints are topology-free host
+arrays, and ``reshard`` places them under the *new* mesh's shardings.
+The launcher (launch/train.py) wires this together with
+``mesh_from_available_devices`` so a restarted job simply uses whatever
+devices exist — the elastic-scaling story for node failures.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """device_put every leaf under the matching sharding (or replicate).
+
+    ``shardings`` is a matching pytree of NamedSharding (or a single
+    sharding applied to all leaves).
+    """
+    if isinstance(shardings, (NamedSharding,)) or shardings is None:
+        return jax.device_put(tree, shardings)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings,
+        is_leaf=lambda x: x is None)
+
+
+def mesh_from_available_devices(
+    model_parallel: int = 1,
+    max_devices: Optional[int] = None,
+) -> Mesh:
+    """Builds a (data, model) mesh from whatever devices are alive.
+
+    data size = n_devices // model_parallel (elastic along data).
+    """
+    devs = jax.devices()
+    if max_devices is not None:
+        devs = devs[:max_devices]
+    n = len(devs)
+    if n % model_parallel:
+        raise ValueError(
+            f"{n} devices not divisible by model_parallel={model_parallel}")
+    import numpy as np
+    arr = np.asarray(devs).reshape(n // model_parallel, model_parallel)
+    return Mesh(arr, ("data", "model"))
+
+
+def replicate_spec_tree(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,4 @@
+"""Config system: ArchConfig schema, registry, assigned architectures."""
+from repro.configs.base import ArchConfig, register, get_config, list_configs
+
+__all__ = ["ArchConfig", "register", "get_config", "list_configs"]

@@ -1,0 +1,51 @@
+"""Core library: the paper's contribution as composable JAX modules."""
+from repro.core.types import SparseBatch, resemblance
+from repro.core.universal_hash import (
+    ModPrimeHash,
+    MultiplyShiftHash,
+    PermutationHash,
+    make_hash_family,
+)
+from repro.core.minhash import (
+    minhash_jnp,
+    minhash_batch,
+    minhash_numpy,
+    collision_probability,
+)
+from repro.core.bbit import (
+    bbit_codes,
+    pack_codes,
+    unpack_codes,
+    storage_bits,
+    vw_storage_bits,
+    codes_agree,
+)
+from repro.core.expansion import (
+    expand,
+    expansion_offsets,
+    linear_forward,
+    pb_hat,
+    compact_index,
+)
+from repro.core.vw import vw_hash_sparse, vw_hash_batch, vw_inner_product
+from repro.core.random_projection import (
+    rp_project_sparse,
+    rp_project_batch,
+    rp_inner_product,
+)
+from repro.core import estimators
+
+__all__ = [
+    "SparseBatch", "resemblance",
+    "ModPrimeHash", "MultiplyShiftHash", "PermutationHash",
+    "make_hash_family",
+    "minhash_jnp", "minhash_batch", "minhash_numpy",
+    "collision_probability",
+    "bbit_codes", "pack_codes", "unpack_codes", "storage_bits",
+    "vw_storage_bits", "codes_agree",
+    "expand", "expansion_offsets", "linear_forward", "pb_hat",
+    "compact_index",
+    "vw_hash_sparse", "vw_hash_batch", "vw_inner_product",
+    "rp_project_sparse", "rp_project_batch", "rp_inner_product",
+    "estimators",
+]

@@ -1,0 +1,69 @@
+"""b-bit code extraction, storage packing, and storage accounting (paper §2-§3).
+
+The whole point of the paper: keep only the lowest b bits of each
+min-hash, so a dataset of n examples costs exactly ``n·b·k`` bits.
+``pack_codes``/``unpack_codes`` realize that storage format bit-exactly;
+the data pipeline uses it as the on-disk representation of the
+preprocessed (hashed) dataset.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def bbit_codes(z: jax.Array, b: int) -> jax.Array:
+    """Lowest b bits of each min-hash value → uint16 codes in [0, 2^b)."""
+    if not 1 <= b <= 16:
+        raise ValueError(f"b must be in [1, 16], got {b}")
+    mask = (1 << b) - 1
+    if isinstance(z, np.ndarray):
+        return (z & np.asarray(mask, dtype=z.dtype)).astype(np.uint16)
+    return (z & jnp.asarray(mask, dtype=z.dtype)).astype(jnp.uint16)
+
+
+def storage_bits(n: int, k: int, b: int) -> int:
+    """Exact storage of the hashed dataset: n·b·k bits (paper §3)."""
+    return n * b * k
+
+
+def vw_storage_bits(n: int, k: int, bits_per_entry: int = 32) -> int:
+    """VW stores k dense (float/int) bins per example (paper §5.3)."""
+    return n * k * bits_per_entry
+
+
+def pack_codes(codes: np.ndarray, b: int) -> np.ndarray:
+    """Bit-packs uint16 (n, k) codes (< 2^b) into a uint8 (n, ceil(k·b/8)).
+
+    Row-major bitstream, LSB-first within each byte — the on-disk format
+    of the preprocessed dataset (exactly n·b·k bits + row padding).
+    """
+    n, k = codes.shape
+    codes = codes.astype(np.uint32)
+    bits = ((codes[:, :, None] >> np.arange(b, dtype=np.uint32)[None, None, :])
+            & 1).astype(np.uint8)          # (n, k, b) LSB-first
+    flat = bits.reshape(n, k * b)
+    pad = (-flat.shape[1]) % 8
+    if pad:
+        flat = np.pad(flat, ((0, 0), (0, pad)))
+    flat = flat.reshape(n, -1, 8)
+    weights = (1 << np.arange(8, dtype=np.uint16)).astype(np.uint8)
+    return (flat * weights[None, None, :]).sum(axis=2).astype(np.uint8)
+
+
+def unpack_codes(packed: np.ndarray, k: int, b: int) -> np.ndarray:
+    """Inverse of ``pack_codes`` → uint16 (n, k)."""
+    n = packed.shape[0]
+    bits = ((packed[:, :, None] >> np.arange(8, dtype=np.uint8)[None, None, :])
+            & 1)
+    flat = bits.reshape(n, -1)[:, : k * b].reshape(n, k, b)
+    weights = (1 << np.arange(b, dtype=np.uint32))
+    return (flat.astype(np.uint32) * weights[None, None, :]).sum(axis=2).astype(
+        np.uint16
+    )
+
+
+def codes_agree(c1: jax.Array, c2: jax.Array) -> jax.Array:
+    """\\hat{P}_b per pair: fraction of agreeing b-bit codes (paper Eq. 6)."""
+    return jnp.mean((c1 == c2).astype(jnp.float32), axis=-1)

@@ -1,0 +1,130 @@
+"""Minwise hashing (paper §2) over padded sparse batches.
+
+Two execution paths:
+
+  * ``minhash_jnp``   — pure-jnp, uint32 multiply-shift family, chunked
+                        over k to bound memory.  This is also the oracle
+                        the Pallas kernel (`repro.kernels.minhash`) is
+                        validated against.
+  * ``minhash_numpy`` — exact mod-Mersenne(2^61-1) family (the paper's
+                        Eq. 17), used by the offline preprocessing path
+                        of the data pipeline.
+
+Both return the raw min-hash values z_j = min_{t∈S} h_j(t); b-bit code
+extraction lives in ``repro.core.bbit``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import SparseBatch
+from repro.core.universal_hash import (
+    ModPrimeHash,
+    MultiplyShiftHash,
+    PermutationHash,
+    _fmix32,
+)
+
+UINT32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+@functools.partial(jax.jit, static_argnames=("k_chunk", "m_chunk"))
+def minhash_jnp(
+    indices: jax.Array,
+    mask: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    k_chunk: int = 128,
+    m_chunk: int = 512,
+) -> jax.Array:
+    """Min-hash of each row's valid indices under k multiply-shift hashes.
+
+    Args:
+      indices: int32 (n, m) padded nonzero feature ids.
+      mask:    bool  (n, m).
+      a, b:    uint32 (k,) multiply-shift parameters (a odd).
+      k_chunk, m_chunk: tile sizes; the live intermediate is
+        (n, m_chunk, k_chunk) — double chunking keeps heavy-tailed
+        documents (huge max_nnz) from exploding memory.
+
+    Returns:
+      uint32 (n, k) min-hash values (UINT32_MAX for empty rows).
+    """
+    n, m = indices.shape
+    k = a.shape[0]
+    pad_k = (-k) % k_chunk
+    a_p = jnp.pad(a, (0, pad_k), constant_values=1)
+    b_p = jnp.pad(b, (0, pad_k), constant_values=0)
+    nk = (k + pad_k) // k_chunk
+    a_c = a_p.reshape(nk, k_chunk)
+    b_c = b_p.reshape(nk, k_chunk)
+
+    pad_m = (-m) % m_chunk
+    tu = jnp.pad(indices.astype(jnp.uint32), ((0, 0), (0, pad_m)))
+    mk = jnp.pad(mask, ((0, 0), (0, pad_m)))
+    nm = (m + pad_m) // m_chunk
+    tu = tu.reshape(n, nm, m_chunk)
+    mk = mk.reshape(n, nm, m_chunk)
+
+    def one_k_chunk(carry, ab):
+        ac, bc = ab
+
+        def one_m_chunk(best, tm):
+            t, mm = tm                          # (n, m_chunk) each
+            h = _fmix32(ac[None, None, :] * t[:, :, None]
+                        + bc[None, None, :])    # (n, m_chunk, k_chunk)
+            h = jnp.where(mm[:, :, None], h, UINT32_MAX)
+            return jnp.minimum(best, jnp.min(h, axis=1)), ()
+
+        init = jnp.full((n, k_chunk), UINT32_MAX, jnp.uint32)
+        best, _ = jax.lax.scan(
+            one_m_chunk, init,
+            (jnp.moveaxis(tu, 1, 0), jnp.moveaxis(mk, 1, 0)))
+        return carry, best
+
+    _, outs = jax.lax.scan(one_k_chunk, 0, (a_c, b_c))
+    out = jnp.moveaxis(outs, 0, 1).reshape(n, nk * k_chunk)
+    return out[:, :k]
+
+
+def minhash_batch(batch: SparseBatch, family: MultiplyShiftHash,
+                  k_chunk: int = 128) -> jax.Array:
+    a, b = family.params()
+    return minhash_jnp(batch.indices, batch.mask, a, b, k_chunk=k_chunk)
+
+
+def minhash_numpy(
+    indices: np.ndarray,
+    mask: np.ndarray,
+    family: Union[ModPrimeHash, PermutationHash],
+    k_chunk: int = 64,
+) -> np.ndarray:
+    """Exact offline min-hash (paper Eq. 17 family or true permutations).
+
+    Returns uint64 (n, k).
+    """
+    n, m = indices.shape
+    k = family.k
+    out = np.full((n, k), np.iinfo(np.uint64).max, dtype=np.uint64)
+    sentinel = np.uint64(np.iinfo(np.uint64).max)
+    for start in range(0, k, k_chunk):
+        stop = min(start + k_chunk, k)
+        if isinstance(family, ModPrimeHash):
+            sub = ModPrimeHash(c1=family.c1[start:stop],
+                               c2=family.c2[start:stop])
+        else:
+            sub = PermutationHash(perms=family.perms[start:stop])
+        h = sub(indices).astype(np.uint64)  # (n, m, kc)
+        h = np.where(mask[:, :, None], h, sentinel)
+        out[:, start:stop] = h.min(axis=1)
+    return out
+
+
+def collision_probability(z1: np.ndarray, z2: np.ndarray) -> float:
+    """\\hat{R}_M — fraction of matching min-hashes (paper Eq. 1)."""
+    return float(np.mean(z1 == z2))

@@ -1,0 +1,80 @@
+"""Random projections (paper §5.1) — the other baseline family.
+
+v_j = Σ_i u_i · r_ij with E r=0, Var r=1, E r³=0, E r⁴=s (paper Eq. 10);
+the sparse-projection distribution of Eq. 11 for general s.  The
+estimator â_rp = (1/k) Σ_j v1_j v2_j is unbiased (Eq. 12) with variance
+Eq. 13.  We never materialize the D×k matrix: r_ij is derived from a
+counter-based hash of (i, j), so the projection is a deterministic
+function of (seed, D, k) exactly like production systems do it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SparseBatch
+from repro.core.universal_hash import _fmix32
+
+
+def _r_ij(indices: jax.Array, j: jax.Array, s: int, seed: int) -> jax.Array:
+    """r for feature ids ``indices`` [..., 1] and projection ids j [k]."""
+    iu = indices.astype(jnp.uint32)[..., None]
+    ju = j.astype(jnp.uint32)
+    # Double-mix combiner: a single xor/multiply combine of (i, j) leaves
+    # measurable sign correlations (≈19σ bias on the Eq. 12 estimator);
+    # pre-mixing i with the seed then re-mixing with j is empirically
+    # unbiased (<0.3σ over 100 seeds — see tests/test_estimators.py).
+    h = _fmix32(_fmix32(iu + jnp.uint32(seed) * jnp.uint32(0x632BE59B))
+                + ju * jnp.uint32(0x9E3779B9))
+    sign = jnp.where((h >> jnp.uint32(31)) & 1 == 1, 1.0, -1.0).astype(
+        jnp.float32
+    )
+    if s == 1:
+        return sign
+    u = (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.float32) / jnp.float32(2.0**31)
+    keep = u < (1.0 / s)
+    return jnp.where(keep, sign * jnp.sqrt(jnp.float32(s)), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "s", "seed", "j_chunk"))
+def rp_project_sparse(
+    indices: jax.Array,
+    mask: jax.Array,
+    values,
+    k: int,
+    s: int = 1,
+    seed: int = 0,
+    j_chunk: int = 128,
+) -> jax.Array:
+    """Projects a padded sparse batch to float32 (n, k)."""
+    vals = values if values is not None else jnp.ones(
+        indices.shape, jnp.float32
+    )
+    vals = jnp.where(mask, vals, 0.0)
+
+    pad = (-k) % j_chunk
+    n_chunks = (k + pad) // j_chunk
+
+    def one_chunk(carry, c):
+        j = c * j_chunk + jnp.arange(j_chunk, dtype=jnp.uint32)
+        r = _r_ij(indices, j, s, seed)            # (n, m, j_chunk)
+        out = jnp.einsum("nm,nmj->nj", vals, r)
+        return carry, out
+
+    _, outs = jax.lax.scan(one_chunk, 0, jnp.arange(n_chunks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(indices.shape[0],
+                                           n_chunks * j_chunk)
+    return out[:, :k]
+
+
+def rp_project_batch(batch: SparseBatch, k: int, s: int = 1,
+                     seed: int = 0) -> jax.Array:
+    return rp_project_sparse(batch.indices, batch.mask, batch.values,
+                             k=k, s=s, seed=seed)
+
+
+def rp_inner_product(v1: jax.Array, v2: jax.Array) -> jax.Array:
+    """â_rp,s = (1/k) Σ_j v1_j v2_j (paper Eq. 12)."""
+    return jnp.mean(v1 * v2, axis=-1)

@@ -1,0 +1,114 @@
+"""Shared data containers for the hashing/learning pipeline.
+
+The paper's data model is *sparse binary* vectors (sets of nonzero
+feature indices).  We represent a batch of such sets as padded index
+arrays plus a validity mask, which is the TPU-friendly layout (fixed
+shapes, no ragged buffers).  An optional ``values`` field carries
+real-valued features for the VW / random-projection baselines, which
+are not restricted to binary data (paper §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseBatch:
+    """A batch of sparse (binary or weighted) feature vectors.
+
+    Attributes:
+      indices: int32 (n, max_nnz) feature ids; padded entries arbitrary.
+      mask:    bool  (n, max_nnz) True for valid entries.
+      values:  optional float32 (n, max_nnz); None means binary data.
+      dim:     the ambient dimensionality D (static python int).
+    """
+
+    indices: jax.Array
+    mask: jax.Array
+    values: Optional[jax.Array] = None
+    dim: int = 0
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.indices, self.mask, self.values), self.dim
+
+    @classmethod
+    def tree_unflatten(cls, dim, children):
+        indices, mask, values = children
+        return cls(indices=indices, mask=mask, values=values, dim=dim)
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def max_nnz(self) -> int:
+        return self.indices.shape[1]
+
+    def nnz(self) -> jax.Array:
+        return jnp.sum(self.mask, axis=1)
+
+    @classmethod
+    def from_lists(
+        cls,
+        rows: Sequence[Sequence[int]],
+        dim: int,
+        values: Optional[Sequence[Sequence[float]]] = None,
+        max_nnz: Optional[int] = None,
+        pad_to_multiple: int = 8,
+    ) -> "SparseBatch":
+        """Builds a padded batch from python lists of nonzero indices."""
+        n = len(rows)
+        m = max((len(r) for r in rows), default=1)
+        m = max(m, 1)
+        if max_nnz is not None:
+            m = max_nnz
+        if pad_to_multiple > 1:
+            m = ((m + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple
+        idx = np.zeros((n, m), dtype=np.int32)
+        msk = np.zeros((n, m), dtype=bool)
+        val = np.zeros((n, m), dtype=np.float32) if values is not None else None
+        for i, r in enumerate(rows):
+            r = list(r)[:m]
+            idx[i, : len(r)] = np.asarray(r, dtype=np.int32)
+            msk[i, : len(r)] = True
+            if values is not None:
+                v = list(values[i])[:m]
+                val[i, : len(v)] = np.asarray(v, dtype=np.float32)
+        return cls(
+            indices=jnp.asarray(idx),
+            mask=jnp.asarray(msk),
+            values=None if val is None else jnp.asarray(val),
+            dim=dim,
+        )
+
+    def to_dense(self) -> jax.Array:
+        """Materializes the batch as a dense (n, dim) float32 matrix.
+
+        Only for tests / small benchmarks — never for the real pipeline.
+        """
+        vals = self.values if self.values is not None else jnp.ones_like(
+            self.indices, dtype=jnp.float32
+        )
+        vals = jnp.where(self.mask, vals, 0.0)
+        out = jnp.zeros((self.n, self.dim), dtype=jnp.float32)
+        rows = jnp.broadcast_to(
+            jnp.arange(self.n)[:, None], self.indices.shape
+        )
+        # Padded entries write 0.0 at (row, idx) — harmless because binary
+        # data never repeats an index and adding zero is a no-op.
+        return out.at[rows, self.indices].add(vals)
+
+
+def resemblance(a: set, b: set) -> float:
+    """Exact resemblance R = |A∩B| / |A∪B| (paper Eq. before (1))."""
+    if not a and not b:
+        return 1.0
+    return len(a & b) / float(len(a | b))

@@ -1,0 +1,204 @@
+"""Hash families used to simulate minwise-hashing permutations (paper §7).
+
+The paper simulates k permutations with the simplest 2-universal family
+
+    h_j(t) = ((c1_j + c2_j * t) mod p) mod D          (paper Eq. 17)
+
+and verifies empirically (paper Fig. 8) that learning quality matches
+true random permutations.  We provide three families:
+
+  * ``ModPrimeHash``      — the paper's family, exact, p = 2^61 - 1
+                            (Mersenne), evaluated in numpy uint64.  This
+                            is the *offline preprocessing* family.
+  * ``MultiplyShiftHash`` — Dietzfelbinger multiply-shift on uint32, the
+                            TPU-native family used by the Pallas kernel
+                            (no 64-bit arithmetic on the VPU).  A murmur
+                            finalizer decorrelates the low bits because
+                            b-bit minwise hashing keeps exactly those.
+  * ``PermutationHash``   — explicit random permutations for small D,
+                            the gold standard the paper's Fig. 8
+                            comparison is anchored to.
+
+All families are deterministic given (seed, k) and serializable — the
+production property the paper highlights: store 2k numbers, not k
+permutation tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MERSENNE61 = np.uint64((1 << 61) - 1)
+
+
+def _np_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence(seed))
+
+
+# ---------------------------------------------------------------------------
+# Mod-prime (paper Eq. 17) — exact, numpy uint64, offline path.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModPrimeHash:
+    """h_j(t) = ((c1_j + c2_j * t) mod p); p = 2^61-1 (Mersenne).
+
+    The paper further reduces ``mod D``; for minwise hashing only the
+    *ranking* matters, so we keep the full residue as the hash value
+    (strictly finer ranking, identical collision statistics as D→∞,
+    which is Theorem 1's regime).
+    """
+
+    c1: np.ndarray  # uint64 (k,)
+    c2: np.ndarray  # uint64 (k,)
+
+    @property
+    def k(self) -> int:
+        return int(self.c1.shape[0])
+
+    @staticmethod
+    def make(k: int, seed: int) -> "ModPrimeHash":
+        rng = _np_rng(seed)
+        p = int(MERSENNE61)
+        c1 = rng.integers(0, p, size=k, dtype=np.uint64)
+        c2 = rng.integers(1, p, size=k, dtype=np.uint64)
+        return ModPrimeHash(c1=c1, c2=c2)
+
+    def __call__(self, t: np.ndarray) -> np.ndarray:
+        """t: int array [...], returns uint64 [..., k] hash values."""
+        t = np.asarray(t, dtype=np.uint64)[..., None]  # [..., 1]
+        # (c2 * t) mod p with p Mersenne: use python-int fallback-free
+        # 128-bit-safe splitting: c2*t ≤ (2^61)^2 = 2^122 — numpy uint64
+        # would overflow, so split t into 30-bit limbs.
+        t_lo = t & np.uint64((1 << 30) - 1)
+        t_hi = t >> np.uint64(30)
+        # c2 * t = c2*t_hi*2^30 + c2*t_lo ; reduce each term mod p.
+        lo = _mulmod_mersenne61(self.c2, t_lo)
+        hi = _mulmod_mersenne61(self.c2, t_hi)
+        hi = _mulmod_mersenne61(hi, np.uint64(1 << 30))
+        s = _addmod_mersenne61(lo, hi)
+        return _addmod_mersenne61(s, self.c1)
+
+
+def _reduce_mersenne61(x: np.ndarray) -> np.ndarray:
+    x = (x & MERSENNE61) + (x >> np.uint64(61))
+    return np.where(x >= MERSENNE61, x - MERSENNE61, x)
+
+
+def _addmod_mersenne61(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    s = a + b  # both < 2^61 so the uint64 sum cannot wrap
+    return np.where(s >= MERSENNE61, s - MERSENNE61, s)
+
+
+def _mulmod_mersenne61(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """(a*b) mod (2^61-1) with a < 2^61, b < 2^31, no uint64 overflow."""
+    a_lo = a & np.uint64((1 << 31) - 1)
+    a_hi = a >> np.uint64(31)
+    # a*b = a_hi*2^31*b + a_lo*b ; a_hi < 2^30, b < 2^31 → a_hi*b < 2^61 OK
+    # a_lo*b < 2^62 OK.
+    lo = _reduce_mersenne61(a_lo * b)
+    hi = _reduce_mersenne61(a_hi * b)
+    # hi * 2^31 mod p: shift then reduce (hi < p < 2^61; hi*2^31 overflows,
+    # so split again: hi = h1*2^30 + h0)
+    h0 = hi & np.uint64((1 << 30) - 1)
+    h1 = hi >> np.uint64(30)
+    part0 = _reduce_mersenne61(h0 << np.uint64(31))  # h0 < 2^30 → no wrap
+    part1 = _reduce_mersenne61(h1)  # h1·2^(30+31) = h1·2^61 ≡ h1 (mod p)
+    return _addmod_mersenne61(lo, _addmod_mersenne61(part0, part1))
+
+
+# ---------------------------------------------------------------------------
+# Multiply-shift (uint32) — the TPU / Pallas family.
+# ---------------------------------------------------------------------------
+def _fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 finalizer: full-avalanche mixing of a uint32 value."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiplyShiftHash:
+    """h_j(t) = fmix32(a_j * t + b_j  mod 2^32) on uint32.
+
+    ``a_j`` odd.  Multiply-shift is 2-universal for the *high* output
+    bits; the murmur finalizer redistributes so the *low* b bits (the
+    ones b-bit minwise hashing stores) are equally well mixed.  Pure
+    uint32 arithmetic → runs unchanged inside the Pallas TPU kernel.
+    """
+
+    a: Tuple[int, ...]  # odd multipliers, python ints for hashability
+    b: Tuple[int, ...]
+
+    @property
+    def k(self) -> int:
+        return len(self.a)
+
+    @staticmethod
+    def make(k: int, seed: int) -> "MultiplyShiftHash":
+        rng = _np_rng(seed)
+        a = (rng.integers(0, 1 << 32, size=k, dtype=np.uint64) | 1).astype(
+            np.uint32
+        )
+        b = rng.integers(0, 1 << 32, size=k, dtype=np.uint64).astype(np.uint32)
+        return MultiplyShiftHash(a=tuple(int(x) for x in a),
+                                 b=tuple(int(x) for x in b))
+
+    def params(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return (jnp.asarray(self.a, dtype=jnp.uint32),
+                jnp.asarray(self.b, dtype=jnp.uint32))
+
+    def __call__(self, t: jnp.ndarray) -> jnp.ndarray:
+        """t: int32/uint32 [...], returns uint32 [..., k]."""
+        a, b = self.params()
+        tu = t.astype(jnp.uint32)[..., None]
+        return _fmix32(a * tu + b)
+
+
+# ---------------------------------------------------------------------------
+# True random permutations — gold standard for Fig. 8 style verification.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PermutationHash:
+    """k explicit permutations of {0..D-1}; only feasible for small D."""
+
+    perms: np.ndarray  # uint32 (k, D)
+
+    @property
+    def k(self) -> int:
+        return int(self.perms.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.perms.shape[1])
+
+    @staticmethod
+    def make(k: int, dim: int, seed: int) -> "PermutationHash":
+        rng = _np_rng(seed)
+        perms = np.stack(
+            [rng.permutation(dim).astype(np.uint32) for _ in range(k)]
+        )
+        return PermutationHash(perms=perms)
+
+    def __call__(self, t: np.ndarray) -> np.ndarray:
+        t = np.asarray(t)
+        return np.moveaxis(self.perms[:, t], 0, -1)  # [..., k]
+
+
+def make_hash_family(kind: str, k: int, seed: int, dim: int = 0):
+    if kind == "mod_prime":
+        return ModPrimeHash.make(k, seed)
+    if kind == "multiply_shift":
+        return MultiplyShiftHash.make(k, seed)
+    if kind == "permutation":
+        if dim <= 0:
+            raise ValueError("permutation family needs dim > 0")
+        return PermutationHash.make(k, dim, seed)
+    raise ValueError(f"unknown hash family {kind!r}")

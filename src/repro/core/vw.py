@@ -1,0 +1,73 @@
+"""The VW hashing algorithm (paper §5.2) — signed feature hashing.
+
+g_j = Σ_i u_i · r_i · 1{h(i)=j}   (paper Eq. 14), with r_i from the
+two-point ±1 distribution (s=1) or the general sparse distribution
+(Eq. 11) for the s≥1 study of [22].  Unbiased for inner products
+(Eq. 15) with variance Eq. 16 — the formulas are in
+``repro.core.estimators`` and property-tested against this code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SparseBatch
+from repro.core.universal_hash import _fmix32
+
+
+def _bucket_and_sign(indices: jax.Array, m: int, seed: int):
+    """Per-feature bucket in [0, m) and ±1 sign, from two hash streams."""
+    iu = indices.astype(jnp.uint32)
+    hb = _fmix32(iu * jnp.uint32(0x9E3779B1) + jnp.uint32(seed * 2 + 1))
+    hs = _fmix32(iu ^ jnp.uint32(0x7FEB352D + seed))
+    bucket = (hb % jnp.uint32(m)).astype(jnp.int32)
+    sign = jnp.where((hs >> jnp.uint32(31)) & 1 == 1, 1.0, -1.0).astype(
+        jnp.float32
+    )
+    return bucket, sign
+
+
+def _r_values(sign: jax.Array, indices: jax.Array, s: int, seed: int):
+    """General r_i of Eq. (10)/(11): ±√s w.p. 1/(2s) each, else 0."""
+    if s == 1:
+        return sign
+    iu = indices.astype(jnp.uint32)
+    hz = _fmix32(iu * jnp.uint32(0x2545F491) + jnp.uint32(seed + 7))
+    # keep with probability 1/s
+    u = hz.astype(jnp.float32) / jnp.float32(2.0 ** 32)
+    keep = u < (1.0 / s)
+    return jnp.where(keep, sign * jnp.sqrt(jnp.float32(s)), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "s", "seed"))
+def vw_hash_sparse(
+    indices: jax.Array,
+    mask: jax.Array,
+    values: Optional[jax.Array],
+    m: int,
+    s: int = 1,
+    seed: int = 0,
+) -> jax.Array:
+    """VW-hashes a padded sparse batch into float32 (n, m) sketches."""
+    n, _ = indices.shape
+    bucket, sign = _bucket_and_sign(indices, m, seed)
+    r = _r_values(sign, indices, s, seed)
+    vals = values if values is not None else jnp.ones_like(r)
+    contrib = jnp.where(mask, vals * r, 0.0)
+    out = jnp.zeros((n, m), dtype=jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], indices.shape)
+    return out.at[rows, bucket].add(contrib)
+
+
+def vw_hash_batch(batch: SparseBatch, m: int, s: int = 1,
+                  seed: int = 0) -> jax.Array:
+    return vw_hash_sparse(batch.indices, batch.mask, batch.values, m=m,
+                          s=s, seed=seed)
+
+
+def vw_inner_product(g1: jax.Array, g2: jax.Array) -> jax.Array:
+    """â_vw = Σ_j g1_j · g2_j (paper Eq. 15) — NOT averaged over k."""
+    return jnp.sum(g1 * g2, axis=-1)

@@ -1,0 +1,20 @@
+"""Data pipeline: synthetic rcv1 expansion, LibSVM IO, hashing, loaders."""
+from repro.data.synth_rcv1 import SynthRcv1Config, generate, generate_arrays
+from repro.data.libsvm_io import (
+    write_libsvm, read_libsvm, write_shards, read_shards, shard_paths,
+)
+from repro.data.packing import pad_rows, batch_iterator
+from repro.data.hashed_dataset import (
+    preprocess_rows, save_hashed, load_hashed, preprocess_and_save,
+)
+from repro.data.loader import HashedCodesLoader, SparseRowsLoader
+from repro.data.lm_synth import token_batch, lm_example_stream
+
+__all__ = [
+    "SynthRcv1Config", "generate", "generate_arrays",
+    "write_libsvm", "read_libsvm", "write_shards", "read_shards",
+    "shard_paths", "pad_rows", "batch_iterator",
+    "preprocess_rows", "save_hashed", "load_hashed", "preprocess_and_save",
+    "HashedCodesLoader", "SparseRowsLoader",
+    "token_batch", "lm_example_stream",
+]

@@ -1,0 +1,26 @@
+"""Distributed runtime: shardings, compression, SP, PP, collectives."""
+from repro.distributed.shardings import (
+    data_axes, batch_spec, replicated, shard, dp_size, mp_size, constrain,
+)
+from repro.distributed.grad_compression import (
+    compressed_allreduce_mean, tree_compressed_allreduce_mean,
+    init_error_state,
+)
+from repro.distributed.sequence_parallel import (
+    merge_partial_attention, seq_parallel_ssm_scan,
+)
+from repro.distributed.pipeline import pipelined_apply
+from repro.distributed.collectives import (
+    collective_stats_from_hlo,
+    collective_bytes_from_hlo, psum_mean, COLLECTIVE_OPS,
+)
+
+__all__ = [
+    "data_axes", "batch_spec", "replicated", "shard", "dp_size", "mp_size",
+    "constrain",
+    "compressed_allreduce_mean", "tree_compressed_allreduce_mean",
+    "init_error_state",
+    "merge_partial_attention", "seq_parallel_ssm_scan",
+    "pipelined_apply",
+    "collective_bytes_from_hlo", "collective_stats_from_hlo", "psum_mean", "COLLECTIVE_OPS",
+]

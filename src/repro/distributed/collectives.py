@@ -1,0 +1,103 @@
+"""Thin collective wrappers + HLO collective-bytes accounting helpers."""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' → byte count (0 for unparsable/token types)."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_OP_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(rhs: str) -> int:
+    """Participant count per replica group (0 if unannotated)."""
+    m = _GROUPS_EXPLICIT_RE.search(rhs)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA_RE.search(rhs)
+    if m:
+        return int(m.group(2))  # iota [num_groups, group_size]
+    return 0
+
+
+def collective_stats_from_hlo(hlo_text: str):
+    """Per-instruction collective stats: [{op, bytes, group_size}].
+
+    ``bytes`` is the RESULT shape size landing on each participant;
+    the roofline applies op-specific ring multipliers using group_size.
+    """
+    stats = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith(("//", "#")) or " = " not in s:
+            continue
+        _, rhs = s.split(" = ", 1)
+        opm = _OP_RE.search(rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        result_part = rhs[: opm.start()]
+        nbytes = sum(_shape_bytes(f"{d}[{dims}]") for d, dims
+                     in _SHAPE_RE.findall(result_part))
+        stats.append({"op": op, "bytes": nbytes,
+                      "group_size": _group_size(rhs)})
+    return stats
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sums result-shape bytes of every collective op in an HLO dump.
+
+    Handles layouts (``f32[8,16]{1,0}``), tuple results, and async
+    ``-start``/``-done`` pairs (counts the start, skips the done).  The
+    accounted size is the RESULT shape — the bytes that land on each
+    participant, the quantity the roofline's collective term needs.
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    out["count"] = 0
+    for st in collective_stats_from_hlo(hlo_text):
+        out[st["op"]] += st["bytes"]
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+def psum_mean(x, axis_name: str):
+    return jax.lax.psum(x, axis_name) / jax.lax.psum(1, axis_name)
+
+
+def replica_groups_size(axis_name: str) -> jax.Array:
+    return jax.lax.psum(1, axis_name)

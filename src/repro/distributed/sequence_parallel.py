@@ -1,0 +1,62 @@
+"""Sequence parallelism: long-context sharding over the data axis.
+
+Two primitives (used by the long_500k cells, where global batch = 1 and
+the data axis would otherwise idle — see EXPERIMENTS.md §Perf):
+
+  * ``merge_partial_attention`` — distributed online-softmax: each shard
+    attends over its local KV slice; partial (max, denom, numerator)
+    stats merge with two psums.  Exact, not approximate.
+  * ``seq_parallel_ssm_scan``   — inter-chunk SSM recurrence composed
+    across shards.  The SSD recurrence  h' = A·h + B  is associative, so
+    per-shard cumulative (A, B) operators are all-gathered (they are
+    tiny: batch × heads × state) and each shard applies its exclusive
+    prefix locally — one small collective instead of a serial chain.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_partial_attention(
+    local_max: jax.Array,     # (..., q) per-shard running max of scores
+    local_denom: jax.Array,   # (..., q) Σ exp(score - local_max)
+    local_num: jax.Array,     # (..., q, d) Σ exp(score - local_max)·V
+    axis_name: str,
+) -> jax.Array:
+    """Exact softmax-attention output from per-shard partial stats."""
+    g_max = jax.lax.pmax(local_max, axis_name)
+    corr = jnp.exp(local_max - g_max)
+    denom = jax.lax.psum(local_denom * corr, axis_name)
+    num = jax.lax.psum(local_num * corr[..., None], axis_name)
+    return num / denom[..., None]
+
+
+def seq_parallel_ssm_scan(
+    a_cum: jax.Array,   # (..., state) product of decay over local chunk
+    b_cum: jax.Array,   # (..., state) local chunk's accumulated input
+    h0: jax.Array,      # (..., state) global initial state
+    axis_name: str,
+    axis_index: jax.Array,
+) -> jax.Array:
+    """Returns each shard's *incoming* state h_in.
+
+    Local chunk maps h_in → a_cum·h_in + b_cum.  Gathers the (a, b)
+    operators from all shards and composes the exclusive prefix locally.
+    """
+    a_all = jax.lax.all_gather(a_cum, axis_name)   # (S, ..., state)
+    b_all = jax.lax.all_gather(b_cum, axis_name)
+    # h0 is replicated; make it device-varying so the scan carry type
+    # matches the varying (a, b) operands under shard_map.
+    h0 = h0 + jnp.zeros_like(h0) * jax.lax.axis_index(axis_name).astype(
+        h0.dtype)
+
+    def body(carry, ab):
+        a, b = ab
+        return a * carry + b, carry  # emit the state *before* this shard
+
+    _, h_before = jax.lax.scan(body, h0, (a_all, b_all))
+    # h_before[i] is the incoming state of shard i
+    return jnp.take(h_before, axis_index, axis=0)

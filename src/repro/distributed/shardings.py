@@ -1,0 +1,51 @@
+"""Mesh / sharding helpers shared by the launchers and trainers.
+
+Axis convention (the assignment's production mesh):
+  single-pod:  (data=16, model=16)            — 256 chips
+  multi-pod:   (pod=2, data=16, model=16)     — 512 chips
+
+"Batch-like" tensors shard over ``(pod, data)``; "model-like" dims over
+``model``.  FSDP-style parameter sharding additionally splits the
+largest parameter dim over the data axes (required for ≥67B configs).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All batch-parallel axes present in the mesh ('pod' first)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """P((pod, data), None, ...) for a batch-leading tensor."""
+    return P(data_axes(mesh), *([None] * extra_dims))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def shard(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*axes))
+
+
+def dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in data_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def mp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def constrain(x, mesh: Mesh, *axes):
+    """with_sharding_constraint shorthand used inside model code."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*axes)))

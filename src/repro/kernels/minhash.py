@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: b-bit minwise hashing preprocessing (paper §6, Table 2).
+
+The paper showed GPU hashing cuts preprocessing to <1/7 of data-loading
+time.  TPU adaptation: the hot loop is k independent multiply-shift
+hashes + a min-reduction over each document's nonzeros.  We map
+
+  * documents   → sublane-tiled grid dim 0 (BN rows),
+  * hash index  → 128-lane grid dim 1 (BK lanes; k lives in lanes so the
+                  VPU evaluates 128 hash functions per cycle),
+  * nonzeros    → innermost grid dim 2, streamed HBM→VMEM in MC-column
+                  blocks with a running min accumulated in the output
+                  block (revisited across grid dim 2).
+
+VMEM working set per step: BN·MC (indices) + BN·MC·BK (hash values)
+≈ 8·256·128·4 B ≈ 1 MiB — well inside the ~16 MiB/core budget, with
+MXU-free pure-VPU arithmetic (uint32 mul/add/xor/shift/min).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+UINT32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def _fmix32(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def _minhash_kernel(idx_ref, nnz_ref, a_ref, b_ref, out_ref, *, mc: int):
+    """One (doc-block, hash-block, nnz-block) grid step."""
+    c = pl.program_id(2)
+    sentinel = jnp.uint32(0xFFFFFFFF)  # local literal: no captured consts
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, sentinel)
+
+    idx = idx_ref[...].astype(jnp.uint32)            # (BN, MC)
+    nnz = nnz_ref[...]                               # (BN,)
+    a = a_ref[...]                                   # (BK,)
+    b = b_ref[...]                                   # (BK,)
+
+    bn = idx.shape[0]
+    col0 = c * mc
+    col = col0 + jax.lax.broadcasted_iota(jnp.int32, (bn, mc), 1)
+    valid = col < nnz[:, None]                       # (BN, MC)
+
+    h = _fmix32(a[None, None, :] * idx[:, :, None] + b[None, None, :])
+    h = jnp.where(valid[:, :, None], h, sentinel)    # (BN, MC, BK)
+    out_ref[...] = jnp.minimum(out_ref[...], jnp.min(h, axis=1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_k", "block_m", "interpret"),
+)
+def minhash_pallas(
+    indices: jax.Array,
+    nnz: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_n: int = 8,
+    block_k: int = 128,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """uint32 (n, k) min-hashes of each row's first nnz[i] indices.
+
+    Args:
+      indices: int32 (n, m), contiguously padded rows.
+      nnz:     int32 (n,) valid prefix length per row.
+      a, b:    uint32 (k,) multiply-shift params (a odd).
+    """
+    n, m = indices.shape
+    k = a.shape[0]
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    mc = min(block_m, m)
+
+    def _pad_to(x, mult, axis, value):
+        pad = (-x.shape[axis]) % mult
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths, constant_values=value)
+
+    idx_p = _pad_to(_pad_to(indices, bn, 0, 0), mc, 1, 0)
+    nnz_p = _pad_to(nnz, bn, 0, 0)
+    a_p = _pad_to(a, bk, 0, jnp.uint32(1))
+    b_p = _pad_to(b, bk, 0, jnp.uint32(0))
+    np_, mp_ = idx_p.shape
+    kp_ = a_p.shape[0]
+
+    grid = (np_ // bn, kp_ // bk, mp_ // mc)
+    out = pl.pallas_call(
+        functools.partial(_minhash_kernel, mc=mc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, mc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((bn,), lambda i, j, c: (i,)),
+            pl.BlockSpec((bk,), lambda i, j, c: (j,)),
+            pl.BlockSpec((bk,), lambda i, j, c: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, kp_), jnp.uint32),
+        interpret=interpret,
+    )(idx_p, nnz_p, a_p, b_p)
+    return out[:n, :k]

@@ -1,0 +1,98 @@
+"""Public jit'd wrappers around the Pallas kernels with jnp fallbacks.
+
+Dispatch policy (TPU-adaptive, see DESIGN.md §2):
+  * ``minhash``      — kernel always (pure VPU streaming).
+  * ``bbit_linear``  — kernel for 2^b ≤ BBIT_KERNEL_MAX_V (one-hot MXU
+                       contraction streams the table at line rate);
+                       XLA gather for larger b where the table stream
+                       would dominate.  custom_vjp wires the backward
+                       kernel in.
+  * ``vw_sketch``    — kernel for power-of-two buckets, jnp otherwise.
+
+On non-TPU backends (this CPU container) the wrappers run the kernels
+in interpret mode when ``interpret=None`` (auto) — the same code path a
+TPU deployment exercises, minus Mosaic lowering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.minhash import minhash_pallas
+from repro.kernels.bbit_linear import (
+    bbit_linear_fwd_pallas,
+    bbit_linear_bwd_dw_pallas,
+)
+from repro.kernels.vw_sketch import vw_sketch_pallas
+
+BBIT_KERNEL_MAX_V = 4096  # 2^12; beyond this the gather path wins
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+def minhash(indices, nnz, a, b, *, interpret: Optional[bool] = None):
+    """uint32 (n, k) min-hashes (kernel-backed)."""
+    return minhash_pallas(indices, nnz, a, b,
+                          interpret=_auto_interpret(interpret))
+
+
+def minhash_bbit(indices, nnz, a, b, bits: int,
+                 *, interpret: Optional[bool] = None):
+    """Fused min-hash + b-bit extraction → uint16 (n, k) codes."""
+    z = minhash(indices, nnz, a, b, interpret=interpret)
+    return (z & jnp.uint32((1 << bits) - 1)).astype(jnp.uint16)
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def bbit_linear(codes: jax.Array, weights: jax.Array,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """logits (n, C) = Σ_j W[j, codes[n,j], :] — differentiable in W."""
+    return _bbit_linear_fwd_impl(codes, weights, interpret)
+
+
+def _bbit_linear_fwd_impl(codes, weights, interpret):
+    v = weights.shape[1]
+    if v <= BBIT_KERNEL_MAX_V:
+        return bbit_linear_fwd_pallas(
+            codes.astype(jnp.int32), weights,
+            interpret=_auto_interpret(interpret))
+    return ref.bbit_linear_fwd(codes, weights)
+
+
+def _bbit_linear_vjp_fwd(codes, weights, interpret):
+    return _bbit_linear_fwd_impl(codes, weights, interpret), (codes, weights)
+
+
+def _bbit_linear_vjp_bwd(interpret, res, dout):
+    codes, weights = res
+    v = weights.shape[1]
+    if v <= BBIT_KERNEL_MAX_V:
+        dw = bbit_linear_bwd_dw_pallas(
+            codes.astype(jnp.int32), dout.astype(jnp.float32), v,
+            interpret=_auto_interpret(interpret))
+    else:
+        dw = ref.bbit_linear_bwd_dw(codes, dout, v)
+    return (None, dw.astype(weights.dtype))
+
+
+bbit_linear.defvjp(_bbit_linear_vjp_fwd, _bbit_linear_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+def vw_sketch(indices, values, nnz, m_buckets: int, seed: int = 0,
+              *, interpret: Optional[bool] = None):
+    """f32 (n, m) VW sketch (kernel for pow-2 m, jnp fallback otherwise)."""
+    if m_buckets & (m_buckets - 1) == 0:
+        return vw_sketch_pallas(indices, values, nnz, m_buckets, seed,
+                                interpret=_auto_interpret(interpret))
+    return ref.vw_sketch(indices, values, nnz, m_buckets, seed)

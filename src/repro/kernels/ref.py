@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (tests/test_kernels.py sweeps shapes/dtypes and asserts
+allclose / exact equality in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.universal_hash import _fmix32
+
+UINT32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def minhash(indices: jax.Array, nnz: jax.Array, a: jax.Array,
+            b: jax.Array) -> jax.Array:
+    """Min of fmix32(a_j·t + b_j) over each row's first nnz indices.
+
+    indices: int32 (n, m) contiguously padded; nnz: int32 (n,);
+    a, b: uint32 (k,).  Returns uint32 (n, k).
+    """
+    m = indices.shape[1]
+    mask = jnp.arange(m, dtype=jnp.int32)[None, :] < nnz[:, None]
+    tu = indices.astype(jnp.uint32)
+    h = _fmix32(a[None, None, :] * tu[:, :, None] + b[None, None, :])
+    h = jnp.where(mask[:, :, None], h, UINT32_MAX)
+    return jnp.min(h, axis=1)
+
+
+def bbit_linear_fwd(codes: jax.Array, weights: jax.Array) -> jax.Array:
+    """logits[n, c] = Σ_j W[j, codes[n, j], c].
+
+    codes: int32 (n, k) in [0, 2^b);  weights: (k, 2^b, C) float.
+    Returns (n, C) in weights.dtype's accumulation type (float32).
+    """
+    gathered = jnp.take_along_axis(
+        weights[None],
+        codes.astype(jnp.int32)[:, :, None, None],
+        axis=2,
+    )[:, :, 0, :]
+    return gathered.astype(jnp.float32).sum(axis=1)
+
+
+def bbit_linear_bwd_dw(codes: jax.Array, dout: jax.Array,
+                       vsize: int) -> jax.Array:
+    """dW[j, v, c] = Σ_n 1{codes[n,j]=v}·dout[n,c].  Returns (k, V, C) f32."""
+    n, k = codes.shape
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), vsize,
+                            dtype=jnp.float32)            # (n, k, V)
+    return jnp.einsum("nkv,nc->kvc", onehot, dout.astype(jnp.float32))
+
+
+def vw_sketch(indices: jax.Array, values: jax.Array, nnz: jax.Array,
+              m_buckets: int, seed: int) -> jax.Array:
+    """Signed feature hashing into m buckets (paper Eq. 14), f32 (n, m).
+
+    Bucket/sign streams must match the kernel bit-for-bit:
+      hb = fmix32(i·0x9E3779B1 + (2·seed+1));  bucket = hb & (m-1)
+      hs = fmix32(i ^ (0x7FEB352D + seed));    sign = ±1 from bit 31
+    """
+    n, mx = indices.shape
+    mask = jnp.arange(mx, dtype=jnp.int32)[None, :] < nnz[:, None]
+    iu = indices.astype(jnp.uint32)
+    hb = _fmix32(iu * jnp.uint32(0x9E3779B1) + jnp.uint32(2 * seed + 1))
+    hs = _fmix32(iu ^ jnp.uint32(0x7FEB352D + seed))
+    bucket = (hb & jnp.uint32(m_buckets - 1)).astype(jnp.int32)
+    sign = jnp.where((hs >> jnp.uint32(31)) & 1 == 1, 1.0, -1.0)
+    contrib = jnp.where(mask, values * sign, 0.0)
+    out = jnp.zeros((n, m_buckets), dtype=jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], indices.shape)
+    return out.at[rows, bucket].add(contrib)

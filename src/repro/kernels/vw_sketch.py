@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: VW signed feature hashing (paper §5.2, Eq. 14).
+
+GPU implementations scatter-add each nonzero into its bucket; TPUs have
+no fast random scatter, so the TPU-native form is a masked compare
+against the bucket-block's lane iota (a one-hot in registers) reduced on
+the VPU — every nonzero contributes ``sign·value`` to the lane whose
+bucket id matches.  Buckets are tiled in the lane dimension, nonzeros
+streamed in the innermost grid dimension.
+
+Bucket/sign hash streams are bit-identical to ``repro.core.vw`` (and
+``kernels.ref.vw_sketch``); m must be a power of two (the paper sweeps
+m = 2^5..2^14), else ops.py falls back to the jnp path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fmix32(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def _vw_kernel(idx_ref, val_ref, nnz_ref, out_ref, *, mc: int,
+               m_buckets: int, bm: int, seed: int):
+    """Grid (n/BN, m/BM, nnz/MC); accumulate over nnz blocks (dim 2)."""
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...].astype(jnp.uint32)            # (BN, MC)
+    val = val_ref[...]                               # (BN, MC) f32
+    nnz = nnz_ref[...]                               # (BN,)
+    bn = idx.shape[0]
+
+    col = c * mc + jax.lax.broadcasted_iota(jnp.int32, (bn, mc), 1)
+    valid = col < nnz[:, None]
+
+    hb = _fmix32(idx * jnp.uint32(0x9E3779B1) + jnp.uint32(2 * seed + 1))
+    hs = _fmix32(idx ^ jnp.uint32(0x7FEB352D + seed))
+    bucket = (hb & jnp.uint32(m_buckets - 1)).astype(jnp.int32)
+    sign = jnp.where((hs >> jnp.uint32(31)) & 1 == 1, 1.0, -1.0)
+    contrib = jnp.where(valid, val * sign, 0.0)      # (BN, MC)
+
+    # Lane match against this bucket block: (BN, MC, BM) compare+reduce.
+    lane0 = pl.program_id(1) * bm
+    lanes = lane0 + jax.lax.broadcasted_iota(jnp.int32, (bn, mc, bm), 2)
+    hit = (bucket[:, :, None] == lanes)
+    out_ref[...] += jnp.sum(
+        jnp.where(hit, contrib[:, :, None], 0.0), axis=1
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_buckets", "seed", "block_n", "block_m", "block_mc",
+                     "interpret"),
+)
+def vw_sketch_pallas(
+    indices: jax.Array,
+    values: jax.Array,
+    nnz: jax.Array,
+    m_buckets: int,
+    seed: int = 0,
+    *,
+    block_n: int = 8,
+    block_m: int = 512,
+    block_mc: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """f32 (n, m_buckets) VW sketches of a padded sparse batch."""
+    if m_buckets & (m_buckets - 1):
+        raise ValueError("vw_sketch_pallas requires power-of-two m_buckets")
+    n, m = indices.shape
+    bn = min(block_n, n)
+    bm = min(block_m, m_buckets)
+    mc = min(block_mc, m)
+
+    def _pad(x, mult, axis, value=0):
+        pad = (-x.shape[axis]) % mult
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths, constant_values=value)
+
+    idx_p = _pad(_pad(indices, bn, 0), mc, 1)
+    val_p = _pad(_pad(values, bn, 0), mc, 1)
+    nnz_p = _pad(nnz, bn, 0)
+    np_, mp_ = idx_p.shape
+
+    out = pl.pallas_call(
+        functools.partial(_vw_kernel, mc=mc, m_buckets=m_buckets, bm=bm,
+                          seed=seed),
+        grid=(np_ // bn, m_buckets // bm, mp_ // mc),
+        in_specs=[
+            pl.BlockSpec((bn, mc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((bn, mc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((bn,), lambda i, j, c: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, m_buckets), jnp.float32),
+        interpret=interpret,
+    )(idx_p, val_p, nnz_p)
+    return out[:n]

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+  1. build the production mesh (16×16 or 2×16×16 placeholder devices),
+  2. build the cell's jitted step (train/prefill/decode) with the real
+     shardings, lower it from ShapeDtypeStructs (no allocation),
+  3. ``compile()`` — sharding mismatches / unsupported collectives fail
+     here and are bugs in the system,
+  4. record ``memory_analysis()`` (per-device fit proof),
+     ``cost_analysis()`` and the HLO collective schedule,
+  5. compile the roofline probes (scan_layers=False, L∈{1,2}) and
+     assemble per-device roofline terms (launch/roofline.py).
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json, consumed by
+launch/report.py to regenerate EXPERIMENTS.md tables.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --paper-linear
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+
+def _cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+          probes: bool = True, overrides: dict = None) -> dict:
+    import jax
+    from repro.configs.base import get_config
+    from repro.launch import probes as probes_lib
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import (
+        cost_of_compiled, model_flops, roofline_terms,
+    )
+    from repro.launch.shapes import SHAPES, cell_is_skipped, plan_cell
+    from repro.models.api import get_model_api
+
+    cfg = get_config(arch)
+    if SHAPES[shape]["seq"] >= 32768:
+        # long sequences: scan-based attention bounds live f32 score
+        # buffers to one (q,kv) block (python-loop attention let XLA
+        # keep every block's buffers alive — measured +26 GiB on the
+        # deepseek-67b prefill_32k cell)
+        cfg = dataclasses.replace(cfg, attn_impl="scan")
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    rec = dict(arch=arch, shape=shape, mesh=mesh_name,
+               overrides=overrides or {})
+    if cell_is_skipped(cfg, shape):
+        rec.update(status="skipped",
+                   reason="full-attention arch; long_500k requires "
+                          "sub-quadratic attention (DESIGN.md §5)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    plan = plan_cell(cfg, shape, dp)
+    api = get_model_api(cfg)
+    t0 = time.time()
+
+    if plan.kind == "train":
+        jitted, state_shapes, _, bshapes, _ = steps_lib.build_lm_train_step(
+            api, mesh, plan)
+        args = (state_shapes, bshapes)
+    elif plan.kind == "prefill":
+        jitted, params_shapes, _, bshapes, _ = steps_lib.build_prefill_step(
+            api, mesh, plan)
+        args = (params_shapes, bshapes)
+    else:
+        jitted, shapes_tuple, _ = steps_lib.build_decode_step(
+            api, mesh, plan)
+        args = shapes_tuple
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    cost_once = cost_of_compiled(compiled)
+    hbm_budget = 16 * 1024 ** 3
+    peak = int(getattr(ma, "peak_memory_in_bytes", 0))
+    args_b = int(getattr(ma, "argument_size_in_bytes", 0))
+    temp_b = int(getattr(ma, "temp_size_in_bytes", 0))
+    out_b = int(getattr(ma, "output_size_in_bytes", 0))
+    resident = args_b + temp_b   # donated outputs alias arguments
+    rec.update(
+        status="ok",
+        plan=dataclasses.asdict(plan),
+        n_devices=n_dev,
+        compile_seconds=round(t_compile, 1),
+        memory=dict(peak_memory_bytes=peak,
+                    argument_bytes=args_b,
+                    temp_bytes=temp_b,
+                    output_bytes=out_b,
+                    resident_bytes=resident,
+                    hbm_budget_bytes=hbm_budget,
+                    fits=resident <= hbm_budget),
+        cost_full_hlo_once=cost_once.to_dict(),
+    )
+
+    if probes:
+        try:
+            probe_total, detail = probes_lib.assemble_cell_cost(
+                cfg, shape, mesh, plan)
+            terms = roofline_terms(probe_total)
+            mf = model_flops(cfg, plan.global_batch, plan.seq, plan.kind)
+            mf_dev = mf / n_dev
+            terms["model_flops_per_dev"] = mf_dev
+            terms["hlo_flops_per_dev"] = probe_total.flops
+            terms["useful_flops_ratio"] = (
+                mf_dev / probe_total.flops if probe_total.flops else 0.0)
+            rec["probe_cost"] = probe_total.to_dict()
+            rec["probe_detail"] = detail
+            rec["roofline"] = terms
+        except Exception as e:  # noqa: BLE001 — record probe failures
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+            rec["probe_traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def _paper_linear(multi_pod: bool) -> dict:
+    import jax
+    from repro.configs.rcv1_bbit import CONFIG as paper
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import cost_of_compiled, roofline_terms
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    jitted, state_shapes, _, (codes_sds, labels_sds) = \
+        steps_lib.build_linear_train_step(paper, mesh)
+    with mesh:
+        compiled = jitted.lower(state_shapes, codes_sds,
+                                labels_sds).compile()
+    ma = compiled.memory_analysis()
+    cost = cost_of_compiled(compiled)
+    terms = roofline_terms(cost)
+    return dict(
+        arch="rcv1-bbit-linear", shape="train_batch65536",
+        mesh="multi_pod" if multi_pod else "single_pod",
+        status="ok", n_devices=mesh.size,
+        compile_seconds=round(time.time() - t0, 1),
+        memory=dict(
+            peak_memory_bytes=int(getattr(ma, "peak_memory_in_bytes", 0)),
+            argument_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+            temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+            fits=True),
+        cost_full_hlo_once=cost.to_dict(),
+        roofline=terms,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--paper-linear", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ArchConfig overrides (perf exps)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = (["single_pod", "multi_pod"] if args.mesh == "both"
+              else [args.mesh])
+    overrides = json.loads(args.override) if args.override else None
+
+    jobs = []
+    if args.paper_linear:
+        for m in meshes:
+            jobs.append(("paper", None, m))
+    elif args.all:
+        from repro.configs.archs import ALL_ARCHS
+        from repro.launch.shapes import ALL_SHAPES
+        for arch in ALL_ARCHS:
+            for shape in ALL_SHAPES:
+                for m in meshes:
+                    jobs.append((arch, shape, m))
+    else:
+        for m in meshes:
+            jobs.append((args.arch, args.shape, m))
+
+    for arch, shape, m in jobs:
+        multi = m == "multi_pod"
+        if arch == "paper":
+            rec = _paper_linear(multi)
+            name = f"rcv1-bbit-linear__train__{m}{args.tag}.json"
+        else:
+            try:
+                # roofline table is single-pod only (assignment);
+                # multi-pod runs prove compile+memory without probes
+                rec = _cell(arch, shape, multi, args.out,
+                            probes=not args.no_probes and not multi,
+                            overrides=overrides)
+            except Exception as e:  # noqa: BLE001
+                rec = dict(arch=arch, shape=shape, mesh=m,
+                           status="error",
+                           error=f"{type(e).__name__}: {e}",
+                           traceback=traceback.format_exc()[-3000:])
+            name = f"{arch}__{shape}__{m}{args.tag}.json"
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec.get("status")
+        mem = rec.get("memory", {})
+        rl = rec.get("roofline", {})
+        print(f"[{status}] {arch} × {shape} × {m}"
+              f" resident={mem.get('resident_bytes', 0)/2**30:.2f}GiB"
+              f" fits={mem.get('fits')}"
+              f" dominant={rl.get('dominant')}"
+              f" frac={rl.get('roofline_fraction', 0):.3f}"
+              + (f" err={rec.get('error', rec.get('probe_error',''))[:120]}"
+                 if status != "ok" or "probe_error" in rec else ""),
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh builders (assignment-specified topology).
+
+Functions, not module-level constants: importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import; tests and benches see the real single device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 4, model: int = 2) -> Mesh:
+    """Small mesh for unit tests (requires ≥ data·model fake devices)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,170 @@
+"""Cost probes: small unrolled compiles whose differences yield exact
+per-layer/per-group costs on the production mesh (see roofline.py).
+
+Probe sets per family (train kind; prefill/decode analogous, fwd-only):
+
+  dense/moe/vlm : L∈{1,2}                 → layer, embed+head
+  hybrid        : L∈{every, 2·every}      → group (attn + every·mamba)
+                  L∈{1, 2} (g=0, tail)    → mamba layer (for the tail)
+  ssm (xlstm)   : L∈{every, 2·every}      → group ((every−1)·mL + 1·sL)
+  audio         : (enc,dec)∈{(1,1),(2,1),(1,2)} → enc layer, dec layer
+
+Each probe compiles with ``scan_layers=False`` so XLA's cost analysis
+sees every op; multipliers then reconstruct the full stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch import steps as steps_lib
+from repro.launch.roofline import (
+    Cost, cost_of_compiled, optimizer_cost, slstm_extra_flops,
+)
+from repro.launch.shapes import CellPlan, plan_cell
+from repro.models.api import get_model_api
+
+
+def _probe_cfg(cfg: ArchConfig, seq: int = 0, **overrides) -> ArchConfig:
+    # probes unroll layers AND attention blocks: XLA cost analysis sees
+    # every op exactly once per real execution (triangular causal work).
+    # ≥32k sequences use 4096² blocks: 36 unrolled blocks instead of 136
+    # (compile minutes, not tens of minutes); the coarser causal
+    # granularity overcounts attention-score FLOPs by ≤12.5%.
+    if seq >= 32768:
+        overrides.setdefault("attn_q_chunk", 4096)
+        overrides.setdefault("attn_kv_chunk", 4096)
+    return dataclasses.replace(cfg, scan_layers=False, attn_impl="loop",
+                               **overrides)
+
+
+def _micro_plan(plan: CellPlan) -> CellPlan:
+    """The per-microbatch shape at which train probes run."""
+    return dataclasses.replace(
+        plan, global_batch=plan.global_batch // plan.n_micro, n_micro=1)
+
+
+def _compile_probe(cfg: ArchConfig, mesh, plan: CellPlan) -> Cost:
+    api = get_model_api(cfg)
+    steps_lib.set_mesh_for_alignment(mesh)
+    if plan.kind == "train":
+        # loss+grad only (no optimizer — that's analytic)
+        bshapes = api.batch_shapes(plan.global_batch, plan.seq)
+        bps = steps_lib.batch_pspecs(mesh, bshapes)
+        params_shapes = jax.eval_shape(
+            lambda: api.init_params(jax.random.key(0)))
+        pp = steps_lib.align_pspecs(params_shapes, api.param_pspecs(mesh))
+
+        def fn(params, batch):
+            return jax.value_and_grad(
+                lambda p: api.loss_fn(p, batch, mesh))(params)
+
+        jitted = jax.jit(
+            fn,
+            in_shardings=(steps_lib.to_shardings(mesh, pp),
+                          steps_lib.to_shardings(mesh, bps)))
+        with mesh:
+            compiled = jitted.lower(params_shapes, bshapes).compile()
+    elif plan.kind == "prefill":
+        jitted, params_shapes, _, bshapes, _ = \
+            steps_lib.build_prefill_step(api, mesh, plan)
+        with mesh:
+            compiled = jitted.lower(params_shapes, bshapes).compile()
+    else:
+        jitted, shapes_tuple, _ = steps_lib.build_decode_step(
+            api, mesh, plan)
+        with mesh:
+            compiled = jitted.lower(*shapes_tuple).compile()
+    return cost_of_compiled(compiled)
+
+
+def _count_params(cfg: ArchConfig) -> int:
+    api = get_model_api(cfg)
+    shapes = jax.eval_shape(lambda: api.init_params(jax.random.key(0)))
+    total = 0
+    for leaf in jax.tree.leaves(shapes):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return total
+
+
+def assemble_cell_cost(cfg: ArchConfig, shape: str, mesh,
+                       plan: CellPlan) -> Tuple[Cost, Dict]:
+    """Returns (total per-device Cost, probe detail dict)."""
+    mp = _micro_plan(plan) if plan.kind == "train" else plan
+    fam = cfg.family
+    detail: Dict = {"kind": plan.kind, "n_micro": plan.n_micro}
+
+    if fam in ("dense", "moe", "vlm"):
+        c1 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=1), mesh, mp)
+        c2 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=2), mesh, mp)
+        layer = (c2 - c1).clamped()
+        embed = (c1 - layer).clamped()
+        total = cfg.n_layers * layer + embed
+        detail.update(layer=layer.to_dict(), embed_head=embed.to_dict(),
+                      multipliers={"layer": cfg.n_layers})
+    elif fam == "hybrid":
+        every = cfg.hybrid_attn_every
+        groups = cfg.n_layers // every
+        tail = cfg.n_layers - groups * every
+        g1 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=every), mesh, mp)
+        g2 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=2 * every), mesh, mp)
+        group = (g2 - g1).clamped()
+        embed = (g1 - group).clamped()
+        total = groups * group + embed
+        detail.update(group=group.to_dict(), embed_head=embed.to_dict(),
+                      multipliers={"group": groups, "tail": tail})
+        if tail:
+            m1 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=1), mesh, mp)
+            m2 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=2), mesh, mp)
+            mamba_layer = (m2 - m1).clamped()
+            total = total + tail * mamba_layer
+            detail["mamba_layer"] = mamba_layer.to_dict()
+    elif fam == "ssm":
+        every = cfg.slstm_every
+        g1 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=every), mesh, mp)
+        g2 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=2 * every), mesh, mp)
+        group = (g2 - g1).clamped()
+        embed = (g1 - group).clamped()
+        groups = cfg.n_layers // every
+        total = groups * group + embed
+        extra = slstm_extra_flops(cfg, mp.global_batch, mp.seq, mesh.size)
+        if plan.kind == "train":
+            extra *= 3.0       # fwd + bwd + remat recompute
+        total = total + Cost(flops=extra)
+        detail.update(group=group.to_dict(), embed_head=embed.to_dict(),
+                      slstm_extra_flops=extra,
+                      multipliers={"group": groups})
+    elif fam == "audio":
+        c11 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=1, enc_layers=1),
+                             mesh, mp)
+        c21 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=1, enc_layers=2),
+                             mesh, mp)
+        c12 = _compile_probe(_probe_cfg(cfg, mp.seq, n_layers=2, enc_layers=1),
+                             mesh, mp)
+        enc_layer = (c21 - c11).clamped()
+        dec_layer = (c12 - c11).clamped()
+        embed = (c11 - enc_layer - dec_layer).clamped()
+        total = (cfg.enc_layers * enc_layer + cfg.n_layers * dec_layer
+                 + embed)
+        detail.update(enc_layer=enc_layer.to_dict(),
+                      dec_layer=dec_layer.to_dict(),
+                      embed_head=embed.to_dict(),
+                      multipliers={"enc": cfg.enc_layers,
+                                   "dec": cfg.n_layers})
+    else:
+        raise ValueError(fam)
+
+    if plan.kind == "train":
+        total = plan.n_micro * total
+        opt = optimizer_cost(_count_params(cfg), mesh.size,
+                             cfg.moment_dtype)
+        total = total + opt
+        detail["optimizer"] = opt.to_dict()
+    return total, detail

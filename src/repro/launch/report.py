@@ -1,0 +1,99 @@
+"""Renders EXPERIMENTS.md §Dry-run/§Roofline tables from the artifacts.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--art artifacts/dryrun]
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def load(art_dir: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        if "__" not in os.path.basename(p):
+            continue
+        recs.append(json.load(open(p)))
+    return recs
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs, mesh: str) -> str:
+    lines = [
+        f"### Dry-run — {mesh} "
+        f"({'512' if mesh == 'multi_pod' else '256'} chips)",
+        "",
+        "| arch | shape | status | compile s | resident GiB/dev | fits "
+        "16 GiB | HLO colls |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | skipped (full attn @500k)"
+                f" | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | — |")
+            continue
+        m = r["memory"]
+        resident = m.get("resident_bytes",
+                         m.get("argument_bytes", 0)
+                         + m.get("temp_bytes", 0))
+        c = r.get("cost_full_hlo_once", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{r.get('compile_seconds', 0):.0f} | "
+            f"{_fmt_bytes(resident)} | "
+            f"{'✓' if m.get('fits') else '✗'} | "
+            f"{c.get('coll_count', 0)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "### Roofline — single-pod (16×16, 256 chips), per-device terms",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant"
+        " | bound s | frac | useful-FLOP ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != "single_pod" or r.get("status") != "ok":
+            continue
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3g} | "
+            f"{rl['memory_s']:.3g} | {rl['collective_s']:.3g} | "
+            f"{rl['dominant']} | {rl['step_lower_bound_s']:.3g} | "
+            f"{rl['roofline_fraction']:.3f} | "
+            f"{rl.get('useful_flops_ratio', 0):.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    args = ap.parse_args()
+    recs = load(args.art)
+    print(dryrun_table(recs, "single_pod"))
+    print()
+    print(dryrun_table(recs, "multi_pod"))
+    print()
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,309 @@
+"""Distributed step builders: jitted train/prefill/decode/linear steps
+with explicit in/out shardings for any (arch × shape × mesh) cell.
+
+Everything here works on abstract values (``jax.eval_shape``) so the
+dry-run lowers trillion-parameter configs without allocating a byte;
+the train/serve launchers call the same builders with real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.rcv1_bbit import PaperConfig
+from repro.launch.shapes import CellPlan
+from repro.models.api import ModelAPI
+from repro.models.linear import (
+    BBitLinearConfig, bbit_logits, init_bbit_linear,
+)
+from repro.optim.optimizers import AdamWConfig, adamw
+from repro.optim.quantized_state import moment_pspec
+from repro.train.losses import mean_loss_fn
+from repro.train.steps import TrainState
+
+
+# ---------------------------------------------------------------------------
+# pspec plumbing
+# ---------------------------------------------------------------------------
+def align_pspecs(tree: Any, pspec_tree: Any) -> Any:
+    """Returns a pspec tree structurally matching ``tree``.
+
+    Walks both trees; wherever the pspec tree lacks an entry (or rank
+    mismatches), falls back to replication — robust against model/spec
+    drift, which would otherwise fail deep inside pjit.
+    """
+    from repro.optim.quantized_state import QuantizedArray
+
+    def walk(node, spec):
+        if isinstance(node, dict):
+            spec = spec if isinstance(spec, dict) else {}
+            return {k: walk(v, spec.get(k)) for k, v in node.items()}
+        if isinstance(node, TrainState):
+            spec = spec if isinstance(spec, TrainState) \
+                else TrainState(None, None, None)
+            return TrainState(walk(node.params, spec.params),
+                              walk(node.opt_state, spec.opt_state),
+                              walk(node.step, spec.step))
+        if isinstance(node, QuantizedArray):
+            if isinstance(spec, QuantizedArray):
+                return QuantizedArray(q=walk(node.q, spec.q),
+                                      scale=walk(node.scale, spec.scale))
+            return QuantizedArray(q=walk(node.q, None),
+                                  scale=walk(node.scale, None))
+        if isinstance(node, (list, tuple)):
+            spec_seq = spec if isinstance(spec, (list, tuple)) \
+                else [None] * len(node)
+            out = [walk(v, s) for v, s in zip(node, spec_seq)]
+            return type(node)(out)
+        # array-like leaf
+        shape = tuple(getattr(node, "shape", ()))
+        rank = len(shape)
+        if isinstance(spec, P):
+            entries = tuple(spec)
+            if len(entries) < rank:
+                entries = entries + (None,) * (rank - len(entries))
+            elif len(entries) > rank:
+                entries = entries[:rank]
+            return P(*_drop_indivisible(shape, entries))
+        return P(*([None] * rank))
+
+    return walk(tree, pspec_tree)
+
+
+def _mesh_axis_sizes():
+    """Axis sizes of the enclosing build's mesh (set by align callers)."""
+    return _AXIS_SIZES.get("sizes", {})
+
+
+_AXIS_SIZES: Dict[str, Dict[str, int]] = {}
+
+
+def set_mesh_for_alignment(mesh: Mesh) -> None:
+    _AXIS_SIZES["sizes"] = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+
+def _drop_indivisible(shape, entries):
+    """Replace spec entries whose mesh-axis product doesn't divide the
+    dim (odd vocabs, k=500, batch-1 caches, …) with replication."""
+    sizes = _mesh_axis_sizes()
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = (e,) if isinstance(e, str) else tuple(e)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        out.append(e if total and dim % total == 0 else None)
+    return tuple(out)
+
+
+def to_shardings(mesh: Mesh, pspec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_pspecs(mesh: Mesh, batch_shapes: Dict[str, Any]) -> Dict:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    out = {}
+    for k, v in batch_shapes.items():
+        rank = len(v.shape)
+        # batch-1 cells (long_500k) can't shard the batch dim
+        lead = dp if v.shape[0] % max(dp_size, 1) == 0 else None
+        out[k] = P(lead, *([None] * (rank - 1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LM train step
+# ---------------------------------------------------------------------------
+def make_optimizer_for(cfg: ArchConfig):
+    return adamw(3e-4, AdamWConfig(weight_decay=0.01, b2=0.95,
+                                   moment_dtype=cfg.moment_dtype))
+
+
+def abstract_train_state(api: ModelAPI) -> TrainState:
+    opt = make_optimizer_for(api.cfg)
+
+    def build():
+        params = api.init_params(jax.random.key(0))
+        return TrainState(params=params, opt_state=opt.init(params),
+                          step=jnp.zeros((), jnp.int32))
+
+    return jax.eval_shape(build)
+
+
+def train_state_pspecs(api: ModelAPI, mesh: Mesh,
+                       state_shapes: TrainState):
+    pp = align_pspecs(state_shapes.params, api.param_pspecs(mesh))
+    md = api.cfg.moment_dtype
+    moments = jax.tree.map(
+        lambda s: moment_pspec(s, md), pp,
+        is_leaf=lambda s: isinstance(s, P))
+    opt_ps = align_pspecs(state_shapes.opt_state,
+                          {"m": moments, "v": moments})
+    return TrainState(params=pp, opt_state=opt_ps, step=P())
+
+
+def build_lm_train_step(api: ModelAPI, mesh: Mesh, plan: CellPlan):
+    """Returns (jitted step, state_shapes, state_shardings, batch_specs)."""
+    set_mesh_for_alignment(mesh)
+    cfg = api.cfg
+    opt = make_optimizer_for(cfg)
+    n_micro = plan.n_micro
+    accum_dtype = jnp.bfloat16 if cfg.moment_dtype == "int8" \
+        else jnp.float32
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        def loss_of(params, mb):
+            return api.loss_fn(params, mb, mesh)
+
+        grad_fn = jax.value_and_grad(loss_of)
+        if n_micro == 1:
+            loss, grads = grad_fn(state.params, batch)
+        else:
+            def reshape(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro)
+                                 + x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                l, g = grad_fn(state.params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (gacc, lacc + l), ()
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        new_params, new_opt = opt.update(grads, state.opt_state,
+                                         state.params, state.step)
+        return (TrainState(new_params, new_opt, state.step + 1), loss)
+
+    state_shapes = abstract_train_state(api)
+    state_ps = train_state_pspecs(api, mesh, state_shapes)
+    bshapes = api.batch_shapes(plan.global_batch, plan.seq)
+    bps = batch_pspecs(mesh, bshapes)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(to_shardings(mesh, state_ps),
+                      to_shardings(mesh, bps)),
+        out_shardings=(to_shardings(mesh, state_ps),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0,),
+    )
+    return jitted, state_shapes, state_ps, bshapes, bps
+
+
+# ---------------------------------------------------------------------------
+# LM prefill / decode steps
+# ---------------------------------------------------------------------------
+def build_prefill_step(api: ModelAPI, mesh: Mesh, plan: CellPlan):
+    set_mesh_for_alignment(mesh)
+    cfg = api.cfg
+
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, mesh)
+
+    params_shapes = jax.eval_shape(
+        lambda: api.init_params(jax.random.key(0)))
+    pp = align_pspecs(params_shapes, api.param_pspecs(mesh))
+    bshapes = api.batch_shapes(plan.global_batch, plan.seq)
+    bshapes.pop("targets", None)
+    bps = batch_pspecs(mesh, bshapes)
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(to_shardings(mesh, pp), to_shardings(mesh, bps)),
+    )
+    return jitted, params_shapes, pp, bshapes, bps
+
+
+def build_decode_step(api: ModelAPI, mesh: Mesh, plan: CellPlan):
+    set_mesh_for_alignment(mesh)
+    cfg = api.cfg
+
+    def decode_step(params, cache, cache_len, batch):
+        return api.decode_step(params, batch, cache, cache_len, mesh)
+
+    params_shapes = jax.eval_shape(
+        lambda: api.init_params(jax.random.key(0)))
+    pp = align_pspecs(params_shapes, api.param_pspecs(mesh))
+    cache_shapes = jax.eval_shape(
+        lambda: api.init_cache(plan.global_batch, plan.seq))
+    cache_spec_tree = api.cache_pspecs(mesh) if api.cache_pspecs else None
+    cps = align_pspecs(cache_shapes, cache_spec_tree)
+    bshapes = api.decode_shapes(plan.global_batch)
+    bps = batch_pspecs(mesh, bshapes)
+    jitted = jax.jit(
+        decode_step,
+        in_shardings=(to_shardings(mesh, pp), to_shardings(mesh, cps),
+                      NamedSharding(mesh, P()),
+                      to_shardings(mesh, bps)),
+        donate_argnums=(1,),
+    )
+    len_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted, (params_shapes, cache_shapes, len_shape, bshapes), \
+        (pp, cps, P(), bps)
+
+
+# ---------------------------------------------------------------------------
+# the paper's linear model (rcv1_bbit) distributed train step
+# ---------------------------------------------------------------------------
+def build_linear_train_step(paper: PaperConfig, mesh: Mesh):
+    """DP over examples, TP over the hashed table; logits psum'd."""
+    set_mesh_for_alignment(mesh)
+    lcfg = BBitLinearConfig(k=paper.k, b=paper.b,
+                            n_classes=paper.n_classes,
+                            use_kernel="never")
+    opt = adamw(1e-2, AdamWConfig())
+    loss_fn = mean_loss_fn(
+        lambda p, c: bbit_logits(p, c, lcfg), paper.loss, l2=1e-7)
+
+    def train_step(state: TrainState, codes, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            state.params, codes, labels)
+        new_params, new_opt = opt.update(grads, state.opt_state,
+                                         state.params, state.step)
+        return TrainState(new_params, new_opt, state.step + 1), loss
+
+    def build():
+        params = init_bbit_linear(lcfg)
+        return TrainState(params=params, opt_state=opt.init(params),
+                          step=jnp.zeros((), jnp.int32))
+
+    state_shapes = jax.eval_shape(build)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    param_ps = {"table": P(None, "model", None), "bias": P(None)}
+    state_ps = TrainState(
+        params=align_pspecs(state_shapes.params, param_ps),
+        opt_state=align_pspecs(
+            state_shapes.opt_state,
+            {"m": param_ps, "v": param_ps}),
+        step=P())
+    codes_sds = jax.ShapeDtypeStruct(
+        (paper.global_batch, paper.k), jnp.int32)
+    labels_sds = jax.ShapeDtypeStruct((paper.global_batch,), jnp.int32)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(to_shardings(mesh, state_ps),
+                      NamedSharding(mesh, P(dp, None)),
+                      NamedSharding(mesh, P(dp))),
+        donate_argnums=(0,),
+    )
+    return jitted, state_shapes, state_ps, (codes_sds, labels_sds)

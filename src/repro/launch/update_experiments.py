@@ -1,0 +1,39 @@
+"""Splices freshly-generated dry-run/roofline tables into EXPERIMENTS.md
+between the BEGIN/END GENERATED markers.
+
+Usage: PYTHONPATH=src python -m repro.launch.update_experiments
+"""
+from __future__ import annotations
+
+import re
+
+from repro.launch.report import load, dryrun_table, roofline_table
+
+
+def main() -> None:
+    recs = load("artifacts/dryrun")
+    dr = (dryrun_table(recs, "single_pod") + "\n\n"
+          + dryrun_table(recs, "multi_pod"))
+    rl = roofline_table(recs)
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    text = re.sub(
+        r"(<!-- BEGIN GENERATED DRYRUN TABLES[^\n]*-->).*?"
+        r"(<!-- END GENERATED DRYRUN TABLES -->)",
+        lambda m: m.group(1) + "\n" + dr + "\n" + m.group(2),
+        text, flags=re.S)
+    text = re.sub(
+        r"(<!-- BEGIN GENERATED ROOFLINE TABLE -->).*?"
+        r"(<!-- END GENERATED ROOFLINE TABLE -->)",
+        lambda m: m.group(1) + "\n" + rl + "\n" + m.group(2),
+        text, flags=re.S)
+    open(path, "w").write(text)
+    n_ok = sum(1 for r in recs if r.get("status") == "ok")
+    n_skip = sum(1 for r in recs if r.get("status") == "skipped")
+    n_err = sum(1 for r in recs if r.get("status") == "error")
+    print(f"EXPERIMENTS.md updated: {n_ok} ok, {n_skip} skipped, "
+          f"{n_err} error cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Unified model API: one contract across all 10 architecture families.
+
+``get_model_api(cfg)`` returns a ``ModelAPI`` whose members the
+launchers (train/serve/dryrun) and smoke tests consume without
+family-specific branches.  Batches are dicts:
+
+  train:   {"tokens","targets"} (+"vision_embeds" | +"frames")
+  prefill: {"tokens"} (+modality extras)
+  decode:  {"token"} against (cache, cache_len)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as encdec_lib
+from repro.models import hybrid as hybrid_lib
+from repro.models import transformer as tf_lib
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    init_params: Callable
+    loss_fn: Callable        # (params, batch, mesh) -> scalar
+    prefill: Callable        # (params, batch, mesh) -> (logits, cache)
+    decode_step: Callable    # (params, batch, cache, cache_len, mesh)
+    init_cache: Callable     # (batch_size, max_len) -> cache pytree
+    param_pspecs: Callable   # (mesh) -> pytree of PartitionSpec
+    batch_shapes: Callable   # (batch, seq) -> {name: ShapeDtypeStruct}
+    decode_shapes: Callable  # (batch,) -> {name: ShapeDtypeStruct}
+    cache_pspecs: Callable = None   # (mesh) -> pytree of PartitionSpec
+
+
+def _kv_cache_pspec(cfg: ArchConfig, mesh: Mesh, lead: int = 1):
+    """(lead…, B, S, KV, hd): B over dp; heads over 'model' when they
+    divide, otherwise the sequence dim (exact under masked softmax —
+    XLA inserts the psum/pmax reductions)."""
+    from repro.models.transformer import dp_axes_of
+    dp = dp_axes_of(mesh) or None
+    mdl = mesh.shape.get("model", 1)
+    kv_eff = max(cfg.n_kv_heads, cfg.kv_repeat_to or 0)
+    heads_ok = kv_eff % mdl == 0
+    leadspec = (None,) * lead
+    if heads_ok:
+        spec = P(*leadspec, dp, None, "model", None)
+    else:
+        spec = P(*leadspec, dp, "model", None, None)
+    return {"k": spec, "v": spec}
+
+
+def _std_batch_shapes(cfg: ArchConfig):
+    def f(batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        s = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            s["vision_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.frontend_len, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        if cfg.frontend == "audio_stub":
+            s["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.frontend_len, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        return s
+    return f
+
+
+def _decode_shapes(cfg: ArchConfig):
+    def f(batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        return {"token": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    return f
+
+
+def get_model_api(cfg: ArchConfig) -> ModelAPI:
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def loss_fn(params, batch, mesh=None):
+            logits = tf_lib.forward_train(
+                params, batch["tokens"], cfg, mesh,
+                vision_embeds=batch.get("vision_embeds"))
+            return tf_lib.xent_loss(logits, batch["targets"])
+
+        def prefill(params, batch, mesh=None):
+            return tf_lib.prefill(params, batch["tokens"], cfg, mesh,
+                                  vision_embeds=batch.get("vision_embeds"))
+
+        def decode(params, batch, cache, cache_len, mesh=None):
+            return tf_lib.decode_step(params, batch["token"], cache,
+                                      cache_len, cfg, mesh)
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: tf_lib.init_decoder_params(cfg, key),
+            loss_fn=loss_fn, prefill=prefill, decode_step=decode,
+            init_cache=lambda b, s: tf_lib.init_cache(cfg, b, s),
+            param_pspecs=lambda mesh: tf_lib.decoder_param_pspecs(cfg, mesh),
+            batch_shapes=_std_batch_shapes(cfg),
+            decode_shapes=_decode_shapes(cfg),
+            cache_pspecs=lambda mesh: _kv_cache_pspec(cfg, mesh, lead=1),
+        )
+
+    if fam == "hybrid":
+        def loss_fn(params, batch, mesh=None):
+            logits = hybrid_lib.hybrid_forward_train(
+                params, batch["tokens"], cfg, mesh)
+            return tf_lib.xent_loss(logits, batch["targets"])
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: hybrid_lib.init_hybrid_params(cfg, key),
+            loss_fn=loss_fn,
+            prefill=lambda p, b, mesh=None: hybrid_lib.hybrid_prefill(
+                p, b["tokens"], cfg, mesh),
+            decode_step=lambda p, b, c, cl, mesh=None:
+                hybrid_lib.hybrid_decode_step(p, b["token"], c, cl, cfg,
+                                              mesh),
+            init_cache=lambda b, s: hybrid_lib.init_hybrid_cache(cfg, b, s),
+            param_pspecs=lambda mesh: hybrid_lib.hybrid_param_pspecs(
+                cfg, mesh),
+            batch_shapes=_std_batch_shapes(cfg),
+            decode_shapes=_decode_shapes(cfg),
+            cache_pspecs=lambda mesh: _hybrid_cache_pspecs(cfg, mesh),
+        )
+
+    if fam == "ssm":
+        def loss_fn(params, batch, mesh=None):
+            logits = hybrid_lib.xlstm_forward_train(
+                params, batch["tokens"], cfg, mesh)
+            return tf_lib.xent_loss(logits, batch["targets"])
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: hybrid_lib.init_xlstm_stack_params(
+                cfg, key),
+            loss_fn=loss_fn,
+            prefill=lambda p, b, mesh=None: hybrid_lib.xlstm_prefill(
+                p, b["tokens"], cfg, mesh),
+            decode_step=lambda p, b, c, cl, mesh=None:
+                hybrid_lib.xlstm_decode_step(p, b["token"], c, cl, cfg,
+                                             mesh),
+            init_cache=lambda b, s: hybrid_lib.init_xlstm_cache(cfg, b, s),
+            param_pspecs=lambda mesh: hybrid_lib.xlstm_param_pspecs(
+                cfg, mesh),
+            batch_shapes=_std_batch_shapes(cfg),
+            decode_shapes=_decode_shapes(cfg),
+            cache_pspecs=lambda mesh: _xlstm_cache_pspecs(cfg, mesh),
+        )
+
+    if fam == "audio":
+        def loss_fn(params, batch, mesh=None):
+            logits = encdec_lib.forward_train(
+                params, batch["tokens"], batch["frames"], cfg, mesh)
+            return tf_lib.xent_loss(logits, batch["targets"])
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: encdec_lib.init_encdec_params(cfg, key),
+            loss_fn=loss_fn,
+            prefill=lambda p, b, mesh=None: encdec_lib.prefill(
+                p, b["tokens"], b["frames"], cfg, mesh),
+            decode_step=lambda p, b, c, cl, mesh=None:
+                encdec_lib.decode_step(p, b["token"], c, cl, cfg, mesh),
+            init_cache=lambda b, s: encdec_lib.init_cache(cfg, b, s),
+            param_pspecs=lambda mesh: encdec_lib.encdec_param_pspecs(
+                cfg, mesh),
+            batch_shapes=_std_batch_shapes(cfg),
+            decode_shapes=_decode_shapes(cfg),
+            cache_pspecs=lambda mesh: {
+                "self": _kv_cache_pspec(cfg, mesh, lead=1),
+                "cross": _kv_cache_pspec(cfg, mesh, lead=1),
+            },
+        )
+
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def _hybrid_cache_pspecs(cfg: ArchConfig, mesh: Mesh):
+    from repro.models.transformer import dp_axes_of
+    from repro.models.hybrid import _hybrid_layout
+    from repro.models import ssm as ssm_lib
+    dp = dp_axes_of(mesh) or None
+    mdl = mesh.shape.get("model", 1)
+    _, nh, _ = ssm_lib.ssm_dims(cfg)
+    h_spec = "model" if nh % mdl == 0 else None
+    ssm_spec = lambda lead: (
+        P(*((None,) * lead), dp, h_spec, None, None),      # h state
+        P(*((None,) * lead), dp, None, "model"),           # conv buffer
+    )
+    groups, per, tail = _hybrid_layout(cfg)
+    out = {
+        "mamba": ssm_spec(2),
+        "attn": _kv_cache_pspec(cfg, mesh, lead=1),
+    }
+    if tail:
+        out["mamba_tail"] = ssm_spec(1)
+    return out
+
+
+def _xlstm_cache_pspecs(cfg: ArchConfig, mesh: Mesh):
+    from repro.models.transformer import dp_axes_of
+    from repro.models import xlstm as xlstm_lib
+    dp = dp_axes_of(mesh) or None
+    mdl = mesh.shape.get("model", 1)
+    _, p = xlstm_lib.xlstm_dims(cfg)
+    p_spec = "model" if p % mdl == 0 else None
+    ps = cfg.d_model // cfg.n_heads
+    ps_spec = "model" if ps % mdl == 0 else None
+    return {
+        "mlstm": (P(None, None, dp, None, p_spec, None),   # C
+                  P(None, None, dp, None, p_spec),         # n
+                  P(None, None, dp, None)),                # m
+        "slstm": (P(None, dp, None, ps_spec),) * 4,
+    }

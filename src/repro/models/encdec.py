@@ -1,0 +1,200 @@
+"""Encoder-decoder stack (seamless-m4t): speech-encoder (stub frames) +
+text decoder with cross-attention.
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, frames, d_model).  Positions are
+sinusoidal-additive (rope_variant='none' for this arch).  Decode shapes
+exercise the decoder with cached self-attention KV and static cross
+KV computed once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import (
+    attn_apply, attn_pspecs, build_positions, cross_attn_apply,
+    dp_axes_of, embed_tokens, encode_cross_kv, ffn_apply,
+    init_attn_params, init_embed_params, lm_head, maybe_shard, _dtype,
+)
+
+
+def sinusoidal(seq: int, d: int, offset=0) -> jax.Array:
+    pos = (jnp.arange(seq, dtype=jnp.float32) + offset)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    out = jnp.zeros((seq, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang[:, : (d + 1) // 2]))
+    return out
+
+
+def init_encdec_params(cfg: ArchConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+    params = init_embed_params(cfg, k_emb, dtype)
+    params["enc_layers"] = jax.vmap(
+        lambda kk: init_attn_params(cfg, kk, dtype))(
+        jax.random.split(k_enc, cfg.enc_layers))
+    params["dec_layers"] = jax.vmap(
+        lambda kk: init_attn_params(cfg, kk, dtype, cross=True))(
+        jax.random.split(k_dec, cfg.n_layers))
+    params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return params
+
+
+def encode(params, frames: jax.Array, cfg: ArchConfig,
+           mesh: Optional[Mesh] = None) -> jax.Array:
+    """frames (B, F, d) stub embeddings → encoder output (B, F, d)."""
+    b, f, d = frames.shape
+    x = frames.astype(_dtype(cfg)) + sinusoidal(f, d).astype(
+        _dtype(cfg))[None]
+    x = maybe_shard(x, mesh, dp_axes_of(mesh), None, None)
+    positions = build_positions(cfg, b, f)
+
+    def body(xc, lp):
+        xc, _ = attn_apply(lp, xc, cfg=cfg, mesh=mesh,
+                           positions=positions, mode="train",
+                           causal=False)
+        xc = ffn_apply(lp, xc, cfg, mesh)
+        return xc, None
+
+    wrapped = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(wrapped, x, params["enc_layers"])
+    else:
+        for i in range(cfg.enc_layers):
+            lp = jax.tree.map(lambda p: p[i], params["enc_layers"])
+            x, _ = wrapped(x, lp)
+    from repro.models.layers import rmsnorm
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(lp, x, enc_kv, *, cfg, mesh, positions, mode,
+               cache=None, cache_len=None):
+    x, new_kv = attn_apply(lp, x, cfg=cfg, mesh=mesh, positions=positions,
+                           mode=mode, cache=cache, cache_len=cache_len)
+    x = cross_attn_apply(lp, x, enc_kv, cfg, mesh)
+    x = ffn_apply(lp, x, cfg, mesh)
+    return x, new_kv
+
+
+def _embed_dec(params, tokens, cfg, mesh, offset=0):
+    x = embed_tokens(params, tokens, cfg, mesh)
+    pe = sinusoidal(tokens.shape[1], cfg.d_model, offset=offset)
+    return x + pe.astype(x.dtype)[None]
+
+
+def forward_train(params, tokens, frames, cfg: ArchConfig,
+                  mesh: Optional[Mesh] = None) -> jax.Array:
+    """Teacher-forced decoder logits (B, S, V)."""
+    enc_out = encode(params, frames, cfg, mesh)
+    b, s = tokens.shape
+    x = _embed_dec(params, tokens, cfg, mesh)
+    positions = build_positions(cfg, b, s)
+
+    def body(xc, lp):
+        enc_kv = encode_cross_kv(lp, enc_out, cfg)
+        xc, _ = _dec_layer(lp, xc, enc_kv, cfg=cfg, mesh=mesh,
+                           positions=positions, mode="train")
+        return xc, None
+
+    wrapped = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(wrapped, x, params["dec_layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["dec_layers"])
+            x, _ = wrapped(x, lp)
+    return lm_head(params, x, cfg, mesh)
+
+
+def prefill(params, tokens, frames, cfg: ArchConfig,
+            mesh: Optional[Mesh] = None):
+    """Returns (last logits, cache={self{k,v}, cross{k,v}})."""
+    enc_out = encode(params, frames, cfg, mesh)
+    b, s = tokens.shape
+    x = _embed_dec(params, tokens, cfg, mesh)
+    positions = build_positions(cfg, b, s)
+
+    def body(xc, lp):
+        enc_kv = encode_cross_kv(lp, enc_out, cfg)
+        xc, kv = _dec_layer(lp, xc, enc_kv, cfg=cfg, mesh=mesh,
+                            positions=positions, mode="prefill")
+        return xc, (kv, enc_kv)
+
+    wrapped = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, (self_kv, cross_kv) = jax.lax.scan(wrapped, x,
+                                              params["dec_layers"])
+    else:
+        ys = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p_: p_[i], params["dec_layers"])
+            x, y = wrapped(x, lp)
+            ys.append(y)
+        self_kv, cross_kv = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    logits = lm_head(params, x[:, -1:], cfg, mesh)[:, 0]
+    return logits, {"self": self_kv, "cross": cross_kv}
+
+
+def decode_step(params, token, cache, cache_len, cfg: ArchConfig,
+                mesh: Optional[Mesh] = None):
+    b = token.shape[0]
+    x = _embed_dec(params, token, cfg, mesh, offset=cache_len)
+    positions = build_positions(cfg, b, 1, offset=cache_len)
+
+    def body(xc, inp):
+        lp, self_kv, cross_kv = inp
+        xc, new_kv = _dec_layer(lp, xc, cross_kv, cfg=cfg, mesh=mesh,
+                                positions=positions, mode="decode",
+                                cache=self_kv, cache_len=cache_len)
+        return xc, new_kv
+
+    if cfg.scan_layers:
+        x, new_self = jax.lax.scan(
+            body, x,
+            (params["dec_layers"], cache["self"], cache["cross"]))
+    else:
+        ys = []
+        for i in range(cfg.n_layers):
+            inp = jax.tree.map(
+                lambda p_: p_[i],
+                (params["dec_layers"], cache["self"], cache["cross"]))
+            x, y = body(x, inp)
+            ys.append(y)
+        new_self = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    logits = lm_head(params, x, cfg, mesh)[:, 0]
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    dtype = _dtype(cfg)
+    self_shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                  cfg.head_dim)
+    cross_shape = (cfg.n_layers, batch, cfg.frontend_len,
+                   cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "self": {"k": jnp.zeros(self_shape, dtype),
+                 "v": jnp.zeros(self_shape, dtype)},
+        "cross": {"k": jnp.zeros(cross_shape, dtype),
+                  "v": jnp.zeros(cross_shape, dtype)},
+    }
+
+
+def encdec_param_pspecs(cfg: ArchConfig, mesh: Mesh) -> dict:
+    dp = dp_axes_of(mesh) or None
+    return {
+        "embed": ({"hash_tables": P(None, None, "model")}
+                  if cfg.embedding == "bbit_hash"
+                  else {"table": P(None, "model")}),
+        "final_norm": P(None),
+        "enc_norm": P(None),
+        "lm_head": P(dp, "model"),
+        "enc_layers": attn_pspecs(cfg, dp, stacked=True),
+        "dec_layers": attn_pspecs(cfg, dp, stacked=True, cross=True),
+    }

@@ -1,0 +1,447 @@
+"""Hybrid (zamba2) and xLSTM (xlstm-350m) model stacks.
+
+zamba2: ``n_layers`` Mamba2 blocks; before every group of
+``hybrid_attn_every`` blocks a *shared* attention(+MLP) block is
+applied, alternating between ``hybrid_shared_attn_blocks`` weight sets
+(Zamba weight sharing).  Layout (81L, every=6): 13 groups of
+[shared-attn, 6×mamba] + 3 tail mamba blocks → 81 mamba blocks,
+13 shared-attn applications.  (Simplification noted in DESIGN.md: the
+original concatenates the initial embedding into the shared block's
+input; we use the plain residual stream.)
+
+xlstm: groups of [(slstm_every−1)×mLSTM, 1×sLSTM].
+
+Both families expose the same train/prefill/decode contract as
+models/transformer.py and are sub-quadratic → they serve long_500k.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.transformer import (
+    attn_apply, attn_pspecs, build_positions, dp_axes_of,
+    embed_tokens, init_attn_params, init_embed_params, lm_head,
+    maybe_shard, _dtype,
+)
+from repro.models.layers import rmsnorm
+
+
+
+
+def _loop(cfg, body, x, xs, length):
+    """lax.scan when cfg.scan_layers else an unrolled python loop.
+
+    ``xs`` is a pytree stacked on the leading axis (or None).  Returns
+    (carry, stacked ys) like lax.scan.
+    """
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs)
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs) if xs is not None else None
+        x, y = body(x, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return x, ys
+
+# ---------------------------------------------------------------------------
+# zamba2-style hybrid
+# ---------------------------------------------------------------------------
+def _hybrid_layout(cfg: ArchConfig) -> Tuple[int, int, int]:
+    per = cfg.hybrid_attn_every
+    groups = cfg.n_layers // per
+    tail = cfg.n_layers - groups * per
+    return groups, per, tail
+
+
+def init_hybrid_params(cfg: ArchConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    groups, per, tail = _hybrid_layout(cfg)
+    k_emb, k_m, k_t, k_a = jax.random.split(key, 4)
+
+    def init_mamba_layer(kk):
+        k1, k2 = jax.random.split(kk)
+        p = ssm_lib.init_mamba2_params(cfg, k1, dtype)
+        p["ln"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+
+    params = init_embed_params(cfg, k_emb, dtype)
+    if groups:
+        km = jax.random.split(k_m, groups * per).reshape(groups, per)
+        params["mamba"] = jax.vmap(jax.vmap(init_mamba_layer))(km)
+    else:
+        proto = jax.eval_shape(init_mamba_layer, jax.random.key(0))
+        params["mamba"] = jax.tree.map(
+            lambda sd: jnp.zeros((0, per) + sd.shape, sd.dtype), proto)
+    if tail:
+        params["mamba_tail"] = jax.vmap(init_mamba_layer)(
+            jax.random.split(k_t, tail))
+    ka = jax.random.split(k_a, cfg.hybrid_shared_attn_blocks)
+    params["attn"] = jax.vmap(
+        lambda kk: init_attn_params(cfg, kk, dtype))(ka)
+    return params
+
+
+def _mamba_block(lp, x, cfg, mesh, state=None, chunk=128):
+    h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+    h = maybe_shard(h, mesh, dp_axes_of(mesh), None, None)
+    y, new_state = ssm_lib.mamba2_forward(
+        {k: v for k, v in lp.items() if k != "ln"}, h, cfg,
+        h0=None if state is None else state[0],
+        conv0=None if state is None else state[1],
+        chunk=chunk)
+    return x + y, new_state
+
+
+def _select_attn(params, g_idx, n_shared):
+    return jax.tree.map(lambda p: p[g_idx % n_shared], params["attn"])
+
+
+def hybrid_forward_train(params, tokens, cfg: ArchConfig,
+                         mesh: Optional[Mesh] = None) -> jax.Array:
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg, mesh)
+    positions = build_positions(cfg, b, s)
+    groups, per, tail = _hybrid_layout(cfg)
+    nsh = cfg.hybrid_shared_attn_blocks
+
+    def group_body(xc, inp):
+        g_idx, g_params = inp
+        ap = _select_attn(params, g_idx, nsh)
+        xc, _ = attn_apply(ap, xc, cfg=cfg, mesh=mesh,
+                           positions=positions, mode="train")
+        from repro.models.transformer import ffn_apply
+        xc = ffn_apply(ap, xc, cfg, mesh)
+
+        def mamba_body(xi, lp):
+            xi, _ = _mamba_block(lp, xi, cfg, mesh)
+            return xi, None
+
+        body = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+        xc, _ = _loop(cfg, body, xc, g_params, per)
+        return xc, None
+
+    gb = jax.checkpoint(group_body) if cfg.remat else group_body
+    if groups:
+        x, _ = _loop(cfg, gb, x, (jnp.arange(groups), params["mamba"]),
+                     groups)
+    if tail:
+        def mb(xi, lp):
+            xi, _ = _mamba_block(lp, xi, cfg, mesh)
+            return xi, None
+        body = jax.checkpoint(mb) if cfg.remat else mb
+        x, _ = _loop(cfg, body, x, params["mamba_tail"], tail)
+    return lm_head(params, x, cfg, mesh)
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_len: int):
+    dtype = _dtype(cfg)
+    groups, per, tail = _hybrid_layout(cfg)
+    d_in, nh, n = ssm_lib.ssm_dims(cfg)
+    cw = cfg.ssm_conv_width
+    mk_ssm = lambda *lead: (
+        jnp.zeros(lead + (batch, nh, n, cfg.ssm_head_dim), jnp.float32),
+        jnp.zeros(lead + (batch, cw - 1, d_in + 2 * n), dtype))
+    cache = {
+        "mamba": mk_ssm(groups, per),
+        "attn": {
+            "k": jnp.zeros((groups, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((groups, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+        },
+    }
+    if tail:
+        cache["mamba_tail"] = mk_ssm(tail)
+    return cache
+
+
+def hybrid_decode_step(params, token, cache, cache_len, cfg: ArchConfig,
+                       mesh: Optional[Mesh] = None):
+    b = token.shape[0]
+    x = embed_tokens(params, token, cfg, mesh)
+    positions = build_positions(cfg, b, 1, offset=cache_len)
+    groups, per, tail = _hybrid_layout(cfg)
+    nsh = cfg.hybrid_shared_attn_blocks
+
+    def group_body(xc, inp):
+        g_idx, g_params, g_state, g_kv = inp
+        ap = _select_attn(params, g_idx, nsh)
+        xc, new_kv = attn_apply(ap, xc, cfg=cfg, mesh=mesh,
+                                positions=positions, mode="decode",
+                                cache=g_kv, cache_len=cache_len)
+        from repro.models.transformer import ffn_apply
+        xc = ffn_apply(ap, xc, cfg, mesh)
+
+        def mamba_body(xi, inp2):
+            lp, st = inp2
+            xi, new_st = _mamba_block(lp, xi, cfg, mesh, state=st, chunk=1)
+            return xi, new_st
+
+        xc, new_states = _loop(cfg, mamba_body, xc, (g_params, g_state),
+                               per)
+        return xc, (new_states, new_kv)
+
+    if groups:
+        x, (new_mamba, new_kv) = _loop(
+            cfg, group_body, x,
+            (jnp.arange(groups), params["mamba"], cache["mamba"],
+             cache["attn"]), groups)
+        new_cache = {"mamba": new_mamba, "attn": new_kv}
+    else:
+        new_cache = {"mamba": cache["mamba"], "attn": cache["attn"]}
+    if tail:
+        def mb(xi, inp2):
+            lp, st = inp2
+            xi, new_st = _mamba_block(lp, xi, cfg, mesh, state=st, chunk=1)
+            return xi, new_st
+        x, new_tail = _loop(cfg, mb, x,
+                            (params["mamba_tail"], cache["mamba_tail"]),
+                            tail)
+        new_cache["mamba_tail"] = new_tail
+    logits = lm_head(params, x, cfg, mesh)[:, 0]
+    return logits, new_cache
+
+
+def hybrid_prefill(params, tokens, cfg: ArchConfig,
+                   mesh: Optional[Mesh] = None):
+    """Returns (last logits (B,V), cache at len = tokens.shape[1])."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg, mesh)
+    positions = build_positions(cfg, b, s)
+    groups, per, tail = _hybrid_layout(cfg)
+    nsh = cfg.hybrid_shared_attn_blocks
+
+    def group_body(xc, inp):
+        g_idx, g_params = inp
+        ap = _select_attn(params, g_idx, nsh)
+        xc, kv = attn_apply(ap, xc, cfg=cfg, mesh=mesh,
+                            positions=positions, mode="prefill")
+        from repro.models.transformer import ffn_apply
+        xc = ffn_apply(ap, xc, cfg, mesh)
+
+        def mamba_body(xi, lp):
+            xi, st = _mamba_block(lp, xi, cfg, mesh)
+            return xi, st
+
+        body = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+        xc, states = _loop(cfg, body, xc, g_params, per)
+        return xc, (states, kv)
+
+    gb = jax.checkpoint(group_body) if cfg.remat else group_body
+    if groups:
+        x, (mamba_states, kvs) = _loop(
+            cfg, gb, x, (jnp.arange(groups), params["mamba"]), groups)
+        cache = {"mamba": mamba_states, "attn": kvs}
+    else:  # tail-only stacks (roofline probes)
+        empty = init_hybrid_cache(cfg, b, s)
+        cache = {"mamba": empty["mamba"], "attn": empty["attn"]}
+    if tail:
+        def mb(xi, lp):
+            xi, st = _mamba_block(lp, xi, cfg, mesh)
+            return xi, st
+        body = jax.checkpoint(mb) if cfg.remat else mb
+        x, tail_states = _loop(cfg, body, x, params["mamba_tail"], tail)
+        cache["mamba_tail"] = tail_states
+    logits = lm_head(params, x[:, -1:], cfg, mesh)[:, 0]
+    return logits, cache
+
+
+def hybrid_param_pspecs(cfg: ArchConfig, mesh: Mesh) -> dict:
+    dp = dp_axes_of(mesh) or None
+    mamba_spec = {
+        "ln": P(None, None, None),
+        "in_proj": P(None, None, dp, "model"),
+        "conv_w": P(None, None, None, "model"),
+        "conv_b": P(None, None, "model"),
+        "a_log": P(None, None, None),
+        "dt_bias": P(None, None, None),
+        "d_skip": P(None, None, None),
+        "norm_scale": P(None, None, "model"),
+        "out_proj": P(None, None, "model", dp),
+    }
+    out = {
+        "embed": ({"hash_tables": P(None, None, "model")}
+                  if cfg.embedding == "bbit_hash"
+                  else {"table": P(None, "model")}),
+        "final_norm": P(None),
+        "lm_head": P(dp, "model"),
+        "mamba": mamba_spec,
+        "attn": attn_pspecs(cfg, dp, stacked=True),
+    }
+    groups, per, tail = _hybrid_layout(cfg)
+    if tail:
+        out["mamba_tail"] = jax.tree.map(
+            lambda s: P(*s[1:]), mamba_spec,
+            is_leaf=lambda s: isinstance(s, P))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# xLSTM stack
+# ---------------------------------------------------------------------------
+def _xlstm_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    per = cfg.slstm_every - 1        # mLSTM blocks per group
+    groups = cfg.n_layers // cfg.slstm_every
+    return groups, per
+
+
+def init_xlstm_stack_params(cfg: ArchConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    groups, per = _xlstm_layout(cfg)
+    k_emb, k_m, k_s = jax.random.split(key, 3)
+
+    def init_m(kk):
+        p = xlstm_lib.init_mlstm_params(cfg, kk, dtype)
+        p["ln"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+
+    def init_s(kk):
+        p = xlstm_lib.init_slstm_params(cfg, kk, dtype)
+        p["ln"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+
+    params = init_embed_params(cfg, k_emb, dtype)
+    km = jax.random.split(k_m, groups * per).reshape(groups, per)
+    params["mlstm"] = jax.vmap(jax.vmap(init_m))(km)
+    params["slstm"] = jax.vmap(init_s)(jax.random.split(k_s, groups))
+    return params
+
+
+def _mlstm_block(lp, x, cfg, mesh, state=None, chunk=128):
+    h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+    y, st = xlstm_lib.mlstm_forward(
+        {k: v for k, v in lp.items() if k != "ln"}, h, cfg,
+        state=state, chunk=chunk)
+    return x + y, st
+
+
+def _slstm_block(lp, x, cfg, mesh, state=None):
+    h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+    y, st = xlstm_lib.slstm_forward(
+        {k: v for k, v in lp.items() if k != "ln"}, h, cfg, state=state)
+    return x + y, st
+
+
+def xlstm_forward_train(params, tokens, cfg: ArchConfig,
+                        mesh: Optional[Mesh] = None) -> jax.Array:
+    x = embed_tokens(params, tokens, cfg, mesh)
+    groups, per = _xlstm_layout(cfg)
+
+    def group_body(xc, inp):
+        g_m, g_s = inp
+
+        def m_body(xi, lp):
+            xi, _ = _mlstm_block(lp, xi, cfg, mesh)
+            return xi, None
+
+        body = jax.checkpoint(m_body) if cfg.remat else m_body
+        xc, _ = _loop(cfg, body, xc, g_m, per)
+        xc, _ = _slstm_block(g_s, xc, cfg, mesh)
+        return xc, None
+
+    gb = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, _ = _loop(cfg, gb, x, (params["mlstm"], params["slstm"]), groups)
+    return lm_head(params, x, cfg, mesh)
+
+
+def init_xlstm_cache(cfg: ArchConfig, batch: int, max_len: int):
+    del max_len                      # recurrent: O(1) state
+    groups, per = _xlstm_layout(cfg)
+    d_in, p = xlstm_lib.xlstm_dims(cfg)
+    h = cfg.n_heads
+    ps = cfg.d_model // h
+    zeros = lambda *s: jnp.zeros(s, jnp.float32)
+    return {
+        "mlstm": (zeros(groups, per, batch, h, p, p),
+                  zeros(groups, per, batch, h, p),
+                  jnp.full((groups, per, batch, h), -1e30, jnp.float32)),
+        "slstm": (zeros(groups, batch, h, ps),
+                  zeros(groups, batch, h, ps) + 1.0,
+                  zeros(groups, batch, h, ps),
+                  zeros(groups, batch, h, ps) - 1e30),
+    }
+
+
+def xlstm_apply_with_state(params, tokens, cache, cfg: ArchConfig,
+                           mesh: Optional[Mesh] = None, chunk=128):
+    """Shared prefill/decode: runs tokens through, carrying states."""
+    x = embed_tokens(params, tokens, cfg, mesh)
+    groups, per = _xlstm_layout(cfg)
+
+    def group_body(xc, inp):
+        g_m, g_s, st_m, st_s = inp
+
+        def m_body(xi, inp2):
+            lp, st = inp2
+            xi, new = _mlstm_block(lp, xi, cfg, mesh, state=st,
+                                   chunk=chunk)
+            return xi, new
+
+        xc, new_m = _loop(cfg, m_body, xc, (g_m, st_m), per)
+        xc, new_s = _slstm_block(g_s, xc, cfg, mesh, state=st_s)
+        return xc, (new_m, new_s)
+
+    x, (new_m, new_s) = _loop(
+        cfg, group_body, x,
+        (params["mlstm"], params["slstm"], cache["mlstm"],
+         cache["slstm"]), groups)
+    return x, {"mlstm": new_m, "slstm": new_s}
+
+
+def xlstm_prefill(params, tokens, cfg: ArchConfig,
+                  mesh: Optional[Mesh] = None):
+    cache = init_xlstm_cache(cfg, tokens.shape[0], 0)
+    x, new_cache = xlstm_apply_with_state(params, tokens, cache, cfg, mesh)
+    return lm_head(params, x[:, -1:], cfg, mesh)[:, 0], new_cache
+
+
+def xlstm_decode_step(params, token, cache, cache_len, cfg: ArchConfig,
+                      mesh: Optional[Mesh] = None):
+    del cache_len                    # recurrent state carries position
+    x, new_cache = xlstm_apply_with_state(params, token, cache, cfg,
+                                          mesh, chunk=1)
+    return lm_head(params, x, cfg, mesh)[:, 0], new_cache
+
+
+def xlstm_param_pspecs(cfg: ArchConfig, mesh: Mesh) -> dict:
+    dp = dp_axes_of(mesh) or None
+    lead2 = (None, None)
+    m_spec = {
+        "ln": P(*lead2, None),
+        "up_proj": P(*lead2, dp, "model"),
+        "wq": P(*lead2, None, None, None),
+        "wk": P(*lead2, None, None, None),
+        "wv": P(*lead2, None, None, None),
+        "w_gates": P(*lead2, "model", None),
+        "gate_bias": P(*lead2, None),
+        "out_norm": P(*lead2, "model"),
+        "down_proj": P(*lead2, "model", dp),
+    }
+    s_spec = {
+        "ln": P(None, None),
+        "w_in": P(None, dp, "model"),
+        "r": P(None, None, None, None),
+        "bias": P(None, "model"),
+        "out_norm": P(None, None),
+        "out_proj": P(None, dp, "model"),
+    }
+    return {
+        "embed": ({"hash_tables": P(None, None, "model")}
+                  if cfg.embedding == "bbit_hash"
+                  else {"table": P(None, "model")}),
+        "final_norm": P(None),
+        "lm_head": P(dp, "model"),
+        "mlstm": m_spec,
+        "slstm": s_spec,
+    }

@@ -1,0 +1,268 @@
+"""Shared transformer building blocks (pure JAX, pjit-friendly).
+
+Conventions:
+  * activations (B, S, D); B shards over the data axes, head/ffn dims
+    over 'model' via weight PartitionSpecs + XLA propagation.
+  * math in cfg.dtype (bf16), accumulation/norms/softmax in fp32.
+  * attention is blockwise (streaming softmax) — O(S·chunk) live
+    scores, causal chunks skipped at trace time (no S×S buffer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.universal_hash import _fmix32
+
+
+# ---------------------------------------------------------------------------
+# Norms / MLP
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# RoPE family: standard / partial (chatglm) / M-RoPE (qwen2-vl)
+# ---------------------------------------------------------------------------
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (..., S) → angles (..., S, dim/2) fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def _apply_rotary(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x (B, S, H, D) rotated pairwise by angles (B, S, D/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def apply_rope(q: jax.Array, k: jax.Array, positions: jax.Array,
+               *, variant: str = "standard", theta: float = 10000.0,
+               mrope_sections: Tuple[int, ...] = (16, 24, 24)
+               ) -> Tuple[jax.Array, jax.Array]:
+    """q (B,S,H,D), k (B,S,KV,D); positions (B,S) or (B,S,3) for mrope."""
+    d = q.shape[-1]
+    if variant == "none":
+        return q, k
+    if variant == "partial":  # chatglm3: rotary on the first half dims
+        dr = d // 2
+        ang = _rope_angles(positions, dr, theta)
+        q = jnp.concatenate(
+            [_apply_rotary(q[..., :dr], ang), q[..., dr:]], axis=-1)
+        k = jnp.concatenate(
+            [_apply_rotary(k[..., :dr], ang), k[..., dr:]], axis=-1)
+        return q, k
+    if variant == "mrope":   # qwen2-vl: 3 position streams over sections
+        # positions (B, S, 3): temporal / height / width ids
+        half = d // 2
+        secs = mrope_sections
+        assert sum(secs) == half, (secs, half)
+        parts = []
+        lo = 0
+        for i, sec in enumerate(secs):
+            ang = _rope_angles(positions[..., i], d, theta)[..., lo:lo + sec]
+            parts.append((ang, lo, sec))
+            lo += sec
+        ang_full = jnp.concatenate([p[0] for p in parts], axis=-1)
+        return _apply_rotary(q, ang_full), _apply_rotary(k, ang_full)
+    # standard
+    ang = _rope_angles(positions, d, theta)
+    return _apply_rotary(q, ang), _apply_rotary(k, ang)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (streaming-softmax) attention with GQA
+# ---------------------------------------------------------------------------
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,Sq,H,D), k (B,Skv,KV,D) → scores (B,H,Sq,Skv) fp32."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    return s.reshape(b, kv * g, sq, k.shape[1]) / jnp.sqrt(jnp.float32(d))
+
+
+def _gqa_values(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p (B,H,Sq,Skv) fp32, v (B,Skv,KV,D) → out (B,Sq,H,D) fp32."""
+    b, h, sq, skv = p.shape
+    kv = v.shape[2]
+    g = h // kv
+    pg = p.reshape(b, kv, g, sq, skv)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pg, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def _attend_block(qc, kc, vc, m, l, acc, q_pos, kv_pos, causal,
+                  kv_valid_len):
+    """One (q-block × kv-block) online-softmax update.
+
+    qc (B,qc,H,D); kc/vc (B,kc,KV,D); m/l (B,H,qc); acc (B,qc,H,D) f32.
+    """
+    s = _gqa_scores(qc, kc)                   # (B,H,qc,kc) fp32
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if kv_valid_len is not None:
+        mask &= (kv_pos < kv_valid_len)[None, :]
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask[None, None], p, 0.0)
+    corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+    l = l * corr + jnp.sum(p, axis=-1)
+    acc = acc * corr.transpose(0, 2, 1)[..., None] + _gqa_values(p, vc)
+    return m_new, l, acc
+
+
+def blockwise_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    impl: str = "loop",
+) -> jax.Array:
+    """Streaming-softmax attention; q (B,Sq,H,D), k/v (B,Skv,KV,D).
+
+    ``q_offset``: absolute position of q[0] (decode/prefill continuation).
+    ``kv_valid_len``: scalar — keys at index ≥ this are masked (cache).
+    ``impl``:
+      * 'loop' — python loops; causally-impossible kv chunks skipped at
+        trace time (compiled FLOPs ≈ triangular optimum).  Used by the
+        roofline probes and all small-seq paths.
+      * 'scan' — lax.scan over q and kv chunks; one block's f32 buffers
+        live at a time (bounded memory for 32k–500k sequences), at the
+        cost of masked-out work the cost model doesn't use anyway.
+    """
+    if impl == "scan":
+        return _blockwise_attention_scan(
+            q, k, v, causal=causal, q_offset=q_offset,
+            kv_valid_len=kv_valid_len, q_chunk=q_chunk,
+            kv_chunk=kv_chunk)
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    n_q = (sq + q_chunk - 1) // q_chunk
+    n_kv = (skv + kv_chunk - 1) // kv_chunk
+
+    outs = []
+    for qi in range(n_q):
+        q_lo = qi * q_chunk
+        q_hi = min(q_lo + q_chunk, sq)
+        qc = q[:, q_lo:q_hi]
+        q_pos = q_offset + q_lo + jnp.arange(q_hi - q_lo)
+        m = jnp.full((b, h, q_hi - q_lo), -jnp.inf, jnp.float32)
+        l = jnp.zeros((b, h, q_hi - q_lo), jnp.float32)
+        acc = jnp.zeros((b, q_hi - q_lo, h, d), jnp.float32)
+        # last kv chunk this q chunk can see (trace-time bound)
+        if causal:
+            max_kv = min(skv, q_offset + q_hi)
+            n_kv_here = (max_kv + kv_chunk - 1) // kv_chunk
+        else:
+            n_kv_here = n_kv
+        for ki in range(n_kv_here):
+            k_lo = ki * kv_chunk
+            k_hi = min(k_lo + kv_chunk, skv)
+            kv_pos = k_lo + jnp.arange(k_hi - k_lo)
+            m, l, acc = _attend_block(
+                qc, k[:, k_lo:k_hi], v[:, k_lo:k_hi], m, l, acc,
+                q_pos, kv_pos, causal, kv_valid_len)
+        denom = jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
+        outs.append((acc / denom).astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def _blockwise_attention_scan(q, k, v, *, causal, q_offset, kv_valid_len,
+                              q_chunk, kv_chunk):
+    """lax.scan × lax.scan variant: O(1) live blocks (see docstring)."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    pad_q = (-sq) % q_chunk
+    pad_kv = (-skv) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq = qp.shape[1] // q_chunk
+    nkv = kp.shape[1] // kv_chunk
+    # padded keys must never win: mask them via kv_valid_len
+    valid = jnp.asarray(skv if kv_valid_len is None else kv_valid_len)
+    qb = jnp.moveaxis(qp.reshape(b, nq, q_chunk, h, d), 1, 0)
+    kb = jnp.moveaxis(kp.reshape(b, nkv, kv_chunk, k.shape[2], d), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(b, nkv, kv_chunk, v.shape[2], d), 1, 0)
+
+    def per_q(carry_q, qi_qc):
+        qi, qc = qi_qc
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def per_kv(carry, ki_kv):
+            ki, kc, vc = ki_kv
+            m, l, acc = carry
+            kv_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            m, l, acc = _attend_block(qc, kc, vc, m, l, acc,
+                                      q_pos, kv_pos, causal, valid)
+            return (m, l, acc), ()
+
+        init = (jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32),
+                jnp.zeros((b, q_chunk, h, d), jnp.float32))
+        (m, l, acc), _unused = jax.lax.scan(
+            per_kv, init, (jnp.arange(nkv), kb, vb))
+        denom = jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
+        return carry_q, (acc / denom).astype(q.dtype)
+
+    _, outs = jax.lax.scan(per_q, 0, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings: dense and b-bit-hashed (the paper's technique, adapted)
+# ---------------------------------------------------------------------------
+def hashed_embed_params(vocab: int, d: int, hash_k: int, hash_b: int,
+                        key, dtype) -> dict:
+    """k tables of 2^b rows replace the (vocab, d) table — the paper's
+    n·b·k storage argument applied to embedding matrices."""
+    del vocab
+    t = jax.random.normal(key, (hash_k, 1 << hash_b, d)) * 0.02
+    return {"hash_tables": t.astype(dtype)}
+
+
+def hashed_embed_lookup(params: dict, tokens: jax.Array,
+                        hash_k: int, hash_b: int) -> jax.Array:
+    """tokens (B,S) int32 → (B,S,D).  code_j(t) = low b bits of h_j(t)."""
+    # deterministic multiply-shift params derived from j (seedless tables)
+    j = jnp.arange(hash_k, dtype=jnp.uint32)
+    a = (j * jnp.uint32(0x9E3779B1) + jnp.uint32(0x85EBCA6B)) | jnp.uint32(1)
+    c = _fmix32(j + jnp.uint32(0x27D4EB2F))
+    t = tokens.astype(jnp.uint32)[..., None]
+    codes = (_fmix32(a * t + c) & jnp.uint32((1 << hash_b) - 1)
+             ).astype(jnp.int32)                       # (B,S,k)
+    tables = params["hash_tables"]                     # (k, 2^b, D)
+    emb = jnp.sum(
+        tables[jnp.arange(hash_k)[None, None], codes], axis=-2)  # (B,S,D)
+    return (emb / jnp.sqrt(jnp.float32(hash_k))).astype(tables.dtype)

@@ -1,0 +1,103 @@
+"""Linear models over b-bit minwise-hashed codes (paper §3).
+
+The weight lives as a (k, 2^b, C) table — the expanded 2^b·k weight
+vector reshaped — and the forward pass is the fused Pallas kernel
+(one-hot MXU contraction) or an XLA gather; both equal the paper's
+explicit-expansion dot product (unit-tested).
+
+Also provides ``VWLinear`` (dense linear over VW sketches) so the
+paper's §5 comparison trains both methods through identical machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class BBitLinearConfig:
+    k: int
+    b: int
+    n_classes: int = 2
+    # 'auto' → Pallas kernel on TPU, XLA gather elsewhere (interpret-mode
+    # Pallas would crawl on CPU); 'always'/'never' force either path.
+    use_kernel: str = "auto"
+    param_dtype: str = "float32"
+    normalize: bool = False      # optional 1/sqrt(k) feature scaling
+
+    @property
+    def n_out(self) -> int:
+        return 1 if self.n_classes == 2 else self.n_classes
+
+    @property
+    def n_weights(self) -> int:
+        return self.k * (1 << self.b) * self.n_out + self.n_out
+
+
+def init_bbit_linear(cfg: BBitLinearConfig, key: Optional[jax.Array] = None):
+    dtype = jnp.dtype(cfg.param_dtype)
+    table = jnp.zeros((cfg.k, 1 << cfg.b, cfg.n_out), dtype)
+    bias = jnp.zeros((cfg.n_out,), dtype)
+    if key is not None:
+        table = 0.01 * jax.random.normal(key, table.shape, dtype)
+    return {"table": table, "bias": bias}
+
+
+def _kernel_enabled(cfg: BBitLinearConfig) -> bool:
+    if cfg.use_kernel == "always" or cfg.use_kernel is True:
+        return True
+    if cfg.use_kernel == "never" or cfg.use_kernel is False:
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def bbit_logits(params, codes: jax.Array, cfg: BBitLinearConfig):
+    """codes uint16/int32 (n, k) → logits (n, n_out) float32."""
+    if _kernel_enabled(cfg) and (1 << cfg.b) <= ops.BBIT_KERNEL_MAX_V:
+        out = ops.bbit_linear(codes.astype(jnp.int32), params["table"])
+    else:
+        out = ref.bbit_linear_fwd(codes, params["table"])
+    if cfg.normalize:
+        out = out / jnp.sqrt(jnp.float32(cfg.k))
+    return out + params["bias"].astype(jnp.float32)
+
+
+def predict_classes(params, codes, cfg: BBitLinearConfig) -> jax.Array:
+    logits = bbit_logits(params, codes, cfg)
+    if cfg.n_classes == 2:
+        return (logits[:, 0] > 0).astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class VWLinearConfig:
+    m: int                       # number of VW buckets
+    n_classes: int = 2
+
+    @property
+    def n_out(self) -> int:
+        return 1 if self.n_classes == 2 else self.n_classes
+
+
+def init_vw_linear(cfg: VWLinearConfig, key: Optional[jax.Array] = None):
+    w = jnp.zeros((cfg.m, cfg.n_out), jnp.float32)
+    if key is not None:
+        w = 0.01 * jax.random.normal(key, w.shape, jnp.float32)
+    return {"w": w, "bias": jnp.zeros((cfg.n_out,), jnp.float32)}
+
+
+def vw_logits(params, sketches: jax.Array, cfg: VWLinearConfig):
+    return sketches @ params["w"] + params["bias"]
+
+
+def vw_predict(params, sketches, cfg: VWLinearConfig) -> jax.Array:
+    logits = vw_logits(params, sketches, cfg)
+    if cfg.n_classes == 2:
+        return (logits[:, 0] > 0).astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,178 @@
+"""Mamba2 (SSD) block — chunked state-space duality, pure JAX.
+
+Faithful to the minimal SSD formulation (Dao & Gu 2024): per head h with
+state size N, input x_t (head_dim P), gate dt_t > 0, decay A < 0:
+
+    h_t = exp(dt_t·A) h_{t-1} + dt_t·B_t x_tᵀ       (N × P matrix state)
+    y_t = C_tᵀ h_t + D x_t
+
+Computed chunk-parallel: intra-chunk quadratic term + inter-chunk
+state recurrence (a short ``lax.scan`` over chunks).  ``n_groups = 1``
+(B/C shared across heads — Mamba2's default; noted in DESIGN.md).
+
+``decode_step`` carries (matrix state, conv buffer) — O(1) per token,
+which is what makes the zamba2/xlstm long_500k cells servable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba2_params(cfg: ArchConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nh, n = ssm_dims(cfg)
+    cw = cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    proj_dim = 2 * d_in + 2 * n + nh      # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_dim)) * d ** -0.5
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cw, d_in + 2 * n)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d_in + 2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., L) → (..., L, L) lower-tri segment sums Σ_{s<i≤t} x_i."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H) fp32 (softplused)
+    a: jax.Array,     # (H,) fp32 negative decay
+    b_in: jax.Array,  # (B, S, N)
+    c_in: jax.Array,  # (B, S, N)
+    h0: jax.Array,    # (B, H, N, P) initial state
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final state (B,H,N,P))."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_in.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    da = dtc * a[None, None, None, :]                # (B,nc,l,H)
+    da_t = jnp.moveaxis(da, -1, -2)                  # (B,nc,H,l)
+    # intra-chunk (diagonal block) term
+    ell = jnp.exp(_segsum(da_t))                     # (B,nc,H,l,l)
+    y_diag = jnp.einsum("bzln,bzmn,bzhlm,bzmhp,bzmh->bzlhp",
+                        cc, bc, ell, xc, dtc)
+    # per-chunk outgoing state
+    da_cum = jnp.cumsum(da_t, axis=-1)               # (B,nc,H,l)
+    decay_out = jnp.exp(da_cum[..., -1:] - da_cum)   # (B,nc,H,l)
+    states = jnp.einsum("bzln,bzhl,bzlhp,bzlh->bzhnp",
+                        bc, decay_out, xc, dtc)      # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(da_cum[..., -1])           # (B,nc,H)
+
+    # inter-chunk recurrence
+    def step(carry, inp):
+        st, dec = inp                                # (B,H,N,P),(B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                            # emit incoming state
+
+    final, h_in = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                  # (B,nc,H,N,P)
+
+    # inter-chunk (off-diagonal) contribution
+    state_decay_in = jnp.exp(da_cum)                 # (B,nc,H,l)
+    y_off = jnp.einsum("bzln,bzhnp,bzhl->bzlhp", cc, h_in, state_decay_in)
+    y = (y_diag + y_off).reshape(bsz, nc * chunk, h, p)[:, :s]
+    return y, final
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None):
+    """Depthwise causal conv; x (B,S,C), w (W,C).  Returns (y, new_state).
+
+    ``state`` (B, W-1, C) carries the last W-1 inputs for decode.
+    """
+    width = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(x_pad[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(width))
+    new_state = x_pad[:, -(width - 1):]
+    return out + b[None, None], new_state
+
+
+def mamba2_forward(
+    params: dict, x: jax.Array, cfg: ArchConfig,
+    *, h0=None, conv0=None, chunk: int = 128,
+):
+    """x (B,S,D) → (y (B,S,D), (state, conv_state)) — train & prefill."""
+    bsz, s, d = x.shape
+    d_in, nh, n = ssm_dims(cfg)
+    proj = x @ params["in_proj"]                      # (B,S,proj)
+    z, xin, b_raw, c_raw, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, b_raw, c_raw], axis=-1)
+    if conv0 is None:
+        conv0 = jnp.zeros((bsz, cfg.ssm_conv_width - 1,
+                           d_in + 2 * n), x.dtype)
+    conv_out, conv_state = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv0)
+    conv_out = jax.nn.silu(conv_out)
+    xs, bs, cs = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    a = -jnp.exp(params["a_log"])
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, n, cfg.ssm_head_dim), jnp.float32)
+    xh = xs.reshape(bsz, s, nh, cfg.ssm_head_dim)
+    y, h_final = ssd_chunked(xh, dt, a, bs, cs, h0, chunk=chunk)
+    y = y + params["d_skip"][None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    # gated RMSNorm (Mamba2's norm-before-out-proj)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(
+        jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+        * params["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    return y @ params["out_proj"], (h_final, conv_state)
+
+
+def mamba2_decode_step(params: dict, x1: jax.Array, cfg: ArchConfig,
+                       state):
+    """Single-token step; x1 (B,1,D); state = (h, conv_state)."""
+    h0, conv0 = state
+    y, new_state = mamba2_forward(params, x1, cfg, h0=h0, conv0=conv0,
+                                  chunk=1)
+    return y, new_state

@@ -1,0 +1,505 @@
+"""Unified decoder-LM covering the dense / MoE / hybrid / ssm / vlm
+families, with train, prefill, and decode entry points.
+
+Execution modes:
+  * ``forward_train``  — full-sequence causal logits (train_4k cells).
+  * ``prefill``        — causal pass returning last-position logits +
+                         cache (prefill_32k cells).
+  * ``decode_step``    — one token against a cache (decode_* cells).
+
+Distribution: pjit auto-sharding steered by ``param_pspecs`` (TP over
+'model', FSDP over the data axes) + ``maybe_shard`` activation
+constraints; MoE uses an explicit ``shard_map`` EP dispatch
+(models/moe.py).  ``scan_layers`` keeps the full-step HLO compact for
+the multi-pod compile; per-layer cost probes (launch/roofline.py)
+recover accurate FLOP counts (XLA cost analysis counts while-loop
+bodies once — measured, see DESIGN.md).
+
+Attention is blockwise with trace-time causal skipping, so compiled
+attention FLOPs track the triangular optimum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (
+    apply_rope, blockwise_attention, rmsnorm, swiglu,
+    hashed_embed_params, hashed_embed_lookup,
+)
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+def dp_axes_of(mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def maybe_shard(x: jax.Array, mesh: Optional[Mesh], *spec) -> jax.Array:
+    """with_sharding_constraint, skipping non-divisible dims."""
+    if mesh is None:
+        return x
+    fixed = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(s if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def remat_wrap(cfg: ArchConfig, fn):
+    """jax.checkpoint with the config's policy ('dots' saves matmul
+    outputs — recompute only elementwise chains in backward)."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# attention + mlp blocks
+# ---------------------------------------------------------------------------
+def init_attn_params(cfg: ArchConfig, key, dtype, with_ffn: bool = True,
+                     cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 10)
+    sc = d ** -0.5
+    p = {
+        "ln1": jnp.ones((d,), dtype),
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * sc).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * sc).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * sc).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d))
+               * (h * hd) ** -0.5).astype(dtype),
+    }
+    if cross:
+        p.update({
+            "ln_x": jnp.ones((d,), dtype),
+            "xq": (jax.random.normal(ks[4], (d, h * hd)) * sc).astype(dtype),
+            "xk": (jax.random.normal(ks[5], (d, kv * hd)) * sc).astype(dtype),
+            "xv": (jax.random.normal(ks[6], (d, kv * hd)) * sc).astype(dtype),
+            "xo": (jax.random.normal(ks[7], (h * hd, d))
+                   * (h * hd) ** -0.5).astype(dtype),
+        })
+    if with_ffn:
+        p["ln2"] = jnp.ones((d,), dtype)
+        if cfg.is_moe and not cross:
+            p["moe"] = moe_lib.init_moe_params(cfg, ks[8], dtype)
+        else:
+            f = cfg.d_ff
+            kf = jax.random.split(ks[8], 3)
+            p["mlp"] = {
+                "w_gate": (jax.random.normal(kf[0], (d, f)) * sc
+                           ).astype(dtype),
+                "w_up": (jax.random.normal(kf[1], (d, f)) * sc).astype(dtype),
+                "w_down": (jax.random.normal(kf[2], (f, d)) * f ** -0.5
+                           ).astype(dtype),
+            }
+    return p
+
+
+def _project_qkv(lp, h, cfg: ArchConfig, mesh, prefix=""):
+    b, s, d = h.shape
+    hd = cfg.head_dim
+    wq, wk, wv = lp[prefix + ("q" if prefix else "wq")], \
+        lp[prefix + ("k" if prefix else "wk")], \
+        lp[prefix + ("v" if prefix else "wv")]
+    q = (h @ wq).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ wk).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ wv).reshape(b, s, cfg.n_kv_heads, hd)
+    dp = dp_axes_of(mesh)
+    q = maybe_shard(q, mesh, dp, None, "model", None)
+    k = maybe_shard(k, mesh, dp, None, "model", None)
+    v = maybe_shard(v, mesh, dp, None, "model", None)
+    return q, k, v
+
+
+def _pad_heads_for_tp(q, k, v, cfg: ArchConfig, mesh):
+    """Group-aware head padding so attention shards over 'model'.
+
+    When n_heads doesn't divide the model axis (granite 24H, qwen 12H on
+    16-way TP) attention silently runs replicated per device.  Exact
+    fix: replicate each kv head r = model/kv times and pad each q-group
+    from g to ceil(g/r) per kv-replica (zero rows, sliced off after).
+    Returns (q', k', v', orig_heads_per_group g, padded group g_new, r).
+    """
+    mdl = mesh.shape.get("model", 1)
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    if h % mdl == 0 or mdl % kv != 0:
+        return q, k, v, None
+    r = mdl // kv
+    g = h // kv
+    g_new = -(-g // r)                 # ceil
+    b, s, _, hd = q.shape
+    qg = q.reshape(b, s, kv, g, hd)
+    pad = r * g_new - g
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    q = qg.reshape(b, s, kv * r * g_new, hd)
+    k = jnp.repeat(k, r, axis=2)
+    v = jnp.repeat(v, r, axis=2)
+    from repro.models.transformer import maybe_shard as _ms
+    dp = dp_axes_of(mesh)
+    q = _ms(q, mesh, dp, None, "model", None)
+    k = _ms(k, mesh, dp, None, "model", None)
+    v = _ms(v, mesh, dp, None, "model", None)
+    return q, k, v, (g, g_new, r)
+
+
+def _unpad_heads(out, pad_info, cfg: ArchConfig):
+    if pad_info is None:
+        return out
+    g, g_new, r = pad_info
+    b, s, hp, hd = out.shape
+    og = out.reshape(b, s, cfg.n_kv_heads, r * g_new, hd)[:, :, :, :g]
+    return og.reshape(b, s, cfg.n_heads, hd)
+
+
+def attn_apply(
+    lp: dict,
+    x: jax.Array,
+    *,
+    cfg: ArchConfig,
+    mesh: Optional[Mesh],
+    positions: jax.Array,
+    mode: str = "train",              # train | prefill | decode
+    cache: Optional[dict] = None,     # {k,v} (B,Smax,KV,hd) for decode
+    cache_len=None,
+    causal: bool = True,
+):
+    """Self-attention block.  Returns (x', new_cache_or_None)."""
+    b, s, d = x.shape
+    h_in = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(lp, h_in, cfg, mesh)
+    q, k = apply_rope(q, k, positions, variant=cfg.rope_variant,
+                      theta=cfg.rope_theta,
+                      mrope_sections=cfg.mrope_sections)
+    pad_info = None
+    if cfg.attn_pad_heads and mesh is not None and mode == "train":
+        q, k, v, pad_info = _pad_heads_for_tp(q, k, v, cfg, mesh)
+    if mode != "train" and cfg.kv_repeat_to > cfg.n_kv_heads:
+        # exact GQA transform: duplicating each KV head r× (and
+        # re-grouping q) lets prefill/decode caches shard over 'model'
+        # instead of the sequence dim (§Perf: removes per-layer psum
+        # softmax merges + resharding copies in decode)
+        r = cfg.kv_repeat_to // cfg.n_kv_heads
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+        k = maybe_shard(k, mesh, dp_axes_of(mesh), None, "model", None)
+        v = maybe_shard(v, mesh, dp_axes_of(mesh), None, "model", None)
+    new_cache = None
+    if mode == "decode":
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        out = blockwise_attention(
+            q, ck, cv, causal=False, kv_valid_len=cache_len + s,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+            impl=cfg.attn_impl)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out = blockwise_attention(
+            q, k, v, causal=causal,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+            impl=cfg.attn_impl)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    out = _unpad_heads(out, pad_info, cfg)
+    y = out.reshape(b, s, cfg.n_heads * cfg.head_dim) @ lp["wo"]
+    y = maybe_shard(y, mesh, dp_axes_of(mesh), None, None)
+    return x + y, new_cache
+
+
+def cross_attn_apply(lp, x, enc_kv, cfg: ArchConfig, mesh):
+    """Cross-attention with precomputed encoder K/V {k,v}."""
+    b, s, d = x.shape
+    h_in = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+    hd = cfg.head_dim
+    q = (h_in @ lp["xq"]).reshape(b, s, cfg.n_heads, hd)
+    out = blockwise_attention(
+        q, enc_kv["k"], enc_kv["v"], causal=False,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        impl=cfg.attn_impl)
+    y = out.reshape(b, s, cfg.n_heads * hd) @ lp["xo"]
+    return x + y
+
+
+def encode_cross_kv(lp, enc_out, cfg: ArchConfig):
+    b, f, d = enc_out.shape
+    hd = cfg.head_dim
+    k = (enc_out @ lp["xk"]).reshape(b, f, cfg.n_kv_heads, hd)
+    v = (enc_out @ lp["xv"]).reshape(b, f, cfg.n_kv_heads, hd)
+    return {"k": k, "v": v}
+
+
+def ffn_apply(lp, x, cfg: ArchConfig, mesh, serving: bool = False):
+    h_in = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        y = moe_lib.moe_ffn(h_in, lp["moe"], cfg, mesh, serving=serving)
+    else:
+        m = lp["mlp"]
+        hidden = jax.nn.silu(h_in @ m["w_gate"]) * (h_in @ m["w_up"])
+        hidden = maybe_shard(hidden, mesh, dp_axes_of(mesh), None, "model")
+        y = hidden @ m["w_down"]
+    y = maybe_shard(y, mesh, dp_axes_of(mesh), None, None)
+    return x + y
+
+
+def dense_layer_apply(lp, x, *, cfg, mesh, positions, mode="train",
+                      cache=None, cache_len=None, causal=True):
+    x, new_cache = attn_apply(lp, x, cfg=cfg, mesh=mesh,
+                              positions=positions, mode=mode, cache=cache,
+                              cache_len=cache_len, causal=causal)
+    x = ffn_apply(lp, x, cfg, mesh, serving=(mode != "train"))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+def init_embed_params(cfg: ArchConfig, key, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    if cfg.embedding == "bbit_hash":
+        emb = hashed_embed_params(cfg.vocab, cfg.d_model, cfg.hash_k,
+                                  cfg.hash_b, k1, dtype)
+    else:
+        emb = {"table": (jax.random.normal(
+            k1, (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype)}
+    return {
+        "embed": emb,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": (jax.random.normal(k2, (cfg.d_model, cfg.vocab))
+                    * cfg.d_model ** -0.5).astype(dtype),
+    }
+
+
+def embed_tokens(params, tokens, cfg: ArchConfig, mesh):
+    # XLA SPMD workaround (verified on jax 0.8.2): a gather whose operand
+    # is 'model'-sharded AND whose indices are data-sharded inside a
+    # grad-accumulation loop trips an invalid dynamic-slice after
+    # partitioning.  Token ids are tiny — replicate them for the gather;
+    # the output constraint re-shards the embeddings immediately after.
+    if mesh is not None:
+        tokens = jax.lax.with_sharding_constraint(
+            tokens, NamedSharding(mesh, P(*([None] * tokens.ndim))))
+    if cfg.embedding == "bbit_hash":
+        x = hashed_embed_lookup(params["embed"], tokens, cfg.hash_k,
+                                cfg.hash_b)
+    else:
+        x = params["embed"]["table"][tokens]
+    return maybe_shard(x, mesh, dp_axes_of(mesh), None, None)
+
+
+def lm_head(params, x, cfg: ArchConfig, mesh):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return maybe_shard(logits, mesh, dp_axes_of(mesh), None, "model")
+
+
+def xent_loss(logits, targets):
+    """Mean CE; logits (B,S,V) any dtype, targets (B,S) int32.
+
+    The gold logit is extracted with a one-hot contraction, not
+    ``take_along_axis`` — a gather along the 'model'-sharded vocab dim
+    makes XLA all-gather the full-V f32 logits (measured: 2.7 GiB per
+    microbatch on kimi-k2), while the one-hot einsum stays sharded.
+    """
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(targets.astype(jnp.int32), logits.shape[-1],
+                            dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", lf, onehot.astype(jnp.float32))
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# positions (standard / mrope-with-vision-prefix)
+# ---------------------------------------------------------------------------
+def build_positions(cfg: ArchConfig, batch: int, seq: int, offset=0):
+    """Absolute positions; ``offset`` is the first token's index (decode)."""
+    idx = jnp.arange(seq, dtype=jnp.int32) + offset     # absolute ids
+    if cfg.rope_variant != "mrope":
+        return jnp.broadcast_to(idx[None, :], (batch, seq))
+    # M-RoPE: the first frontend_len absolute positions are a patch grid
+    # (t=0, h, w); text continues with equal (t,h,w) ids after it.
+    n_vis = cfg.frontend_len if cfg.frontend == "vision_stub" else 0
+    side = max(int(n_vis ** 0.5), 1)
+    t_pos = jnp.where(idx < n_vis, 0, idx - n_vis + 1)
+    h_pos = jnp.where(idx < n_vis, idx // side, idx - n_vis + 1)
+    w_pos = jnp.where(idx < n_vis, idx % side, idx - n_vis + 1)
+    pos3 = jnp.stack([t_pos, h_pos, w_pos], axis=-1)[None]
+    return jnp.broadcast_to(pos3, (batch, seq, 3))
+
+
+# ---------------------------------------------------------------------------
+# the decoder-only families: dense / moe / vlm
+# ---------------------------------------------------------------------------
+def init_decoder_params(cfg: ArchConfig, key) -> dict:
+    dtype = _dtype(cfg)
+    k_emb, k_layers = jax.random.split(key)
+    params = init_embed_params(cfg, k_emb, dtype)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(
+        lambda kk: init_attn_params(cfg, kk, dtype))(keys)
+    return params
+
+
+def _scan_layers(params, x, body, cfg: ArchConfig, ys_in=None):
+    """Runs ``body`` over the stacked layer params (scan or unrolled)."""
+    if cfg.scan_layers:
+        wrapped = remat_wrap(cfg, body)
+        x, ys = jax.lax.scan(wrapped, x,
+                             (params["layers"], ys_in)
+                             if ys_in is not None else params["layers"])
+        return x, ys
+    ys_out = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda p: p[i], params["layers"])
+        yin = None if ys_in is None else jax.tree.map(
+            lambda p: p[i], ys_in)
+        fn = remat_wrap(cfg, body)
+        x, y = fn(x, (lp, yin) if ys_in is not None else lp)
+        ys_out.append(y)
+    ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys_out) \
+        if ys_out and ys_out[0] is not None else None
+    return x, ys
+
+
+def forward_train(params, tokens, cfg: ArchConfig,
+                  mesh: Optional[Mesh] = None,
+                  vision_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """tokens (B,S) → logits (B,S,V)."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg, mesh)
+    if vision_embeds is not None and cfg.frontend == "vision_stub":
+        n_vis = vision_embeds.shape[1]
+        x = jnp.concatenate(
+            [vision_embeds.astype(x.dtype), x[:, n_vis:]], axis=1)
+    positions = build_positions(cfg, b, s)
+
+    def body(xc, lp):
+        xc, _ = dense_layer_apply(lp, xc, cfg=cfg, mesh=mesh,
+                                  positions=positions, mode="train")
+        return xc, None
+
+    x, _ = _scan_layers(params, x, body, cfg)
+    return lm_head(params, x, cfg, mesh)
+
+
+def prefill(params, tokens, cfg: ArchConfig,
+            mesh: Optional[Mesh] = None,
+            vision_embeds: Optional[jax.Array] = None):
+    """Returns (last-position logits (B,V), cache pytree)."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg, mesh)
+    if vision_embeds is not None and cfg.frontend == "vision_stub":
+        n_vis = vision_embeds.shape[1]
+        x = jnp.concatenate(
+            [vision_embeds.astype(x.dtype), x[:, n_vis:]], axis=1)
+    positions = build_positions(cfg, b, s)
+
+    def body(xc, lp):
+        xc, kv = dense_layer_apply(lp, xc, cfg=cfg, mesh=mesh,
+                                   positions=positions, mode="prefill")
+        return xc, kv
+
+    x, cache = _scan_layers(params, x, body, cfg)
+    logits = lm_head(params, x[:, -1:], cfg, mesh)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, token, cache, cache_len, cfg: ArchConfig,
+                mesh: Optional[Mesh] = None):
+    """token (B,1) against cache {k,v} (L,B,Smax,KV,hd).
+
+    Returns (logits (B,V), updated cache).
+    """
+    b = token.shape[0]
+    x = embed_tokens(params, token, cfg, mesh)
+    positions = build_positions(cfg, b, 1, offset=cache_len)
+
+    def body(xc, lp_cache):
+        lp, cache_l = lp_cache
+        xc, new_kv = dense_layer_apply(
+            lp, xc, cfg=cfg, mesh=mesh, positions=positions,
+            mode="decode", cache=cache_l, cache_len=cache_len)
+        return xc, new_kv
+
+    x, new_cache = _scan_layers(params, x, body, cfg, ys_in=cache)
+    logits = lm_head(params, x, cfg, mesh)[:, 0]
+    return logits, new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or _dtype(cfg)
+    kv = max(cfg.n_kv_heads, cfg.kv_repeat_to or 0)
+    shape = (cfg.n_layers, batch, max_len, kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# parameter PartitionSpecs (TP over 'model', FSDP over data axes)
+# ---------------------------------------------------------------------------
+def attn_pspecs(cfg: ArchConfig, dp, stacked: bool = True,
+                cross: bool = False) -> dict:
+    lead = (None,) if stacked else ()
+    mk = lambda *spec: P(*(lead + spec))
+    p = {
+        "ln1": mk(None),
+        "wq": mk(dp, "model"),
+        "wk": mk(dp, "model"),
+        "wv": mk(dp, "model"),
+        "wo": mk("model", dp),
+    }
+    if cross:
+        p.update({"ln_x": mk(None), "xq": mk(dp, "model"),
+                  "xk": mk(dp, "model"), "xv": mk(dp, "model"),
+                  "xo": mk("model", dp)})
+    p["ln2"] = mk(None)
+    if cfg.is_moe and not cross:
+        mp = moe_lib.moe_param_pspecs(cfg, dp_axes=dp if dp else ())
+        p["moe"] = jax.tree.map(
+            lambda s: P(*(lead + tuple(s))), mp,
+            is_leaf=lambda s: isinstance(s, P))
+    else:
+        p["mlp"] = {"w_gate": mk(dp, "model"), "w_up": mk(dp, "model"),
+                    "w_down": mk("model", dp)}
+    return p
+
+
+def decoder_param_pspecs(cfg: ArchConfig, mesh: Mesh) -> dict:
+    dp = dp_axes_of(mesh) or None
+    emb = ({"hash_tables": P(None, None, "model")}
+           if cfg.embedding == "bbit_hash"
+           else {"table": P(None, "model")})
+    return {
+        "embed": emb,
+        "final_norm": P(None),
+        "lm_head": P(dp, "model"),
+        "layers": attn_pspecs(cfg, dp, stacked=cfg.scan_layers or True),
+    }

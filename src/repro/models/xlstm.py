@@ -1,0 +1,222 @@
+"""xLSTM blocks: chunk-parallel mLSTM + recurrent sLSTM (arXiv:2405.04517).
+
+mLSTM (matrix memory, exponential gating) is computed chunkwise-parallel
+exactly like SSD: heavy (q·k)⊙D·v einsums vectorized over all chunks
+*outside* the inter-chunk scan, tiny (C, n, m) state carried through the
+scan — so compiled FLOPs reflect the real work (see DESIGN.md roofline
+notes on while-loop cost accounting).
+
+Stabilized gating (per head, log-space):
+    log f = logsigmoid(f̃),  F_t = Σ_{u≤t} log f_u  (within chunk)
+    m_t   = max(m_in + F_t, max_{s≤t}(F_t − F_s + ĩ_s))
+    C̃_t  = e^{m_in+F_t−m_t} C̃_in + Σ_{s≤t} e^{F_t−F_s+ĩ_s−m_t} v_s k_sᵀ
+    h_t   = (C̃_t q_t) / max(|ñ_t·q_t|, e^{−m_t})
+
+sLSTM (scalar memory, recurrent R h_{t−1} gate inputs) is inherently
+sequential → lax.scan over time; its FLOPs are added analytically by
+the roofline assembler (launch/roofline.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def xlstm_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    head_dim = d_in // cfg.n_heads
+    return d_in, head_dim
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm_params(cfg: ArchConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    d_in, p = xlstm_dims(cfg)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    blockdiag = lambda kk: (jax.random.normal(kk, (h, p, p)) * p ** -0.5
+                            ).astype(dtype)
+    return {
+        "up_proj": (jax.random.normal(ks[0], (d, 2 * d_in)) * d ** -0.5
+                    ).astype(dtype),
+        "wq": blockdiag(ks[1]),
+        "wk": blockdiag(ks[2]),
+        "wv": blockdiag(ks[3]),
+        "w_gates": (jax.random.normal(ks[4], (d_in, 2 * h)) * 0.01
+                    ).astype(jnp.float32),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((h,)), 3.0 * jnp.ones((h,))]).astype(jnp.float32),
+        "out_norm": jnp.ones((d_in,), dtype),
+        "down_proj": (jax.random.normal(ks[5], (d_in, d)) * d_in ** -0.5
+                      ).astype(dtype),
+    }
+
+
+def _mlstm_core(q, k, v, i_raw, f_raw, state, chunk: int):
+    """q/k/v (B,S,H,P); i_raw/f_raw (B,S,H) fp32.
+
+    state = (C (B,H,P,P), n (B,H,P), m (B,H)) — or None.
+    Returns (h (B,S,H,P) fp32, new state).
+    """
+    bsz, s, h, p = q.shape
+    if state is None:
+        state = (jnp.zeros((bsz, h, p, p), jnp.float32),
+                 jnp.zeros((bsz, h, p), jnp.float32),
+                 jnp.full((bsz, h), -1e30, jnp.float32))
+    c0, n0, m0 = state
+    pad = (-s) % chunk
+    if pad:
+        z = lambda x, fill=0.0: jnp.pad(
+            x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
+            constant_values=fill)
+        q, k, v = z(q), z(k), z(v)
+        i_raw = z(i_raw, -1e30)   # padded steps contribute nothing
+        f_raw = z(f_raw, 30.0)    # log f ≈ 0 → state preserved
+    nc = (s + pad) // chunk
+    l = chunk
+    qc = q.reshape(bsz, nc, l, h, p).astype(jnp.float32)
+    kc = k.reshape(bsz, nc, l, h, p).astype(jnp.float32)
+    vc = v.reshape(bsz, nc, l, h, p).astype(jnp.float32)
+    ic = i_raw.reshape(bsz, nc, l, h)
+    fc = f_raw.reshape(bsz, nc, l, h)
+
+    logf = jax.nn.log_sigmoid(fc)                     # (B,nc,l,H)
+    F = jnp.cumsum(logf, axis=2)                      # F_t
+    # pairwise log decay (t ≥ s): F_t − F_s + ĩ_s
+    logD = F[:, :, :, None, :] - F[:, :, None, :, :] \
+        + ic[:, :, None, :, :]                        # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    logD = jnp.where(tri[None, None, :, :, None], logD, -jnp.inf)
+    m_loc = jnp.max(logD, axis=3)                     # (B,nc,t,H)
+
+    # chunk-end operator (for the state scan): decay a = e^{F_l}, and
+    # stabilized end-state contributions with local stabilizer m_end
+    log_end = F[:, :, -1:, :] - F + ic                # (B,nc,l,H)
+    m_end = jnp.max(log_end, axis=2)                  # (B,nc,H)
+    w_end = jnp.exp(log_end - m_end[:, :, None, :])   # (B,nc,l,H)
+    c_add = jnp.einsum("bzlh,bzlhp,bzlhr->bzhpr", w_end, vc, kc)
+    n_add = jnp.einsum("bzlh,bzlhp->bzhp", w_end, kc)
+    a_log = F[:, :, -1, :]                            # (B,nc,H) log decay
+
+    def step(carry, inp):
+        c, n, m = carry
+        c_a, n_a, a_l, m_e = inp
+        m_new = jnp.maximum(m + a_l, m_e)
+        sc_old = jnp.exp(m + a_l - m_new)[..., None, None]
+        sc_add = jnp.exp(m_e - m_new)[..., None, None]
+        c2 = c * sc_old + c_a * sc_add
+        n2 = n * sc_old[..., 0] + n_a * sc_add[..., 0]
+        return (c2, n2, m_new), (c, n, m)             # emit incoming
+
+    (cT, nT, mT), (c_in, n_in, m_in) = jax.lax.scan(
+        step, (c0, n0, m0),
+        (jnp.moveaxis(c_add, 1, 0), jnp.moveaxis(n_add, 1, 0),
+         jnp.moveaxis(a_log, 1, 0), jnp.moveaxis(m_end, 1, 0)))
+    c_in = jnp.moveaxis(c_in, 0, 1)                   # (B,nc,H,P,P)
+    n_in = jnp.moveaxis(n_in, 0, 1)
+    m_in = jnp.moveaxis(m_in, 0, 1)                   # (B,nc,H)
+
+    # final stabilizer per position
+    m_t = jnp.maximum(m_in[:, :, None, :] + F, m_loc)  # (B,nc,t,H)
+    w_intra = jnp.exp(logD - m_t[:, :, :, None, :])    # (B,nc,t,s,H)
+    scores = jnp.einsum("bzthp,bzshp->bztsh", qc, kc)
+    num_intra = jnp.einsum("bztsh,bzshp->bzthp", w_intra * scores, vc)
+    den_intra = jnp.einsum("bztsh,bzshp,bzthp->bzth",
+                           w_intra, kc, qc)
+    g_in = jnp.exp(m_in[:, :, None, :] + F - m_t)      # (B,nc,t,H)
+    num_inter = jnp.einsum("bzhpr,bzthr->bzthp", c_in, qc) * g_in[..., None]
+    den_inter = jnp.einsum("bzhp,bzthp->bzth", n_in, qc) * g_in
+    num = num_intra + num_inter
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+    hout = (num / den[..., None]).reshape(bsz, nc * l, h, p)[:, :s]
+    return hout, (cT, nT, mT)
+
+
+def mlstm_forward(params, x, cfg: ArchConfig, *, state=None,
+                  chunk: int = 128):
+    """x (B,S,D) → (y (B,S,D), state)."""
+    bsz, s, d = x.shape
+    d_in, p = xlstm_dims(cfg)
+    h = cfg.n_heads
+    up = x @ params["up_proj"]
+    xm, z = jnp.split(up, 2, axis=-1)                 # (B,S,d_in) each
+    xh = xm.reshape(bsz, s, h, p)
+    q = jnp.einsum("bshp,hpr->bshr", xh, params["wq"])
+    k = jnp.einsum("bshp,hpr->bshr", xh, params["wk"]) / jnp.sqrt(
+        jnp.float32(p)).astype(x.dtype)
+    v = jnp.einsum("bshp,hpr->bshr", xh, params["wv"])
+    gates = xm.astype(jnp.float32) @ params["w_gates"] \
+        + params["gate_bias"][None, None]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)       # (B,S,H)
+    hout, new_state = _mlstm_core(q, k, v, i_raw, f_raw, state, chunk)
+    y = hout.reshape(bsz, s, d_in).astype(x.dtype) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * params["out_norm"].astype(jnp.float32)).astype(x.dtype)
+    return y @ params["down_proj"], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm_params(cfg: ArchConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 4 * d)) * d ** -0.5
+                 ).astype(dtype),
+        "r": (jax.random.normal(ks[1], (h, p, 4 * p)) * p ** -0.5
+              ).astype(dtype),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": jnp.ones((d,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d, d)) * d ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def slstm_forward(params, x, cfg: ArchConfig, *, state=None):
+    """x (B,S,D) → (y, state); state = (c, n, h, m) each (B, D)-ish."""
+    bsz, s, d = x.shape
+    nh = cfg.n_heads
+    p = d // nh
+    if state is None:
+        zeros = jnp.zeros((bsz, nh, p), jnp.float32)
+        state = (zeros, zeros + 1.0, zeros, zeros - 1e30)
+    pre = (x @ params["w_in"]).astype(jnp.float32) \
+        + params["bias"][None, None]                  # (B,S,4D)
+    pre = pre.reshape(bsz, s, nh, 4 * p)
+
+    r = params["r"].astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, hprev, m = carry
+        rec = jnp.einsum("bhp,hpr->bhr", hprev, r)    # (B,H,4P)
+        zi, ii, fi, oi = jnp.split(inp + rec, 4, axis=-1)
+        zg = jnp.tanh(zi)
+        og = jax.nn.sigmoid(oi)
+        # exponential gating with stabilizer (per head+unit)
+        i_l = ii
+        f_l = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(f_l + m, i_l)
+        ig = jnp.exp(i_l - m_new)
+        fg = jnp.exp(f_l + m - m_new)
+        c2 = fg * c + ig * zg
+        n2 = fg * n + ig
+        h2 = og * c2 / jnp.maximum(n2, 1e-6)
+        return (c2, n2, h2, m_new), h2
+
+    (cT, nT, hT, mT), hs = jax.lax.scan(
+        step, state, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, d).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * params["out_norm"].astype(jnp.float32)).astype(x.dtype)
+    return y @ params["out_proj"], (cT, nT, hT, mT)

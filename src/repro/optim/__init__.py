@@ -1,0 +1,17 @@
+"""Optimizers: SGD/momentum/AdamW (quantizable moments), TRON, schedules."""
+from repro.optim.optimizers import (
+    Optimizer, AdamWConfig, sgd, adamw, make_optimizer,
+)
+from repro.optim.schedules import constant, warmup_cosine, inverse_sqrt, make
+from repro.optim.tron import tron_minimize, TronResult
+from repro.optim.quantized_state import (
+    QuantizedArray, quantize, dequantize, maybe_quantize, maybe_dequantize,
+)
+
+__all__ = [
+    "Optimizer", "AdamWConfig", "sgd", "adamw", "make_optimizer",
+    "constant", "warmup_cosine", "inverse_sqrt", "make",
+    "tron_minimize", "TronResult",
+    "QuantizedArray", "quantize", "dequantize", "maybe_quantize",
+    "maybe_dequantize",
+]

@@ -1,0 +1,136 @@
+"""Minimal optax-style gradient transformations (no external deps).
+
+``Optimizer`` is an (init, update) pair over arbitrary pytrees.
+AdamW supports fp32 / bf16 / int8 moment storage (int8 via blockwise
+absmax quantization — see quantized_state.py) so trillion-parameter
+configs fit HBM; the dtype is a config knob surfaced per-arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quantized_state import maybe_dequantize, maybe_quantize
+
+Schedule = Callable[[jax.Array], jax.Array]
+LR = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _lr_at(lr: LR, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr: LR, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        if momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr_t * g, params, grads)
+            return new, ()
+        vel = jax.tree.map(lambda v, g: momentum * v + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+        else:
+            upd = vel
+        new = jax.tree.map(lambda p, u: p - lr_t * u, params, upd)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    moment_dtype: str = "float32"  # 'float32' | 'bfloat16' | 'int8'
+    quant_block: int = 256
+    # Leaves above this many elements update via lax.map over their
+    # leading axis so the f32-dequantized moments never materialize
+    # whole (a 1T-param stacked MoE leaf would otherwise spike tens of
+    # GB of f32 transients per device — measured in the kimi dry-run).
+    chunked_update_threshold: int = 1 << 28
+
+
+def adamw(lr: LR, cfg: AdamWConfig = AdamWConfig()) -> Optimizer:
+    def init(params):
+        def mk():
+            return jax.tree.map(
+                lambda p: maybe_quantize(jnp.zeros(p.shape, jnp.float32),
+                                         cfg.moment_dtype,
+                                         cfg.quant_block),
+                params)
+        # m and v MUST be distinct buffers: donating a TrainState whose
+        # moments alias the same array aborts with "donate the same
+        # buffer twice" at execute time.
+        return {"m": mk(), "v": mk()}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - cfg.b1 ** t
+        c2 = 1.0 - cfg.b2 ** t
+
+        def upd_core(p, g, m_q, v_q):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * maybe_dequantize(m_q) + (1 - cfg.b1) * g
+            v = cfg.b2 * maybe_dequantize(v_q) + (1 - cfg.b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+            return (newp,
+                    maybe_quantize(m, cfg.moment_dtype, cfg.quant_block),
+                    maybe_quantize(v, cfg.moment_dtype, cfg.quant_block))
+
+        def upd_one(p, g, m_q, v_q):
+            size = 1
+            for d in p.shape:
+                size *= d
+            if size <= cfg.chunked_update_threshold or p.ndim < 2:
+                return upd_core(p, g, m_q, v_q)
+            # chunked: stream the update over the leading (layer) axis
+            return jax.lax.map(
+                lambda args: upd_core(*args), (p, g, m_q, v_q))
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd_one(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: LR, *, weight_decay: float = 0.0,
+                   momentum: float = 0.9,
+                   moment_dtype: str = "float32") -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return sgd(lr, momentum=momentum)
+    if name == "adamw":
+        return adamw(lr, AdamWConfig(weight_decay=weight_decay,
+                                     moment_dtype=moment_dtype))
+    raise ValueError(f"unknown optimizer {name!r}")

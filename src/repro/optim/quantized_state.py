@@ -1,0 +1,89 @@
+"""b-bit quantized optimizer state — the paper's storage idea applied to
+optimizer moments (required to fit the 1T-param kimi-k2 config; see
+DESIGN.md §6).
+
+Moments use ROW-WISE absmax int8: ``q`` keeps the parameter's shape
+(int8) and ``scale`` collapses the last dim — so both quantized payload
+and scales shard under exactly the parameter's PartitionSpec (scale's
+last entry dropped), with no quantization block ever straddling a shard
+boundary.  (Gradient compression uses flat block-256 quantization —
+that runs *inside* shard_map on local shards, where blocks are local.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedArray:
+    """int8 payload (param-shaped) + f32 row scales (last dim = 1)."""
+
+    q: jax.Array          # int8, same shape as the source array
+    scale: jax.Array      # f32, shape[:-1] + (1,)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        q, scale = children
+        return cls(q=q, scale=scale)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return jnp.int8
+
+
+def quantize(x: jax.Array) -> QuantizedArray:
+    xf = x.astype(jnp.float32)
+    if xf.ndim == 0:
+        xf = xf[None]
+        absmax = jnp.max(jnp.abs(xf), keepdims=True)
+        scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return QuantizedArray(q=q[0], scale=scale[0])
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return QuantizedArray(q=q, scale=scale)
+
+
+def dequantize(qa: QuantizedArray) -> jax.Array:
+    if qa.q.ndim == 0:
+        return qa.q.astype(jnp.float32) * qa.scale
+    return qa.q.astype(jnp.float32) * qa.scale
+
+
+def maybe_quantize(x: jax.Array, dtype: str, block: int = 0):
+    """'float32' | 'bfloat16' | 'int8' storage for a moment tensor."""
+    del block
+    if dtype == "int8":
+        return quantize(x)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def maybe_dequantize(x) -> jax.Array:
+    if isinstance(x, QuantizedArray):
+        return dequantize(x)
+    return x.astype(jnp.float32)
+
+
+def moment_pspec(param_spec, moment_dtype: str):
+    """PartitionSpec tree entry for one moment of one parameter."""
+    from jax.sharding import PartitionSpec as P
+    if moment_dtype != "int8":
+        return param_spec
+    entries = tuple(param_spec)
+    scale_spec = P(*(entries[:-1] + (None,))) if entries else P()
+    return QuantizedArray(q=param_spec, scale=scale_spec)

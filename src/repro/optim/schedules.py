@@ -1,0 +1,41 @@
+"""Learning-rate schedules as pure ``step -> lr`` functions."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def inverse_sqrt(peak_lr: float, warmup_steps: int):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay = peak_lr * jnp.sqrt(warmup_steps / jnp.maximum(step, 1.0))
+        return jnp.where(step < warmup_steps, warm, decay)
+    return f
+
+
+def make(name: str, lr: float, total_steps: int = 10000,
+         warmup_steps: int = 100):
+    if name == "constant":
+        return constant(lr)
+    if name == "warmup_cosine":
+        return warmup_cosine(lr, warmup_steps, total_steps)
+    if name == "inverse_sqrt":
+        return inverse_sqrt(lr, warmup_steps)
+    raise ValueError(f"unknown schedule {name!r}")

@@ -1,0 +1,146 @@
+"""TRON — trust-region Newton-CG, LIBLINEAR's primal solver [11, 15].
+
+The paper trains every experiment with LIBLINEAR; its `-s 0` (logistic)
+and `-s 2` (L2-loss SVM) solvers are trust-region Newton methods.  This
+is the same algorithm in JAX: Steihaug conjugate-gradient inner solves
+with Hessian-vector products from ``jax.jvp(jax.grad(f))`` — no Hessian
+materialization, every piece jittable, and data parallelism comes for
+free when the objective closure is pjit'd (gradients/Hv psum inside).
+
+Hyper-parameters follow LIBLINEAR's tron.cpp: eta0/1/2 = 1e-4/0.25/0.75,
+sigma1/2/3 = 0.25/0.5/4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+@dataclasses.dataclass
+class TronResult:
+    params: object
+    fun: float
+    grad_norm: float
+    n_iter: int
+    converged: bool
+    trace: list
+
+
+def _cg_steihaug(hvp, g, delta, cg_tol, cg_max):
+    """Solves H s = -g within ||s|| ≤ delta.  Returns (s, hit_boundary)."""
+    s = jnp.zeros_like(g)
+    r = -g
+    d = r
+    rTr = r @ r
+    g_norm = jnp.sqrt(g @ g)
+    for _ in range(cg_max):
+        if jnp.sqrt(rTr) <= cg_tol * g_norm:
+            return s, False
+        Hd = hvp(d)
+        dHd = d @ Hd
+        if dHd <= 0:
+            tau = _boundary_tau(s, d, delta)
+            return s + tau * d, True
+        alpha = rTr / dHd
+        s_next = s + alpha * d
+        if jnp.sqrt(s_next @ s_next) >= delta:
+            tau = _boundary_tau(s, d, delta)
+            return s + tau * d, True
+        s = s_next
+        r = r - alpha * Hd
+        rTr_new = r @ r
+        d = r + (rTr_new / rTr) * d
+        rTr = rTr_new
+    return s, False
+
+
+def _boundary_tau(s, d, delta):
+    """Positive root of ||s + tau·d|| = delta."""
+    sd = s @ d
+    dd = d @ d
+    ss = s @ s
+    rad = jnp.sqrt(sd * sd + dd * (delta * delta - ss))
+    return (rad - sd) / dd
+
+
+def tron_minimize(
+    fun: Callable,
+    w0,
+    *,
+    hvp: Optional[Callable] = None,
+    max_iter: int = 100,
+    cg_max: int = 30,
+    cg_tol: float = 0.1,
+    grad_tol: float = 1e-4,
+    verbose: bool = False,
+) -> TronResult:
+    """Minimizes ``fun(params)`` (full-batch, deterministic closure).
+
+    ``hvp(params, v) -> pytree`` optionally supplies an analytic
+    Hessian-vector product (required when the forward pass contains
+    custom_vjp kernels, which forward-mode AD cannot pierce; for linear
+    models it is also cheaper: Hv = v + C·Xᵀ(ℓ″(m)⊙Xv)).
+    """
+    flat0, unravel = ravel_pytree(w0)
+
+    def f_flat(w):
+        return fun(unravel(w))
+
+    val_and_grad = jax.jit(jax.value_and_grad(f_flat))
+    val_only = jax.jit(f_flat)
+
+    if hvp is None:
+        @jax.jit
+        def hvp_at(w, v):
+            return jax.jvp(jax.grad(f_flat), (w,), (v,))[1]
+    else:
+        @jax.jit
+        def hvp_at(w, v):
+            return ravel_pytree(hvp(unravel(w), unravel(v)))[0]
+
+    w = flat0
+    f, g = val_and_grad(w)
+    g0_norm = float(jnp.linalg.norm(g))
+    delta = g0_norm
+    trace = [float(f)]
+    eta0, eta1, eta2 = 1e-4, 0.25, 0.75
+    sigma1, sigma2, sigma3 = 0.25, 0.5, 4.0
+
+    converged = False
+    it = 0
+    for it in range(1, max_iter + 1):
+        gnorm = float(jnp.linalg.norm(g))
+        if gnorm <= grad_tol * max(g0_norm, 1e-12):
+            converged = True
+            break
+        s, _ = _cg_steihaug(lambda v: hvp_at(w, v), g, delta, cg_tol, cg_max)
+        f_new = val_only(w + s)
+        gs = float(g @ s)
+        sHs = float(s @ hvp_at(w, s))
+        pred = -(gs + 0.5 * sHs)                 # predicted decrease
+        actual = float(f - f_new)
+        rho = actual / pred if pred > 0 else -1.0
+        snorm = float(jnp.linalg.norm(s))
+        # LIBLINEAR-style delta update
+        if rho < eta0:
+            delta = sigma1 * min(delta, snorm)
+        elif rho < eta1:
+            delta = max(sigma1 * delta, min(snorm, sigma2 * delta))
+        elif rho < eta2:
+            delta = max(sigma1 * delta, min(snorm * sigma3, delta))
+        else:
+            delta = max(delta, min(snorm * sigma3, 1e10))
+        if rho > eta0:
+            w = w + s
+            f, g = val_and_grad(w)
+            trace.append(float(f))
+            if verbose:
+                print(f"tron it={it} f={float(f):.6f} |g|={gnorm:.3e} "
+                      f"delta={delta:.3e} rho={rho:.2f}")
+    return TronResult(params=unravel(w), fun=float(f),
+                      grad_norm=float(jnp.linalg.norm(g)), n_iter=it,
+                      converged=converged, trace=trace)

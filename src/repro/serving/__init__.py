@@ -1,0 +1,5 @@
+"""Serving: dynamic batching + hashed-classifier / LM decode engines."""
+from repro.serving.batcher import DynamicBatcher
+from repro.serving.engine import HashedClassifierEngine, greedy_generate
+
+__all__ = ["DynamicBatcher", "HashedClassifierEngine", "greedy_generate"]

@@ -1,0 +1,72 @@
+"""Dynamic request batching for the serving engine.
+
+Requests queue up; a background worker drains up to ``max_batch`` at a
+time (or whatever arrived within ``max_wait_ms``), pads them into one
+device batch, and resolves per-request futures.  This is the standard
+continuous-batching front half; the paper's inference workload
+(hash → score) is embarrassingly batchable, so throughput scales with
+batch size until the device saturates.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, List, Sequence, Tuple
+
+
+class DynamicBatcher:
+    def __init__(self, run_batch: Callable[[List], List],
+                 max_batch: int = 64, max_wait_ms: float = 2.0):
+        self._run_batch = run_batch
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1000.0
+        self._q: "queue.Queue" = queue.Queue()
+        self._stop = False
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+        self.batches_run = 0
+        self.requests_served = 0
+
+    def submit(self, item) -> Future:
+        fut: Future = Future()
+        self._q.put((item, fut))
+        return fut
+
+    def _drain(self) -> List[Tuple[object, Future]]:
+        items = []
+        try:
+            items.append(self._q.get(timeout=0.05))
+        except queue.Empty:
+            return items
+        deadline = time.perf_counter() + self.max_wait
+        while len(items) < self.max_batch:
+            timeout = deadline - time.perf_counter()
+            if timeout <= 0:
+                break
+            try:
+                items.append(self._q.get(timeout=timeout))
+            except queue.Empty:
+                break
+        return items
+
+    def _loop(self) -> None:
+        while not self._stop:
+            batch = self._drain()
+            if not batch:
+                continue
+            inputs = [b[0] for b in batch]
+            try:
+                outputs = self._run_batch(inputs)
+                for (_, fut), out in zip(batch, outputs):
+                    fut.set_result(out)
+            except Exception as e:  # noqa: BLE001
+                for _, fut in batch:
+                    if not fut.done():
+                        fut.set_exception(e)
+            self.batches_run += 1
+            self.requests_served += len(batch)
+
+    def close(self) -> None:
+        self._stop = True

@@ -1,0 +1,110 @@
+"""Serving engines.
+
+``HashedClassifierEngine`` — the paper's inference path as a service:
+raw sparse documents → k-way min-hash (the one-time representation the
+training side also uses) → b-bit codes → linear scores.  Batched via
+DynamicBatcher; hashing and scoring jit-compiled once per padded shape
+bucket (shape-bucketed padding avoids recompiles).
+
+``greedy_generate`` — reference LM decode loop over any ModelAPI
+(prefill + KV-cache decode), used by the serving example and tests.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.universal_hash import MultiplyShiftHash
+from repro.data.packing import pad_rows
+from repro.models.linear import BBitLinearConfig, bbit_logits
+from repro.serving.batcher import DynamicBatcher
+
+
+def _bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class HashedClassifierEngine:
+    def __init__(self, params, cfg: BBitLinearConfig, seed: int = 0,
+                 max_batch: int = 64, max_wait_ms: float = 2.0):
+        self.params = params
+        self.cfg = cfg
+        self.family = MultiplyShiftHash.make(cfg.k, seed)
+        self._a, self._b = self.family.params()
+
+        from repro.core.minhash import minhash_jnp
+
+        @jax.jit
+        def _score(idx, mask, params):
+            z = minhash_jnp(idx, mask, self._a, self._b)
+            codes = (z & jnp.uint32((1 << cfg.b) - 1)).astype(jnp.int32)
+            logits = bbit_logits(params, codes, cfg)
+            return logits[:, 0] if cfg.n_classes == 2 else logits
+
+        self._score = _score
+        self.batcher = DynamicBatcher(self._run, max_batch=max_batch,
+                                      max_wait_ms=max_wait_ms)
+
+    def _run(self, docs: List[np.ndarray]) -> List[np.ndarray]:
+        idx, nnz = pad_rows(docs, pad_to_multiple=1)
+        m = _bucket(idx.shape[1])
+        if idx.shape[1] < m:
+            idx = np.pad(idx, ((0, 0), (0, m - idx.shape[1])))
+        mask = np.arange(m)[None, :] < nnz[:, None]
+        scores = self._score(jnp.asarray(idx), jnp.asarray(mask),
+                             self.params)
+        return list(np.asarray(scores))
+
+    def submit(self, doc: Sequence[int]):
+        return self.batcher.submit(np.asarray(doc, dtype=np.int64))
+
+    def close(self):
+        self.batcher.close()
+
+
+def greedy_generate(api, params, prompt: np.ndarray, max_new: int,
+                    max_len: Optional[int] = None,
+                    extras: Optional[dict] = None) -> np.ndarray:
+    """Greedy decode via prefill + cached steps; prompt (B, S0) int32."""
+    b, s0 = prompt.shape
+    max_len = max_len or (s0 + max_new)
+    batch = {"tokens": jnp.asarray(prompt)}
+    if extras:
+        batch.update(extras)
+    logits, cache = api.prefill(params, batch)
+    # right-size the cache for generation (KV families only)
+    full = api.init_cache(b, max_len)
+
+    def grow(full_leaf, pre_leaf):
+        if full_leaf.shape == pre_leaf.shape:
+            return pre_leaf.astype(full_leaf.dtype)
+        # find the (single) axis that differs — the sequence axis
+        axes = [i for i, (a, c) in enumerate(
+            zip(full_leaf.shape, pre_leaf.shape)) if a != c]
+        ax = axes[0]
+        return jax.lax.dynamic_update_slice_in_dim(
+            full_leaf, pre_leaf.astype(full_leaf.dtype), 0, axis=ax)
+
+    cache = jax.tree.map(grow, full, cache)
+    out = [int(np.argmax(np.asarray(logits)[i])) for i in range(b)]
+    tokens = [list(row) + [out[i]] for i, row in enumerate(prompt)]
+    cur = jnp.asarray([[t[-1]] for t in tokens], jnp.int32)
+    cache_len = s0
+    for _ in range(max_new - 1):
+        logits, cache = api.decode_step(
+            params, {"token": cur}, cache,
+            jnp.asarray(cache_len, jnp.int32))
+        nxt = np.argmax(np.asarray(logits), axis=-1)
+        for i in range(b):
+            tokens[i].append(int(nxt[i]))
+        cur = jnp.asarray(nxt[:, None].astype(np.int32))
+        cache_len += 1
+    return np.asarray(tokens, dtype=np.int32)

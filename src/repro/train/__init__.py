@@ -1,0 +1,22 @@
+"""Training substrate: losses, steps, metrics, trainers."""
+from repro.train.losses import (
+    logistic, hinge, squared_hinge, softmax_xent, binary_margins,
+    liblinear_objective, mean_loss_fn, LOSSES,
+)
+from repro.train.steps import (
+    TrainState, init_state, build_train_step, build_microbatched_train_step,
+)
+from repro.train.metrics import accuracy, batched_accuracy
+from repro.train.linear_trainer import (
+    FitResult, train_bbit_liblinear, train_vw_liblinear, train_bbit_sgd,
+)
+
+__all__ = [
+    "logistic", "hinge", "squared_hinge", "softmax_xent", "binary_margins",
+    "liblinear_objective", "mean_loss_fn", "LOSSES",
+    "TrainState", "init_state", "build_train_step",
+    "build_microbatched_train_step",
+    "accuracy", "batched_accuracy",
+    "FitResult", "train_bbit_liblinear", "train_vw_liblinear",
+    "train_bbit_sgd",
+]

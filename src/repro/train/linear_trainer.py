@@ -1,0 +1,146 @@
+"""High-level trainers reproducing the paper's LIBLINEAR experiments.
+
+``train_bbit_liblinear``   — TRON on the exact Eq. (8)/(9) objective over
+                             b-bit hashed codes (the paper's setup).
+``train_vw_liblinear``     — same solver over VW sketches (paper §5.4).
+``train_bbit_sgd``         — minibatch SGD/AdamW path for the scale-out
+                             scenario (distributed, checkpointable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.linear import (
+    BBitLinearConfig, VWLinearConfig,
+    init_bbit_linear, init_vw_linear,
+    bbit_logits, vw_logits, predict_classes, vw_predict,
+)
+from repro.optim.tron import tron_minimize
+from repro.optim.optimizers import make_optimizer
+from repro.train.losses import (
+    liblinear_objective, mean_loss_fn, LOSS_D2,
+)
+from repro.train.metrics import accuracy
+from repro.train.steps import init_state, build_train_step
+
+
+def make_liblinear_hvp(forward, loss: str, C: float, codes, labels):
+    """Analytic Hv = v + C·Xᵀ(ℓ″(m)⊙Xv) for models *linear* in params.
+
+    Works through custom_vjp kernels (uses only forward + VJP, no
+    forward-mode AD) and matches LIBLINEAR's TRON Hessian exactly.
+    """
+    d2_fn = LOSS_D2[loss]
+    y = 2.0 * labels.astype(jnp.float32) - 1.0
+
+    def hvp(params, v):
+        logits, vjp_fn = jax.vjp(lambda p: forward(p, codes), params)
+        m = y * logits[:, 0]
+        d2 = d2_fn(m)
+        jv = forward(v, codes)[:, 0]        # J·v — forward is linear
+        hv_logits = (C * d2 * jv)[:, None]
+        hv = vjp_fn(hv_logits)[0]
+        return jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) + b.astype(jnp.float32),
+            v, hv)
+
+    return hvp
+
+
+@dataclasses.dataclass
+class FitResult:
+    params: object
+    train_seconds: float
+    train_acc: float
+    test_acc: float
+    n_iter: int
+    objective: float
+
+
+def train_bbit_liblinear(
+    codes_tr: np.ndarray, y_tr: np.ndarray,
+    codes_te: np.ndarray, y_te: np.ndarray,
+    cfg: BBitLinearConfig, *,
+    loss: str = "logistic",      # 'logistic' (Eq. 9) | 'squared_hinge' (Eq. 8)
+    C: float = 1.0,
+    max_iter: int = 60,
+) -> FitResult:
+    fwd = lambda p, c: bbit_logits(p, c, cfg)
+    obj = liblinear_objective(fwd, loss, C)
+    codes_tr_j = jnp.asarray(codes_tr)
+    y_tr_j = jnp.asarray(y_tr)
+    w0 = init_bbit_linear(cfg)
+    hvp = make_liblinear_hvp(fwd, loss, C, codes_tr_j, y_tr_j)
+    t0 = time.perf_counter()
+    res = tron_minimize(lambda p: obj(p, codes_tr_j, y_tr_j), w0,
+                        hvp=hvp, max_iter=max_iter)
+    dt = time.perf_counter() - t0
+    tr_acc = accuracy(predict_classes(res.params, codes_tr_j, cfg), y_tr)
+    te_acc = accuracy(
+        predict_classes(res.params, jnp.asarray(codes_te), cfg), y_te)
+    return FitResult(res.params, dt, tr_acc, te_acc, res.n_iter, res.fun)
+
+
+def train_vw_liblinear(
+    sk_tr: np.ndarray, y_tr: np.ndarray,
+    sk_te: np.ndarray, y_te: np.ndarray,
+    cfg: VWLinearConfig, *,
+    loss: str = "logistic",
+    C: float = 1.0,
+    max_iter: int = 60,
+) -> FitResult:
+    fwd = lambda p, x: vw_logits(p, x, cfg)
+    obj = liblinear_objective(fwd, loss, C)
+    x_tr = jnp.asarray(sk_tr)
+    y_tr_j = jnp.asarray(y_tr)
+    w0 = init_vw_linear(cfg)
+    hvp = make_liblinear_hvp(fwd, loss, C, x_tr, y_tr_j)
+    t0 = time.perf_counter()
+    res = tron_minimize(lambda p: obj(p, x_tr, y_tr_j), w0,
+                        hvp=hvp, max_iter=max_iter)
+    dt = time.perf_counter() - t0
+    tr_acc = accuracy(vw_predict(res.params, x_tr, cfg), y_tr)
+    te_acc = accuracy(vw_predict(res.params, jnp.asarray(sk_te), cfg), y_te)
+    return FitResult(res.params, dt, tr_acc, te_acc, res.n_iter, res.fun)
+
+
+def train_bbit_sgd(
+    codes_tr: np.ndarray, y_tr: np.ndarray,
+    codes_te: np.ndarray, y_te: np.ndarray,
+    cfg: BBitLinearConfig, *,
+    loss: str = "logistic",
+    optimizer: str = "adamw",
+    lr: float = 1e-2,
+    l2: float = 1e-6,
+    epochs: int = 5,
+    batch_size: int = 256,
+    seed: int = 0,
+) -> FitResult:
+    fwd = lambda p, c: bbit_logits(p, c, cfg)
+    loss_fn = mean_loss_fn(fwd, loss, l2=l2)
+    opt = make_optimizer(optimizer, lr)
+    state = init_state(init_bbit_linear(cfg, jax.random.key(seed)), opt)
+    step_fn = build_train_step(loss_fn, opt)
+    n = codes_tr.shape[0]
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    steps = 0
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        for lo in range(0, n - batch_size + 1, batch_size):
+            sel = order[lo: lo + batch_size]
+            state, _ = step_fn(state, jnp.asarray(codes_tr[sel]),
+                               jnp.asarray(y_tr[sel]))
+            steps += 1
+    dt = time.perf_counter() - t0
+    tr_acc = accuracy(
+        predict_classes(state.params, jnp.asarray(codes_tr), cfg), y_tr)
+    te_acc = accuracy(
+        predict_classes(state.params, jnp.asarray(codes_te), cfg), y_te)
+    return FitResult(state.params, dt, tr_acc, te_acc, steps, float("nan"))

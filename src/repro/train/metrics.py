@@ -1,0 +1,17 @@
+"""Evaluation metrics."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def accuracy(pred: np.ndarray, labels: np.ndarray) -> float:
+    return float(np.mean(np.asarray(pred) == np.asarray(labels)))
+
+
+def batched_accuracy(predict_fn, inputs: np.ndarray, labels: np.ndarray,
+                     batch: int = 4096) -> float:
+    hits = 0
+    for lo in range(0, inputs.shape[0], batch):
+        p = np.asarray(predict_fn(inputs[lo: lo + batch]))
+        hits += int((p == labels[lo: lo + batch]).sum())
+    return hits / inputs.shape[0]

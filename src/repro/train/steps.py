@@ -1,0 +1,80 @@
+"""Jitted train/eval step builders shared by linear and LM training."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+def init_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def build_train_step(loss_fn: Callable, optimizer: Optimizer,
+                     donate: bool = True):
+    """loss_fn(params, *batch) -> scalar.  Returns jitted step fn."""
+
+    def step(state: TrainState, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, *batch)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step)
+        return TrainState(new_params, new_opt, state.step + 1), loss
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def build_microbatched_train_step(loss_fn: Callable, optimizer: Optimizer,
+                                  n_micro: int):
+    """Gradient accumulation over n_micro microbatches via lax.scan.
+
+    Batch arrays must have a leading dim divisible by n_micro; the
+    scan keeps only one microbatch's activations live at a time —
+    the activation-memory knob used by the big-arch dry-runs.
+    """
+
+    def step(state: TrainState, *batch):
+        def reshape(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro)
+                             + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+        grad_fn = jax.value_and_grad(loss_fn)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            loss, g = grad_fn(state.params, *mb)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, loss_acc + loss), ()
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+        (gsum, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step)
+        return (TrainState(new_params, new_opt, state.step + 1),
+                loss_sum / n_micro)
+
+    return jax.jit(step, donate_argnums=(0,))

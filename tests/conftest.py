@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no global XLA device-count flags here — smoke
+tests and benches must see the real single CPU device; multi-device
+tests spawn subprocesses with their own XLA_FLAGS."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def repo_src() -> str:
+    return os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 900):
+    """Runs python code in a fresh process with N fake XLA devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout[-4000:]}\n"
+        f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout

@@ -1,0 +1,115 @@
+"""Data pipeline: synthetic rcv1 construction, LibSVM IO, loaders."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import resemblance
+from repro.data import (
+    SynthRcv1Config, generate_arrays, write_shards, read_shards,
+    write_libsvm, read_libsvm, pad_rows, preprocess_and_save, load_hashed,
+    preprocess_rows, HashedCodesLoader,
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    cfg = SynthRcv1Config(seed=7, max_pairs_per_doc=4000,
+                          max_triples_per_doc=2000)
+    return generate_arrays(150, cfg), cfg
+
+
+def test_expansion_structure(corpus):
+    (rows, labels), cfg = corpus
+    lens = np.array([len(r) for r in rows])
+    # heavy tail: mean well above median (paper Table 1: 3051 vs 12062)
+    assert lens.mean() > 1.3 * np.median(lens)
+    # expanded ids exceed the unigram space (pair/triple features exist)
+    assert max(r.max() for r in rows) > cfg.vocab
+    # deterministic regeneration
+    rows2, labels2 = generate_arrays(150, SynthRcv1Config(
+        seed=7, max_pairs_per_doc=4000, max_triples_per_doc=2000))
+    assert all(np.array_equal(a, b) for a, b in zip(rows, rows2))
+    assert np.array_equal(labels, labels2)
+
+
+def test_resemblance_separability(corpus):
+    (rows, labels), _ = corpus
+    rng = np.random.default_rng(0)
+    same, diff = [], []
+    for _ in range(200):
+        i, j = rng.integers(0, len(rows), 2)
+        if i == j:
+            continue
+        r = resemblance(set(rows[i]), set(rows[j]))
+        (same if labels[i] == labels[j] else diff).append(r)
+    assert np.mean(same) > 2 * max(np.mean(diff), 1e-9)
+
+
+def test_libsvm_roundtrip(tmp_path, corpus):
+    (rows, labels), _ = corpus
+    paths = write_shards(str(tmp_path), rows[:40], labels[:40], n_shards=3)
+    r2, l2 = read_shards(paths)
+    assert sorted(map(tuple, r2)) == sorted(map(tuple, rows[:40]))
+    assert sorted(l2) == sorted(labels[:40])
+
+
+def test_libsvm_values_roundtrip(tmp_path):
+    p = str(tmp_path / "v.libsvm")
+    rows = [np.array([1, 5, 9]), np.array([2])]
+    vals = [np.array([0.5, 1.25, -2.0]), np.array([3.0])]
+    write_libsvm(p, rows, [1, 0], values=vals)
+    out = list(read_libsvm(p, with_values=True))
+    assert np.array_equal(out[0][0], rows[0])
+    assert np.allclose(out[0][2], vals[0])
+
+
+def test_pad_rows_contiguous():
+    idx, nnz = pad_rows([np.array([3, 1 << 33]), np.array([7, 8, 9])],
+                        pad_to_multiple=4)
+    assert idx.shape == (2, 4)
+    assert nnz.tolist() == [2, 3]
+    assert idx[0, 0] == 3 and idx[0, 1] == ((1 << 33) & ((1 << 31) - 1))
+
+
+def test_hashed_dataset_roundtrip(tmp_path, corpus):
+    (rows, labels), _ = corpus
+    d = str(tmp_path / "h")
+    preprocess_and_save(d, rows, labels, k=32, b=6, n_shards=2)
+    codes, l2, meta = load_hashed(d)
+    assert codes.shape == (len(rows), 32) and codes.max() < 64
+    # hashing is deterministic given (family, seed)
+    codes2 = preprocess_rows(rows, k=32, b=6)
+    assert np.array_equal(codes, codes2)
+
+
+def test_loader_restart_and_sharding():
+    codes = (np.arange(2000) % 251).astype(np.uint16).reshape(200, 10)
+    y = np.arange(200, dtype=np.int32)
+    full = list(HashedCodesLoader(codes, y, 16, seed=3).batches(0, epochs=2))
+    resumed = list(HashedCodesLoader(codes, y, 16, seed=3).batches(9,
+                                                                   epochs=2))
+    for a, b in zip(full[9:], resumed):
+        assert a[0] == b[0]
+        assert np.array_equal(a[1], b[1]) and np.array_equal(a[2], b[2])
+    # host sharding partitions each epoch's rows disjointly
+    l0 = HashedCodesLoader(codes, y, 16, seed=3, shard_id=0, num_shards=2)
+    l1 = HashedCodesLoader(codes, y, 16, seed=3, shard_id=1, num_shards=2)
+    ids0 = {int(r[0]) for _, _, r in l0.batches(0, epochs=1)
+            for r in [r]}  # labels are unique row ids
+    rows0 = set()
+    for _, _, lab in l0.batches(0, epochs=1):
+        rows0.update(lab.tolist())
+    rows1 = set()
+    for _, _, lab in l1.batches(0, epochs=1):
+        rows1.update(lab.tolist())
+    assert not rows0 & rows1
+    # straggler hedging covers the slow worker's rows (modulo at most
+    # one drop-remainder batch of the merged stream)
+    lb = HashedCodesLoader(codes, y, 16, seed=3, shard_id=0, num_shards=2,
+                           backup_of=1)
+    rows_b = set()
+    for _, _, lab in lb.batches(0, epochs=1):
+        rows_b.update(lab.tolist())
+    assert rows0 <= rows_b
+    assert len(rows1 - rows_b) < 16

@@ -1,0 +1,136 @@
+"""Property tests for every closed-form law the paper states.
+
+Monte-Carlo estimates from the *actual hashing code* are checked
+against Eqs (1)/(2), Theorem 1 (3)-(5), (6)/(7), (12)/(13), (15)/(16).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    SparseBatch, MultiplyShiftHash, minhash_batch, bbit_codes,
+    resemblance, vw_hash_batch, vw_inner_product,
+    rp_project_batch, rp_inner_product,
+)
+from repro.core.estimators import (
+    BBitLaw, bbit_law_sparse_limit, var_rm, var_rp, var_vw,
+    storage_equivalent_k_vw,
+)
+
+
+def _make_pair(rng, dim, f1, f2, overlap):
+    common = rng.choice(dim, size=f1 + f2 - overlap, replace=False)
+    s1 = set(int(x) for x in common[:f1])
+    s2 = set(int(x) for x in common[f1 - overlap:])
+    return s1, s2
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    f1=st.integers(80, 400), f2=st.integers(80, 400),
+    frac=st.floats(0.1, 0.9), seed=st.integers(0, 2**31 - 1),
+)
+def test_minwise_estimator_unbiased(f1, f2, frac, seed):
+    rng = np.random.default_rng(seed)
+    overlap = max(1, int(frac * min(f1, f2)))
+    s1, s2 = _make_pair(rng, 1 << 16, f1, f2, overlap)
+    r = resemblance(s1, s2)
+    k = 1500
+    fam = MultiplyShiftHash.make(k, seed)
+    batch = SparseBatch.from_lists([sorted(s1), sorted(s2)], dim=1 << 16)
+    z = np.asarray(minhash_batch(batch, fam))
+    r_hat = float(np.mean(z[0] == z[1]))
+    # Eq (1)/(2): within 5 sigma
+    assert abs(r_hat - r) < 5 * np.sqrt(var_rm(r, k)) + 1e-9
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8])
+def test_theorem1_collision_law(b):
+    rng = np.random.default_rng(b)
+    s1, s2 = _make_pair(rng, 1 << 16, 500, 400, 200)
+    r = resemblance(s1, s2)
+    k = 3000
+    fam = MultiplyShiftHash.make(k, seed=7)
+    batch = SparseBatch.from_lists([sorted(s1), sorted(s2)], dim=1 << 16)
+    z = np.asarray(minhash_batch(batch, fam))
+    codes = np.asarray(bbit_codes(z, b))
+    pb_hat = float(np.mean(codes[0] == codes[1]))
+    # hash range is 2^32 → r1, r2 ≈ 0: the sparse limit Eq (5) applies
+    pb_theory = bbit_law_sparse_limit(b)(r)
+    sigma = np.sqrt(pb_theory * (1 - pb_theory) / k)
+    assert abs(pb_hat - pb_theory) < 5 * sigma
+    # full Theorem 1 with the true (tiny) sparsities agrees with Eq (5)
+    law = BBitLaw(b=b, r1=len(s1) / 2**32, r2=len(s2) / 2**32)
+    assert abs(law.pb(r) - pb_theory) < 1e-6
+
+
+def test_var_rb_formula_matches_simulation():
+    rng = np.random.default_rng(0)
+    s1, s2 = _make_pair(rng, 1 << 16, 300, 300, 150)
+    r = resemblance(s1, s2)
+    b, k = 2, 200
+    law = BBitLaw(b=b, r1=0.0, r2=0.0)
+    batch = SparseBatch.from_lists([sorted(s1), sorted(s2)], dim=1 << 16)
+    r_hats = []
+    for seed in range(400):
+        fam = MultiplyShiftHash.make(k, seed)
+        z = np.asarray(minhash_batch(batch, fam))
+        codes = np.asarray(bbit_codes(z, b))
+        pb_hat = float(np.mean(codes[0] == codes[1]))
+        r_hats.append(law.r_hat(pb_hat))
+    emp_mean = np.mean(r_hats)
+    emp_var = np.var(r_hats)
+    assert abs(emp_mean - r) < 0.02          # Eq (6) unbiased
+    theory = law.var_rb(r, k)
+    assert 0.6 * theory < emp_var < 1.6 * theory   # Eq (7)
+
+
+@pytest.mark.parametrize("s", [1, 3])
+def test_vw_unbiased_and_variance(s):
+    rng = np.random.default_rng(1)
+    s1, s2 = _make_pair(rng, 4096, 500, 400, 250)
+    u1 = np.zeros(4096, np.float32); u1[list(s1)] = 1
+    u2 = np.zeros(4096, np.float32); u2[list(s2)] = 1
+    a = float(u1 @ u2)
+    batch = SparseBatch.from_lists([sorted(s1), sorted(s2)], dim=4096)
+    ests = [float(vw_inner_product(*vw_hash_batch(batch, m=256, s=s,
+                                                  seed=i)))
+            for i in range(300)]
+    se = np.sqrt(var_vw(u1, u2, 256, s) / 300)
+    assert abs(np.mean(ests) - a) < 5 * se       # Eq (15)
+    emp = np.var(ests)
+    theory = var_vw(u1, u2, 256, s)              # Eq (16)
+    assert 0.5 * theory < emp < 1.8 * theory
+
+
+def test_rp_unbiased_and_variance():
+    rng = np.random.default_rng(2)
+    s1, s2 = _make_pair(rng, 4096, 600, 500, 300)
+    u1 = np.zeros(4096, np.float32); u1[list(s1)] = 1
+    u2 = np.zeros(4096, np.float32); u2[list(s2)] = 1
+    a = float(u1 @ u2)
+    batch = SparseBatch.from_lists([sorted(s1), sorted(s2)], dim=4096)
+    ests = [float(rp_inner_product(*rp_project_batch(batch, k=256,
+                                                     seed=i)))
+            for i in range(300)]
+    se = np.sqrt(var_rp(u1, u2, 256, 1.0) / 300)
+    assert abs(np.mean(ests) - a) < 5 * se       # Eq (12)
+    emp = np.var(ests)
+    theory = var_rp(u1, u2, 256, 1.0)            # Eq (13)
+    assert 0.5 * theory < emp < 1.8 * theory
+
+
+def test_vw_equals_rp_variance_at_s1():
+    """Paper §5.2: at s=1, Eq (16) reduces to Eq (13)."""
+    rng = np.random.default_rng(3)
+    u1 = rng.normal(size=512).astype(np.float32)
+    u2 = rng.normal(size=512).astype(np.float32)
+    assert np.isclose(var_vw(u1, u2, 64, 1.0), var_rp(u1, u2, 64, 1.0))
+
+
+def test_storage_equivalence_math():
+    """Paper §5.3: same-storage comparison used in Figs 5-6."""
+    assert storage_equivalent_k_vw(200, 8) == 50     # 1600 bits / 32
+    assert storage_equivalent_k_vw(30, 12) == 11

@@ -1,0 +1,64 @@
+"""Expansion identities (paper §3) + §5.4 compact indexing."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.expansion import (
+    expand, expansion_offsets, linear_forward, pb_hat, compact_index,
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 8), k=st.integers(1, 24), b=st.integers(1, 8),
+       o=st.integers(1, 4), seed=st.integers(0, 1 << 30))
+def test_gather_forward_equals_expansion_dot(n, k, b, o, seed):
+    """w·x over the virtual 2^b·k expansion == k gathers (paper §3)."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 1 << b, (n, k)).astype(np.uint16))
+    w = jnp.asarray(rng.normal(size=(k, 1 << b, o)).astype(np.float32))
+    lhs = expand(codes, b) @ w.reshape(k * (1 << b), o)
+    rhs = linear_forward(codes, w, b)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-4)
+
+
+def test_expansion_has_exactly_k_ones():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 16, (5, 30)).astype(np.uint16))
+    e = expand(codes, 4)
+    assert np.all(np.asarray(e.sum(axis=1)) == 30)
+    # inner product = k · P̂_b  (paper §2: the estimator as a dot product)
+    c2 = jnp.asarray(rng.integers(0, 16, (5, 30)).astype(np.uint16))
+    e2 = expand(c2, 4)
+    dots = np.asarray(jnp.sum(e * e2, axis=1))
+    pb = np.asarray(pb_hat(codes, c2))
+    np.testing.assert_allclose(dots, 30 * pb, atol=1e-5)
+
+
+def test_expansion_offsets_disjoint_blocks():
+    codes = jnp.asarray([[0, 3], [1, 2]], dtype=jnp.uint16)
+    offs = np.asarray(expansion_offsets(codes, 2))
+    assert offs.tolist() == [[0, 7], [1, 6]]
+
+
+def test_compact_index_preserves_inner_products():
+    """§5.4: VW over the virtual expansion is unbiased for k·P̂_b."""
+    rng = np.random.default_rng(1)
+    k, b, m = 64, 12, 512
+    c1 = jnp.asarray(rng.integers(0, 1 << b, (1, k)).astype(np.uint16))
+    # second code vector agreeing on exactly half the positions
+    c2 = np.asarray(c1).copy()
+    flip = rng.choice(k, size=k // 2, replace=False)
+    c2[0, flip] = (c2[0, flip] + 1) % (1 << b)
+    c2 = jnp.asarray(c2)
+    true_dot = float(k * pb_hat(c1, c2)[0])
+    ests = []
+    for seed in range(300):
+        s1 = compact_index(c1.astype(jnp.int32), b, m,
+                           seed_a=seed * 2 + 1, seed_b=seed * 7 + 3)
+        s2 = compact_index(c2.astype(jnp.int32), b, m,
+                           seed_a=seed * 2 + 1, seed_b=seed * 7 + 3)
+        ests.append(float(jnp.sum(s1 * s2)))
+    assert abs(np.mean(ests) - true_dot) < 0.15 * k

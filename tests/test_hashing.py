@@ -1,0 +1,106 @@
+"""Hash-family exactness/determinism + the paper's §7 claim (2-universal
+hashing ≈ true permutations for learning)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    SparseBatch, ModPrimeHash, MultiplyShiftHash, PermutationHash,
+    make_hash_family, minhash_batch, minhash_numpy, bbit_codes,
+    pack_codes, unpack_codes, storage_bits, resemblance,
+)
+from repro.core.universal_hash import MERSENNE61, _mulmod_mersenne61
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=st.integers(0, int(MERSENNE61) - 1),
+       b=st.integers(0, (1 << 31) - 1))
+def test_mersenne_mulmod_exact(a, b):
+    got = _mulmod_mersenne61(np.uint64(a), np.uint64(b))
+    assert int(got) == (a * b) % int(MERSENNE61)
+
+
+def test_mod_prime_matches_eq17():
+    """h(t) = (c1 + c2·t) mod p — exact vs python big ints."""
+    fam = ModPrimeHash.make(16, seed=5)
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, 1 << 31, size=64)
+    got = fam(t)
+    p = int(MERSENNE61)
+    for i, tt in enumerate(t):
+        for j in range(16):
+            want = (int(fam.c1[j]) + int(fam.c2[j]) * int(tt)) % p
+            assert int(got[i, j]) == want
+
+
+def test_families_deterministic():
+    for kind in ("multiply_shift", "mod_prime"):
+        f1 = make_hash_family(kind, 8, seed=3)
+        f2 = make_hash_family(kind, 8, seed=3)
+        t = np.arange(100)
+        if kind == "multiply_shift":
+            assert np.array_equal(np.asarray(f1(jnp.asarray(t))),
+                                  np.asarray(f2(jnp.asarray(t))))
+        else:
+            assert np.array_equal(f1(t), f2(t))
+
+
+def test_multiply_shift_low_bits_uniform():
+    """b-bit codes use the LOW bits — they must be uniform (fmix32)."""
+    fam = MultiplyShiftHash.make(4, seed=11)
+    h = np.asarray(fam(jnp.arange(200_000, dtype=jnp.int32)))
+    for b in (1, 2, 4):
+        codes = h & ((1 << b) - 1)
+        counts = np.stack([np.bincount(codes[:, j], minlength=1 << b)
+                           for j in range(4)])
+        expected = 200_000 / (1 << b)
+        chi2 = ((counts - expected) ** 2 / expected).sum(axis=1)
+        # dof = 2^b - 1; generous 99.9% bound per column
+        assert (chi2 < 10 + 6 * (1 << b)).all(), chi2
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 20), k=st.integers(1, 64),
+       b=st.integers(1, 16), seed=st.integers(0, 1 << 30))
+def test_pack_unpack_roundtrip(n, k, b, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << b, size=(n, k)).astype(np.uint16)
+    packed = pack_codes(codes, b)
+    assert packed.shape[1] == (k * b + 7) // 8    # exactly n·b·k bits
+    assert np.array_equal(unpack_codes(packed, k, b), codes)
+    assert storage_bits(n, k, b) == n * b * k
+
+
+def test_universal_hashing_vs_permutations_fig8():
+    """Paper Fig 8: 2-universal families track true permutations.
+
+    Compared on the resemblance-estimation task itself (the quantity
+    learning quality is driven by): both families' R̂ estimates must
+    agree with the exact R within matched Monte-Carlo error.
+    """
+    dim = 4096
+    rng = np.random.default_rng(4)
+    common = rng.choice(dim, size=700, replace=False)
+    s1, s2 = set(common[:500]), set(common[200:])
+    r = resemblance(s1, s2)
+    rows = [sorted(s1), sorted(s2)]
+    idx = np.zeros((2, 512), np.int32)
+    mask = np.zeros((2, 512), bool)
+    for i, row in enumerate(rows):
+        idx[i, :len(row)] = row
+        mask[i, :len(row)] = True
+    k = 600
+    est = {}
+    for kind in ("permutation", "mod_prime"):
+        fam = make_hash_family(kind, k, seed=9, dim=dim)
+        z = minhash_numpy(idx, mask, fam)
+        est[kind] = float(np.mean(z[0] == z[1]))
+    fam = MultiplyShiftHash.make(k, seed=9)
+    batch = SparseBatch.from_lists(rows, dim=dim)
+    z = np.asarray(minhash_batch(batch, fam))
+    est["multiply_shift"] = float(np.mean(z[0] == z[1]))
+    sigma = np.sqrt(r * (1 - r) / k)
+    for kind, e in est.items():
+        assert abs(e - r) < 4 * sigma, (kind, e, r)

@@ -1,0 +1,143 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps + hypothesis
+property tests against the ref.py jnp oracles."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.minhash import minhash_pallas
+from repro.kernels.bbit_linear import (
+    bbit_linear_fwd_pallas, bbit_linear_bwd_dw_pallas,
+)
+from repro.kernels.vw_sketch import vw_sketch_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _mk_minhash(n, m, k, seed=0):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, 1 << 30, size=(n, m)).astype(np.int32)
+    nnz = rng.integers(1, m + 1, size=(n,)).astype(np.int32)
+    a = (rng.integers(0, 1 << 32, size=k, dtype=np.uint64) | 1
+         ).astype(np.uint32)
+    b = rng.integers(0, 1 << 32, size=k, dtype=np.uint64).astype(np.uint32)
+    return (jnp.asarray(idx), jnp.asarray(nnz), jnp.asarray(a),
+            jnp.asarray(b))
+
+
+@pytest.mark.parametrize("n,m,k", [
+    (1, 1, 1), (4, 16, 8), (10, 300, 50), (16, 1024, 200), (3, 7, 130),
+    (9, 513, 129),
+])
+def test_minhash_kernel_exact(n, m, k):
+    idx, nnz, a, b = _mk_minhash(n, m, k, seed=n * 1000 + m + k)
+    got = minhash_pallas(idx, nnz, a, b, interpret=True)
+    want = ref.minhash(idx, nnz, a, b)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 12), m=st.integers(1, 64), k=st.integers(1, 40),
+       bn=st.sampled_from([2, 8]), bk=st.sampled_from([8, 128]),
+       bm=st.sampled_from([16, 256]))
+def test_minhash_kernel_block_shape_sweep(n, m, k, bn, bk, bm):
+    idx, nnz, a, b = _mk_minhash(n, m, k, seed=n + m * 7 + k * 13)
+    got = minhash_pallas(idx, nnz, a, b, block_n=bn, block_k=bk,
+                         block_m=bm, interpret=True)
+    want = ref.minhash(idx, nnz, a, b)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_minhash_kernel_matches_core_jnp():
+    """Kernel ≡ the chunked jnp path used by CPU preprocessing."""
+    from repro.core.minhash import minhash_jnp
+    idx, nnz, a, b = _mk_minhash(6, 200, 70, seed=3)
+    mask = jnp.arange(200)[None, :] < nnz[:, None]
+    want = minhash_jnp(idx, mask, a, b, k_chunk=32, m_chunk=64)
+    got = minhash_pallas(idx, nnz, a, b, interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,k,b,c", [
+    (16, 8, 2, 1), (64, 30, 4, 3), (100, 200, 8, 2), (32, 10, 12, 5),
+    (1, 1, 1, 1),
+])
+def test_bbit_linear_fwd_bwd(n, k, b, c):
+    rng = np.random.default_rng(n + k + b + c)
+    v = 1 << b
+    codes = jnp.asarray(rng.integers(0, v, size=(n, k)).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=(k, v, c)).astype(np.float32))
+    got = bbit_linear_fwd_pallas(codes, w, interpret=True)
+    want = ref.bbit_linear_fwd(codes, w)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+    dout = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+    got_dw = bbit_linear_bwd_dw_pallas(codes, dout, v, interpret=True)
+    want_dw = ref.bbit_linear_bwd_dw(codes, dout, v)
+    np.testing.assert_allclose(got_dw, want_dw, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_bbit_linear_weight_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    codes = jnp.asarray(rng.integers(0, 16, size=(32, 20)).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=(20, 16, 2))).astype(dtype)
+    got = bbit_linear_fwd_pallas(codes, w, interpret=True)
+    want = ref.bbit_linear_fwd(codes, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-2 if dtype == "bfloat16" else 1e-4)
+
+
+def test_bbit_linear_custom_vjp_gradient():
+    rng = np.random.default_rng(6)
+    codes = jnp.asarray(rng.integers(0, 16, size=(24, 12)).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=(12, 16, 3)).astype(np.float32))
+
+    def loss_k(w):
+        return jnp.sum(jnp.tanh(ops.bbit_linear(codes, w)))
+
+    def loss_r(w):
+        return jnp.sum(jnp.tanh(ref.bbit_linear_fwd(codes, w)))
+
+    g1 = jax.grad(loss_k)(w)
+    g2 = jax.grad(loss_r)(w)
+    np.testing.assert_allclose(g1, g2, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,m,buckets", [
+    (8, 64, 32), (12, 300, 1024), (4, 50, 4096), (1, 1, 2),
+])
+def test_vw_sketch_kernel(n, m, buckets):
+    rng = np.random.default_rng(n + m)
+    idx = jnp.asarray(rng.integers(0, 1 << 30, size=(n, m)).astype(np.int32))
+    val = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    nnz = jnp.asarray(rng.integers(1, m + 1, size=(n,)).astype(np.int32))
+    got = vw_sketch_pallas(idx, val, nnz, buckets, seed=3, interpret=True)
+    want = ref.vw_sketch(idx, val, nnz, buckets, seed=3)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_vw_sketch_matches_core_vw():
+    """Kernel bucket/sign streams ≡ repro.core.vw (pow-2 m)."""
+    from repro.core.vw import vw_hash_sparse
+    rng = np.random.default_rng(9)
+    idx = jnp.asarray(rng.integers(0, 1 << 30, size=(6, 40)).astype(np.int32))
+    nnz = jnp.asarray(rng.integers(1, 41, size=(6,)).astype(np.int32))
+    mask = jnp.arange(40)[None, :] < nnz[:, None]
+    got = vw_sketch_pallas(idx, jnp.ones((6, 40), jnp.float32), nnz, 64,
+                           seed=2, interpret=True)
+    want = vw_hash_sparse(idx, mask, None, 64, seed=2)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_ops_dispatch_large_b_falls_back():
+    """b=16 (V=65536) exceeds the kernel threshold → gather path."""
+    rng = np.random.default_rng(10)
+    codes = jnp.asarray(rng.integers(0, 1 << 16, size=(4, 6)
+                                     ).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=(6, 1 << 16, 1)).astype(np.float32))
+    got = ops.bbit_linear(codes, w)
+    want = ref.bbit_linear_fwd(codes, w)
+    np.testing.assert_allclose(got, want, atol=1e-4)

@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests for the paper's system."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _run_train(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env)
+    return proc
+
+
+def test_linear_pipeline_end_to_end(tmp_path):
+    """generate → hash (one-time) → train → checkpoint → ≥90% test acc."""
+    proc = _run_train(["--mode", "linear", "--workdir", str(tmp_path),
+                       "--n-docs", "600", "--k", "64", "--b", "8",
+                       "--steps", "60", "--batch-size", "64"])
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "test_acc=" in proc.stdout
+    acc = float(proc.stdout.split("test_acc=")[1].split()[0])
+    assert acc > 0.9, proc.stdout
+    # preprocessing is cached: a second run skips hashing
+    proc2 = _run_train(["--mode", "linear", "--workdir", str(tmp_path),
+                        "--n-docs", "600", "--k", "64", "--b", "8",
+                        "--steps", "60", "--batch-size", "64"])
+    assert proc2.returncode == 0
+    assert "preprocessed" not in proc2.stdout     # reused (§6 economics)
+
+
+def test_failure_injection_and_resume(tmp_path):
+    """Crash mid-training → relaunch → resumes from checkpoint."""
+    proc = _run_train(["--mode", "linear", "--workdir", str(tmp_path),
+                       "--n-docs", "400", "--k", "32", "--b", "6",
+                       "--steps", "40", "--batch-size", "64",
+                       "--ckpt-every", "10", "--fail-at", "25"])
+    assert proc.returncode != 0       # injected crash
+    proc2 = _run_train(["--mode", "linear", "--workdir", str(tmp_path),
+                        "--n-docs", "400", "--k", "32", "--b", "6",
+                        "--steps", "40", "--batch-size", "64",
+                        "--ckpt-every", "10"])
+    assert proc2.returncode == 0, proc2.stderr[-3000:]
+    assert "resumed from step 20" in proc2.stdout
+
+
+def test_lm_training_loss_decreases(tmp_path):
+    proc = _run_train(["--mode", "lm", "--workdir", str(tmp_path),
+                       "--arch", "internlm2-1.8b", "--steps", "30",
+                       "--batch-size", "8", "--seq-len", "64"])
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if "loss" in l][-1]
+    first = float(line.split("loss ")[1].split(" ->")[0])
+    last = float(line.split("-> ")[1].split()[0])
+    assert last < first - 0.5, line
