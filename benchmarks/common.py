@@ -27,12 +27,13 @@ def corpus(n_docs: int = None, seed: int = 11):
     return CACHE[key]
 
 
-def hashed_codes(k: int, b: int, seed: int = 1):
+def hashed_codes(k: int, b: int, seed: int = 1, scheme: str = "minwise"):
     from repro.data import preprocess_rows
     rows, labels = corpus()
-    key = ("codes", k, b, seed, len(rows))
+    key = ("codes", k, b, seed, scheme, len(rows))
     if key not in CACHE:
-        CACHE[key] = preprocess_rows(rows, k=k, b=b, seed=seed, chunk=256)
+        CACHE[key] = preprocess_rows(rows, k=k, b=b, seed=seed, chunk=256,
+                                     scheme=scheme)
     return CACHE[key], labels
 
 

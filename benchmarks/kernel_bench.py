@@ -38,6 +38,48 @@ def minhash_bench():
     return emit(rows)
 
 
+def oph_bench():
+    """OPH vs k-permutation minwise preprocessing at identical shapes.
+
+    The derived column carries preprocessing throughput (Mnnz/s) plus
+    the head-to-head ``speedup_vs_minwise`` on this host and the
+    hash-evaluation ratio (exactly k — the Table-2 cost driver OPH
+    removes).  k=256 matches configs/rcv1_oph.
+    """
+    import functools
+    from repro.core.minhash import minhash_jnp
+    from repro.core.oph import (OPHHash, densify_rotation,
+                                oph_bin_minima_jnp)
+    rng = np.random.default_rng(3)
+    rows = []
+    for (n, m, k) in [(256, 1024, 256), (1024, 4096, 256),
+                      (256, 1024, 512)]:
+        idx = jnp.asarray(rng.integers(0, 1 << 30, (n, m)).astype(np.int32))
+        mask = jnp.ones((n, m), bool)
+        a = jnp.asarray((rng.integers(0, 1 << 32, k, dtype=np.uint64) | 1
+                         ).astype(np.uint32))
+        b = jnp.asarray(rng.integers(0, 1 << 32, k, dtype=np.uint64
+                                     ).astype(np.uint32))
+        f_min = jax.jit(lambda i, ms: minhash_jnp(i, ms, a, b))
+        f_min(idx, mask).block_until_ready()
+        _, dt_min = timed(lambda: f_min(idx, mask).block_until_ready(),
+                          repeats=3)
+        fam = OPHHash.make(k, seed=3)
+        a1, b1 = fam.params()
+        f_oph = jax.jit(functools.partial(
+            lambda i, ms, kk: densify_rotation(
+                *oph_bin_minima_jnp(i, ms, a1, b1, kk))[0], kk=k))
+        f_oph(idx, mask).block_until_ready()
+        _, dt_oph = timed(lambda: f_oph(idx, mask).block_until_ready(),
+                          repeats=3)
+        rows.append((
+            f"kernel/oph_n{n}_m{m}_k{k}", dt_oph * 1e6,
+            f"Mnnz_per_s={n * m / dt_oph / 1e6:.0f};"
+            f"speedup_vs_minwise={dt_min / dt_oph:.1f}x;"
+            f"hash_evals_ratio={k}"))
+    return emit(rows)
+
+
 def bbit_linear_bench():
     from repro.kernels import ref
     rng = np.random.default_rng(1)

@@ -146,6 +146,40 @@ def fig8_universal_vs_permutations():
     return emit(out)
 
 
+def oph_vs_minwise_vs_vw():
+    """OPH vs k-permutation minwise vs VW at matched storage.
+
+    The OPH analogue of Figs 5-6: for each k (power of two), train the
+    b-bit linear model on densified-OPH codes and on k-permutation
+    minwise codes (same k·b bits/example), plus VW at the
+    storage-equivalent bucket count m = k·b/32 (paper §5.3).  ``derived``
+    carries test accuracy, bits/example, and hash evals per nonzero —
+    OPH should track minwise accuracy at 1/k of its hashing cost.
+    """
+    from repro.models.linear import BBitLinearConfig
+    from repro.train import train_bbit_liblinear
+    b = 8
+    k_grid = [64, 128] if QUICK else [64, 128, 256, 512]
+    rows = []
+    for k in k_grid:
+        for scheme, evals in (("minwise", k), ("oph", 1)):
+            codes, labels = hashed_codes(k, b, scheme=scheme)
+            ctr, ytr, cte, yte = split((codes, labels))
+            res = train_bbit_liblinear(
+                ctr, ytr, cte, yte, BBitLinearConfig(k=k, b=b),
+                loss="logistic", C=1.0, max_iter=25)
+            rows.append((f"oph_curve/{scheme}_k={k}_b={b}",
+                         res.train_seconds * 1e6,
+                         f"test_acc={res.test_acc:.4f};bits={k * b};"
+                         f"hash_evals_per_nnz={evals}"))
+        m = max(k * b // 32, 2)
+        res = _fit_vw(m, 1.0, "logistic")
+        rows.append((f"oph_curve/vw_m={m}", res.train_seconds * 1e6,
+                     f"test_acc={res.test_acc:.4f};bits={32 * m};"
+                     f"hash_evals_per_nnz=1"))
+    return emit(rows)
+
+
 def table2_preprocessing_cost():
     """Table 2: data loading vs (one-time) preprocessing cost.
 

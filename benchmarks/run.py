@@ -3,9 +3,32 @@
 Prints ``name,us_per_call,derived`` CSV.  QUICK grids by default;
 ``BENCH_FULL=1`` restores the paper's full sweeps.  Select subsets with
 ``python -m benchmarks.run fig1 fig8 table2``.
+
+OPH suites additionally write ``BENCH_oph.json`` (override the path
+with ``BENCH_OPH_JSON``) so the preprocessing-throughput trajectory is
+machine-readable across commits.
 """
+import json
+import os
 import sys
 import traceback
+
+# Suites whose records feed the OPH perf-trajectory file.
+OPH_SUITES = ("kernels_oph", "oph_curve")
+
+
+def _write_oph_json(records) -> None:
+    path = os.environ.get("BENCH_OPH_JSON", "BENCH_oph.json")
+    payload = {
+        "bench": "oph",
+        "records": [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in records
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(records)} records)", file=sys.stderr)
 
 
 def main() -> None:
@@ -20,7 +43,9 @@ def main() -> None:
         "table2": paper_figures.table2_preprocessing_cost,
         "variance": paper_figures.variance_check,
         "compact": paper_figures.compact_index_trick,
+        "oph_curve": paper_figures.oph_vs_minwise_vs_vw,
         "kernels_minhash": kernel_bench.minhash_bench,
+        "kernels_oph": kernel_bench.oph_bench,
         "kernels_bbit": kernel_bench.bbit_linear_bench,
         "kernels_vw": kernel_bench.vw_sketch_bench,
         "roofline": roofline_report.roofline_rows,
@@ -28,13 +53,23 @@ def main() -> None:
     selected = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")
     failures = 0
+    oph_records, oph_failed = [], False
     for name in selected:
         try:
-            suites[name]()
+            rows = suites[name]()
+            if name in OPH_SUITES and rows:
+                oph_records.extend(rows)
         except Exception:  # noqa: BLE001
             failures += 1
+            oph_failed = oph_failed or name in OPH_SUITES
             print(f"{name},0,ERROR")
             traceback.print_exc()
+    if oph_records and not oph_failed:
+        _write_oph_json(oph_records)
+    elif oph_failed:
+        # never clobber a complete trajectory file with partial records
+        print("# BENCH_oph.json not written (an OPH suite failed)",
+              file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

@@ -24,6 +24,7 @@ class PaperConfig:
     ambient_dim: int = 1 << 30   # expanded rcv1: D ≈ 1.01e9
     global_batch: int = 65536    # examples per distributed step
     hash_family: str = "multiply_shift"
+    scheme: str = "minwise"      # see configs.rcv1_oph for the OPH twin
     seed: int = 0
 
     def linear_config(self) -> BBitLinearConfig:

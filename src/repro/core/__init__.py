@@ -27,6 +27,24 @@ from repro.core.expansion import (
     pb_hat,
     compact_index,
 )
+from repro.core.oph import (
+    OPH_EMPTY_CODE,
+    OPHHash,
+    densify_rotation,
+    densify_rotation_numpy,
+    oph_bin_minima_jnp,
+    oph_bin_minima_numpy,
+    oph_codes_numpy,
+    oph_collision_probability,
+    oph_codes_agree,
+    split_zero_codes,
+)
+from repro.core.schemes import (
+    SCHEMES,
+    HashingScheme,
+    make_scheme,
+    register_scheme,
+)
 from repro.core.vw import vw_hash_sparse, vw_hash_batch, vw_inner_product
 from repro.core.random_projection import (
     rp_project_sparse,
@@ -43,6 +61,11 @@ __all__ = [
     "collision_probability",
     "bbit_codes", "pack_codes", "unpack_codes", "storage_bits",
     "vw_storage_bits", "codes_agree",
+    "OPH_EMPTY_CODE", "OPHHash", "densify_rotation",
+    "densify_rotation_numpy", "oph_bin_minima_jnp", "oph_bin_minima_numpy",
+    "oph_codes_numpy", "oph_collision_probability", "oph_codes_agree",
+    "split_zero_codes",
+    "SCHEMES", "HashingScheme", "make_scheme", "register_scheme",
     "expand", "expansion_offsets", "linear_forward", "pb_hat",
     "compact_index",
     "vw_hash_sparse", "vw_hash_batch", "vw_inner_product",

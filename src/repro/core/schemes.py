@@ -1,0 +1,174 @@
+"""Hashing-scheme registry: minwise (k-permutation) vs OPH, one API.
+
+A *scheme* is the full recipe sparse-document → (n, k) b-bit code
+matrix.  The paper's pipeline hard-codes one recipe (k multiply-shift
+permutations, §2/§6); OPH (arXiv:1208.1259) is a second, k×-cheaper
+recipe producing statistically equivalent codes.  Everything downstream
+of preprocessing — bit-packed shards, the liblinear trainer, the
+serving engine — consumes codes through this registry so schemes stay
+interchangeable:
+
+    sch = make_scheme("oph", k=256, seed=0)
+    codes = sch.encode_padded(idx, nnz, b=8)        # offline, numpy in/out
+    codes, empty = sch.encode_jnp(idx, mask, b=8)   # jit-able, serving
+
+``encode_jnp`` returns an optional per-bin ``empty`` mask (only the
+zero-coded OPH variant produces one; ``None`` otherwise) which
+``bbit_logits`` uses to zero out empty-bin contributions.
+Registered schemes: ``minwise``, ``oph`` (densified), ``oph_zero``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.minhash import minhash_jnp
+from repro.core.oph import (
+    OPH_EMPTY_CODE,
+    OPHHash,
+    densify_rotation,
+    oph_bin_minima_jnp,
+)
+from repro.core.universal_hash import MultiplyShiftHash
+
+SCHEMES: Dict[str, Type["HashingScheme"]] = {}
+
+
+def register_scheme(name: str):
+    def deco(cls):
+        cls.name = name
+        SCHEMES[name] = cls
+        return cls
+    return deco
+
+
+def make_scheme(name: str, k: int, seed: int) -> "HashingScheme":
+    if name not in SCHEMES:
+        raise ValueError(
+            f"unknown hashing scheme {name!r}; have {sorted(SCHEMES)}")
+    return SCHEMES[name](k=k, seed=seed)
+
+
+class HashingScheme:
+    """Base: sparse rows → (n, k) uint16 b-bit codes."""
+
+    name: str = "?"
+
+    def __init__(self, k: int, seed: int):
+        self.k = k
+        self.seed = seed
+
+    @property
+    def hash_evals_per_nonzero(self) -> int:
+        """Hash evaluations issued per nonzero (the Table-2 cost driver)."""
+        raise NotImplementedError
+
+    def encode_jnp(
+        self, indices: jax.Array, mask: jax.Array, b: int,
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """jit-able path → (codes int32 (n, k), empty mask or None)."""
+        raise NotImplementedError
+
+    def encode_padded(
+        self, indices: np.ndarray, nnz: np.ndarray, b: int,
+        *, use_kernel: bool = True,
+    ) -> np.ndarray:
+        """Offline path for one padded chunk → uint16 (n, k) codes.
+
+        Kernel-backed on TPU; XLA-compiled jnp elsewhere (interpret-mode
+        Pallas would crawl on CPU).  Zero-coded schemes mark empty bins
+        with ``OPH_EMPTY_CODE`` in the returned matrix.
+        """
+        raise NotImplementedError
+
+
+@register_scheme("minwise")
+class MinwiseScheme(HashingScheme):
+    """The paper's scheme: k independent multiply-shift permutations."""
+
+    def __init__(self, k: int, seed: int):
+        super().__init__(k, seed)
+        self.family = MultiplyShiftHash.make(k, seed)
+        self._a, self._b = self.family.params()
+
+    @property
+    def hash_evals_per_nonzero(self) -> int:
+        return self.k
+
+    def encode_jnp(self, indices, mask, b):
+        z = minhash_jnp(indices, mask, self._a, self._b)
+        codes = (z & jnp.uint32((1 << b) - 1)).astype(jnp.int32)
+        return codes, None
+
+    def encode_padded(self, indices, nnz, b, *, use_kernel=True):
+        if use_kernel and jax.default_backend() == "tpu":
+            from repro.kernels import ops
+            codes = ops.minhash_bbit(
+                jnp.asarray(indices), jnp.asarray(nnz),
+                self._a, self._b, b)
+            return np.asarray(codes).astype(np.uint16)
+        m = indices.shape[1]
+        mask = jnp.arange(m, dtype=jnp.int32)[None, :] \
+            < jnp.asarray(nnz)[:, None]
+        codes, _ = self.encode_jnp(jnp.asarray(indices), mask, b)
+        return np.asarray(codes).astype(np.uint16)
+
+
+@register_scheme("oph")
+class OPHScheme(HashingScheme):
+    """One-permutation hashing, densified by rotation: k valid codes
+    from ONE hash evaluation per nonzero."""
+
+    densify: bool = True
+
+    def __init__(self, k: int, seed: int):
+        super().__init__(k, seed)
+        self.family = OPHHash.make(k, seed)
+        self._a, self._b = self.family.params()
+
+    @property
+    def hash_evals_per_nonzero(self) -> int:
+        return 1
+
+    def _finish(self, vals, empty, b):
+        if not self.densify and b > 15:
+            raise ValueError("oph_zero reserves 0xFFFF: b must be <= 15")
+        if self.densify:
+            vals, empty = densify_rotation(vals, empty)
+            codes = (vals & jnp.uint32((1 << b) - 1)).astype(jnp.int32)
+            return codes, None       # fixed-width: minwise-compatible
+        codes = (vals & jnp.uint32((1 << b) - 1)).astype(jnp.int32)
+        return codes, empty
+
+    def encode_jnp(self, indices, mask, b):
+        vals, empty = oph_bin_minima_jnp(
+            indices, mask, self._a, self._b, self.k)
+        return self._finish(vals, empty, b)
+
+    def encode_padded(self, indices, nnz, b, *, use_kernel=True):
+        m = indices.shape[1]
+        if use_kernel and jax.default_backend() == "tpu":
+            from repro.kernels import ops
+            vals = ops.oph(jnp.asarray(indices), jnp.asarray(nnz),
+                           self._a, self._b, self.k)
+            empty = vals == jnp.uint32(0xFFFFFFFF)
+            codes, empty = self._finish(vals, empty, b)
+        else:
+            mask = jnp.arange(m, dtype=jnp.int32)[None, :] \
+                < jnp.asarray(nnz)[:, None]
+            codes, empty = self.encode_jnp(jnp.asarray(indices), mask, b)
+        out = np.asarray(codes).astype(np.uint16)
+        if empty is not None:
+            out[np.asarray(empty)] = OPH_EMPTY_CODE
+        return out
+
+
+@register_scheme("oph_zero")
+class OPHZeroScheme(OPHScheme):
+    """Zero-coded OPH: empty bins carry no signal (ragged codes +
+    ``OPH_EMPTY_CODE`` sentinel / empty mask)."""
+
+    densify = False

@@ -3,27 +3,42 @@
 This is the paper's §6 pipeline as a production feature: a one-time
 hashing pass (kernel- or numpy-backed) producing bit-packed shards that
 are then *reused* across every training experiment (C sweeps, train/test
-splits) — the exact economics the paper argues for.  Shard format:
+splits) — the exact economics the paper argues for.  Shard format
+(format_version 2):
 
-  <root>/meta.json                 {k, b, family, seed, n, shards}
+  <root>/meta.json                 {format_version, scheme, k, b,
+                                    family, seed, n, shards}
   <root>/hashed_00000.npz          codes: packed uint8 (rows, ceil(kb/8))
                                    labels: int32 (rows,)
+                                   empty: packed uint8 (rows, ceil(k/8))
+                                          [oph_zero only — empty-bin
+                                           bitmask, np.packbits layout]
+
+``scheme`` selects the hashing recipe (see ``repro.core.schemes``):
+``minwise`` (the paper's k-permutation pass), ``oph`` (densified one
+permutation hashing — k× fewer hash evaluations, same code format) or
+``oph_zero`` (zero-coded OPH; empty bins are stored as a side bitmask
+and surface as ``OPH_EMPTY_CODE`` in the unpacked matrix).  Version-1
+archives (no ``format_version``/``scheme`` keys) load unchanged and are
+interpreted as minwise.
 """
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.bbit import bbit_codes, pack_codes, unpack_codes
 from repro.core.minhash import minhash_numpy
-from repro.core.universal_hash import (
-    MultiplyShiftHash, ModPrimeHash, make_hash_family,
-)
+from repro.core.oph import OPH_EMPTY_CODE
+from repro.core.schemes import make_scheme
+from repro.core.universal_hash import make_hash_family
 from repro.data.packing import pad_rows
+
+FORMAT_VERSION = 2
 
 
 def preprocess_rows(
@@ -31,49 +46,43 @@ def preprocess_rows(
     k: int,
     b: int,
     *,
+    scheme: str = "minwise",
     family: str = "multiply_shift",
     seed: int = 0,
     use_kernel: bool = True,
     chunk: int = 1024,
 ) -> np.ndarray:
-    """Hashes rows → uint16 codes (n, k). Kernel path on the accelerator."""
-    fam = make_hash_family(family, k, seed)
-    out = np.empty((len(rows), k), dtype=np.uint16)
+    """Hashes rows → uint16 codes (n, k). Kernel path on the accelerator.
+
+    ``scheme="minwise"`` is the paper's k-permutation pass (k hash
+    evaluations per nonzero); ``scheme="oph"`` / ``"oph_zero"`` is one
+    permutation hashing (ONE evaluation per nonzero).  ``family`` picks
+    the exact offline families (mod_prime / permutation) for the
+    minwise scheme only.
+    """
     # Length-sort so each chunk pads to its own max nnz — heavy-tailed
     # documents (the rcv1 expansion's lognormal lengths) otherwise force
     # every chunk to the global max.
     order = np.argsort([len(r) for r in rows], kind="stable")
-    if family == "multiply_shift":
-        import jax
-        import jax.numpy as jnp
-        from repro.core.minhash import minhash_jnp
-        from repro.kernels import ops
-        a, bb = fam.params()
-        # On TPU the Pallas kernel is the fast path; on CPU, interpret
-        # mode would crawl, so use the (equivalent, tested-equal)
-        # double-chunked jnp implementation compiled by XLA.
-        on_tpu = use_kernel and jax.default_backend() == "tpu"
+    out = np.empty((len(rows), k), dtype=np.uint16)
+    if scheme == "minwise" and family != "multiply_shift":
+        # exact offline families (mod-prime / permutation) in numpy
+        fam = make_hash_family(family, k, seed)
         for lo in range(0, len(rows), chunk):
             sel = order[lo: lo + chunk]
-            idx, nnz = pad_rows([rows[i] for i in sel])
-            if on_tpu:
-                codes = ops.minhash_bbit(
-                    jnp.asarray(idx), jnp.asarray(nnz), a, bb, b)
-            else:
-                m = idx.shape[1]
-                mask = jnp.arange(m, dtype=jnp.int32)[None, :] \
-                    < jnp.asarray(nnz)[:, None]
-                z = minhash_jnp(jnp.asarray(idx), mask, a, bb)
-                codes = (z & jnp.uint32((1 << b) - 1)).astype(jnp.uint16)
-            out[sel] = np.asarray(codes)
+            idx, nnz = pad_rows([rows[i] for i in sel], pad_to_multiple=1)
+            mask = np.arange(idx.shape[1])[None, :] < nnz[:, None]
+            z = minhash_numpy(idx, mask, fam)
+            out[sel] = np.asarray(bbit_codes(z, b))
         return out
-    # exact offline families (mod-prime / permutation) in numpy
+    if scheme != "minwise" and family != "multiply_shift":
+        raise ValueError(f"scheme {scheme!r} only supports the "
+                         "multiply_shift family")
+    sch = make_scheme(scheme, k, seed)
     for lo in range(0, len(rows), chunk):
         sel = order[lo: lo + chunk]
-        idx, nnz = pad_rows([rows[i] for i in sel], pad_to_multiple=1)
-        mask = np.arange(idx.shape[1])[None, :] < nnz[:, None]
-        z = minhash_numpy(idx, mask, fam)
-        out[sel] = np.asarray(bbit_codes(z, b))
+        idx, nnz = pad_rows([rows[i] for i in sel])
+        out[sel] = sch.encode_padded(idx, nnz, b, use_kernel=use_kernel)
     return out
 
 
@@ -84,23 +93,29 @@ def save_hashed(
     k: int,
     b: int,
     *,
+    scheme: str = "minwise",
     family: str = "multiply_shift",
     seed: int = 0,
     n_shards: int = 1,
 ) -> None:
     os.makedirs(root, exist_ok=True)
     n = codes.shape[0]
-    meta = dict(k=k, b=b, family=family, seed=seed, n=int(n),
-                shards=n_shards)
+    meta = dict(format_version=FORMAT_VERSION, scheme=scheme, k=k, b=b,
+                family=family, seed=seed, n=int(n), shards=n_shards)
     with open(os.path.join(root, "meta.json"), "w") as f:
         json.dump(meta, f)
+    empty = codes == OPH_EMPTY_CODE if scheme == "oph_zero" else None
+    if empty is not None:
+        codes = np.where(empty, np.uint16(0), codes)
     for s in range(n_shards):
         sel = np.arange(s, n, n_shards)
-        np.savez(
-            os.path.join(root, f"hashed_{s:05d}.npz"),
+        arrays = dict(
             codes=pack_codes(codes[sel], b),
             labels=labels[sel].astype(np.int32),
         )
+        if empty is not None:
+            arrays["empty"] = np.packbits(empty[sel], axis=1)
+        np.savez(os.path.join(root, f"hashed_{s:05d}.npz"), **arrays)
 
 
 def load_hashed(
@@ -110,15 +125,24 @@ def load_hashed(
 
     Loading all shards restores the ORIGINAL row order (shards are
     round-robin row subsets); loading a subset returns shard order.
+    For ``oph_zero`` archives, empty bins carry ``OPH_EMPTY_CODE``
+    (split them back out with ``repro.core.oph.split_zero_codes``).
     """
     with open(os.path.join(root, "meta.json")) as f:
         meta = json.load(f)
+    meta.setdefault("format_version", 1)
+    meta.setdefault("scheme", "minwise")      # v1 archives predate OPH
     all_shards = shard_ids is None
     ids = range(meta["shards"]) if all_shards else shard_ids
     all_codes, all_labels, sels = [], [], []
     for s in ids:
         z = np.load(os.path.join(root, f"hashed_{s:05d}.npz"))
-        all_codes.append(unpack_codes(z["codes"], meta["k"], meta["b"]))
+        codes = unpack_codes(z["codes"], meta["k"], meta["b"])
+        if "empty" in z:
+            empty = np.unpackbits(
+                z["empty"], axis=1, count=meta["k"]).astype(bool)
+            codes = np.where(empty, OPH_EMPTY_CODE, codes)
+        all_codes.append(codes)
         all_labels.append(z["labels"])
         sels.append(np.arange(s, meta["n"], meta["shards"]))
     codes = np.concatenate(all_codes)
@@ -143,10 +167,12 @@ def preprocess_and_save(
     t0 = time.perf_counter()
     codes = preprocess_rows(rows, k, b, **{
         kk: v for kk, v in kw.items()
-        if kk in ("family", "seed", "use_kernel", "chunk")})
+        if kk in ("scheme", "family", "seed", "use_kernel", "chunk")})
     t_hash = time.perf_counter() - t0
     save_hashed(root, codes, labels, k, b,
+                scheme=kw.get("scheme", "minwise"),
                 family=kw.get("family", "multiply_shift"),
                 seed=kw.get("seed", 0),
                 n_shards=kw.get("n_shards", 1))
-    return dict(seconds_hashing=t_hash, n=len(rows), k=k, b=b)
+    return dict(seconds_hashing=t_hash, n=len(rows), k=k, b=b,
+                scheme=kw.get("scheme", "minwise"))

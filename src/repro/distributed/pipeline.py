@@ -29,7 +29,10 @@ def pipelined_apply(
     axis); stage 0 consumes microbatch m at tick m, the last stage's
     outputs are collected and broadcast back.  Returns (M, micro, ...).
     """
-    s = jax.lax.axis_size(axis_name)
+    try:
+        s = jax.lax.axis_size(axis_name)
+    except AttributeError:  # jax<0.5: psum of a python scalar is static
+        s = jax.lax.psum(1, axis_name)
     sid = jax.lax.axis_index(axis_name)
     m = x_micro.shape[0]
     ticks = m + s - 1

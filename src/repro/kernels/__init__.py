@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
   minhash      — k-way multiply-shift min-hash preprocessing (paper §6)
+  oph          — one-permutation hashing bin minima (arXiv:1208.1259):
+                 ONE hash per nonzero vs minhash's k
   bbit_linear  — fused one-hot-expansion linear fwd/bwd (paper §3)
   vw_sketch    — VW signed feature hashing (paper §5.2)
 

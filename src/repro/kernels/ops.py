@@ -2,6 +2,9 @@
 
 Dispatch policy (TPU-adaptive, see DESIGN.md §2):
   * ``minhash``      — kernel always (pure VPU streaming).
+  * ``oph``          — kernel always (single-pass scatter-min; k must be
+                       a power of two — the core jnp path covers the
+                       rest).
   * ``bbit_linear``  — kernel for 2^b ≤ BBIT_KERNEL_MAX_V (one-hot MXU
                        contraction streams the table at line rate);
                        XLA gather for larger b where the table stream
@@ -23,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.minhash import minhash_pallas
+from repro.kernels.oph import oph_pallas
 from repro.kernels.bbit_linear import (
     bbit_linear_fwd_pallas,
     bbit_linear_bwd_dw_pallas,
@@ -50,6 +54,17 @@ def minhash_bbit(indices, nnz, a, b, bits: int,
     """Fused min-hash + b-bit extraction → uint16 (n, k) codes."""
     z = minhash(indices, nnz, a, b, interpret=interpret)
     return (z & jnp.uint32((1 << bits) - 1)).astype(jnp.uint16)
+
+
+def oph(indices, nnz, a, b, k: int, *, interpret: Optional[bool] = None):
+    """uint32 (n, k) OPH bin minima (kernel-backed; k = power of two).
+
+    Single hash pass over the nonzeros — the k×-cheaper preprocessing
+    scheme.  Empty bins hold 0xFFFFFFFF; densify / zero-code via
+    ``repro.core.oph``.
+    """
+    return oph_pallas(indices, nnz, a, b, k=k,
+                      interpret=_auto_interpret(interpret))
 
 
 # ---------------------------------------------------------------------------

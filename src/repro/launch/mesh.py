@@ -8,19 +8,28 @@ jax import; tests and benches see the real single device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                                   # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                    # older jax: Auto is the only mode
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 4, model: int = 2) -> Mesh:
     """Small mesh for unit tests (requires ≥ data·model fake devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))

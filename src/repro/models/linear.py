@@ -56,9 +56,21 @@ def _kernel_enabled(cfg: BBitLinearConfig) -> bool:
     return jax.default_backend() == "tpu"
 
 
-def bbit_logits(params, codes: jax.Array, cfg: BBitLinearConfig):
-    """codes uint16/int32 (n, k) → logits (n, n_out) float32."""
-    if _kernel_enabled(cfg) and (1 << cfg.b) <= ops.BBIT_KERNEL_MAX_V:
+def bbit_logits(params, codes: jax.Array, cfg: BBitLinearConfig,
+                empty: Optional[jax.Array] = None):
+    """codes uint16/int32 (n, k) → logits (n, n_out) float32.
+
+    ``empty`` (bool (n, k), zero-coded OPH only) drops the marked bins'
+    contributions — the all-zero one-hot block of arXiv:1208.1259 §6.
+    """
+    if empty is not None:
+        gathered = jnp.take_along_axis(
+            params["table"][None],
+            codes.astype(jnp.int32)[:, :, None, None],
+            axis=2,
+        )[:, :, 0, :].astype(jnp.float32)
+        out = jnp.where(empty[:, :, None], 0.0, gathered).sum(axis=1)
+    elif _kernel_enabled(cfg) and (1 << cfg.b) <= ops.BBIT_KERNEL_MAX_V:
         out = ops.bbit_linear(codes.astype(jnp.int32), params["table"])
     else:
         out = ref.bbit_linear_fwd(codes, params["table"])

@@ -33,6 +33,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:                                   # jax >= 0.5
+    from jax import shard_map
+except ImportError:                    # older jax keeps it in experimental
+    from jax.experimental.shard_map import shard_map
+
 from repro.configs.base import ArchConfig
 
 EXPERT_PAD_TO = 16   # default: model-axis size of the production mesh
@@ -187,7 +192,7 @@ def _weight_stationary_ffn(x, params, cfg: ArchConfig, mesh):
     all_axes = dp_axes + ("model",)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(dp_axes, None, None), P(None, None),
                   P(all_axes, None, None), P(all_axes, None, None),
                   P(all_axes, None, None)),
@@ -272,7 +277,7 @@ def moe_ffn(
                    P("model", None, dp_axes or None))
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=(P(dp_axes, None, None), P(None, None)) + w_specs,
             out_specs=P(dp_axes, None, None),
         )

@@ -1,10 +1,12 @@
 """Serving engines.
 
 ``HashedClassifierEngine`` — the paper's inference path as a service:
-raw sparse documents → k-way min-hash (the one-time representation the
-training side also uses) → b-bit codes → linear scores.  Batched via
-DynamicBatcher; hashing and scoring jit-compiled once per padded shape
-bucket (shape-bucketed padding avoids recompiles).
+raw sparse documents → hashing scheme (k-way min-hash, or OPH at 1/k
+the hash cost — any scheme from ``repro.core.schemes``) → b-bit codes
+→ linear scores.  Batched via DynamicBatcher; hashing and scoring
+jit-compiled once per padded shape bucket (shape-bucketed padding
+avoids recompiles).  The engine's ``scheme``/``seed`` must match the
+ones the training-side preprocessing used.
 
 ``greedy_generate`` — reference LM decode loop over any ModelAPI
 (prefill + KV-cache decode), used by the serving example and tests.
@@ -19,7 +21,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.universal_hash import MultiplyShiftHash
+from repro.core.schemes import make_scheme
 from repro.data.packing import pad_rows
 from repro.models.linear import BBitLinearConfig, bbit_logits
 from repro.serving.batcher import DynamicBatcher
@@ -34,19 +36,17 @@ def _bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
 
 class HashedClassifierEngine:
     def __init__(self, params, cfg: BBitLinearConfig, seed: int = 0,
-                 max_batch: int = 64, max_wait_ms: float = 2.0):
+                 max_batch: int = 64, max_wait_ms: float = 2.0,
+                 scheme: str = "minwise"):
         self.params = params
         self.cfg = cfg
-        self.family = MultiplyShiftHash.make(cfg.k, seed)
-        self._a, self._b = self.family.params()
-
-        from repro.core.minhash import minhash_jnp
+        self.scheme = make_scheme(scheme, cfg.k, seed)
+        self.family = getattr(self.scheme, "family", None)
 
         @jax.jit
         def _score(idx, mask, params):
-            z = minhash_jnp(idx, mask, self._a, self._b)
-            codes = (z & jnp.uint32((1 << cfg.b) - 1)).astype(jnp.int32)
-            logits = bbit_logits(params, codes, cfg)
+            codes, empty = self.scheme.encode_jnp(idx, mask, cfg.b)
+            logits = bbit_logits(params, codes, cfg, empty=empty)
             return logits[:, 0] if cfg.n_classes == 2 else logits
 
         self._score = _score

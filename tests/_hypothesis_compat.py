@@ -1,0 +1,62 @@
+"""``hypothesis`` shim: the real library when installed, otherwise a
+tiny deterministic fallback so the tier-1 suite runs without the
+optional dependency.
+
+Fallback semantics: ``@given(x=st.integers(...))`` reruns the test body
+``max_examples`` times with draws from a fixed-seed numpy Generator —
+plain parametrized sampling, no shrinking, no database.  Only the
+strategy/settings surface this repo's tests use is implemented
+(``integers``, ``floats``, ``sampled_from``; ``settings(max_examples,
+deadline)``).  Install the ``test`` extra (``pip install -e .[test]``)
+to get real property-based exploration.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(
+                lambda rng: elems[int(rng.integers(len(elems)))])
+
+    st = _Strategies()
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # Zero-arg runner: pytest must not mistake the strategy
+            # parameters for fixtures, so no functools.wraps here.
+            def runner():
+                n = getattr(runner, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                rng = _np.random.default_rng(0xB81F)
+                for _ in range(n):
+                    fn(**{name: s.draw(rng)
+                          for name, s in strategies.items()})
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

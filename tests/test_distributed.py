@@ -9,7 +9,10 @@ def test_grad_compression_and_hlo_accounting():
     run_in_subprocess("""
         import functools, numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:        # jax<0.5 keeps it in experimental
+            from jax.experimental.shard_map import shard_map
         from repro.distributed import (
             compressed_allreduce_mean, collective_bytes_from_hlo,
             collective_stats_from_hlo)
@@ -58,7 +61,10 @@ def test_sequence_parallel_primitives():
     run_in_subprocess("""
         import functools, numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:        # jax<0.5 keeps it in experimental
+            from jax.experimental.shard_map import shard_map
         from repro.distributed import (merge_partial_attention,
                                        seq_parallel_ssm_scan)
         mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -99,7 +105,10 @@ def test_pipeline_parallel_gpipe():
     run_in_subprocess("""
         import functools, numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:        # jax<0.5 keeps it in experimental
+            from jax.experimental.shard_map import shard_map
         from repro.distributed import pipelined_apply
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         M, mb, dim = 6, 2, 8

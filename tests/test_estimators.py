@@ -5,7 +5,7 @@ against Eqs (1)/(2), Theorem 1 (3)-(5), (6)/(7), (12)/(13), (15)/(16).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

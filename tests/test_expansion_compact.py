@@ -1,6 +1,6 @@
 """Expansion identities (paper §3) + §5.4 compact indexing."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
