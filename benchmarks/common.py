@@ -12,6 +12,10 @@ CACHE: Dict = {}
 
 QUICK = os.environ.get("BENCH_FULL", "0") != "1"
 
+# --smoke tier (benchmarks.run --smoke / CI): tiny shapes, parity-only
+# assertions, no trajectory JSON written.
+SMOKE = os.environ.get("BENCH_SMOKE", "0") == "1"
+
 
 def corpus(n_docs: int = None, seed: int = 11):
     """Synthetic expanded-rcv1 corpus (cached per size)."""

@@ -80,6 +80,81 @@ def oph_bench():
     return emit(rows)
 
 
+def fused_encode_bench():
+    """Fused hash→b-bit→pack encode: interpret-mode Pallas parity canary
+    plus XLA fused-path throughput.
+
+    The parity block runs the fused kernels (tiny shapes, interpret
+    mode) against the unfused reference and RAISES on any bit mismatch
+    — this is what ``benchmarks.run --smoke`` executes in CI, so fused-
+    kernel breakage fails the suite pre-merge.  Throughput rows time the
+    XLA fused path (`encode_packed`) that actually runs on this host.
+    """
+    from benchmarks.common import SMOKE
+    from repro.core.bbit import pack_codes
+    from repro.core.oph import (OPHHash, densify_rotation_numpy,
+                                oph_bin_minima_numpy)
+    from repro.core.schemes import make_scheme
+    from repro.kernels.fused_encode import (minhash_pack_pallas,
+                                            oph_pack_pallas)
+    rng = np.random.default_rng(4)
+    checks = 0
+    for bits in (1, 8):
+        n, m, k = 5, 40, 16
+        idx = rng.integers(0, 1 << 30, (n, m)).astype(np.int32)
+        nnz = rng.integers(0, m + 1, (n,)).astype(np.int32)
+        mask = np.arange(m)[None, :] < nnz[:, None]
+        a = (rng.integers(0, 1 << 32, k, dtype=np.uint64) | 1
+             ).astype(np.uint32)
+        bv = rng.integers(0, 1 << 32, k, dtype=np.uint64).astype(np.uint32)
+        got = np.asarray(minhash_pack_pallas(
+            jnp.asarray(idx), jnp.asarray(nnz), jnp.asarray(a),
+            jnp.asarray(bv), bits=bits, interpret=True))
+        from repro.kernels import ref
+        z = np.asarray(ref.minhash(jnp.asarray(idx), jnp.asarray(nnz),
+                                   jnp.asarray(a), jnp.asarray(bv)))
+        want = pack_codes((z & ((1 << bits) - 1)).astype(np.uint16), bits)
+        if not np.array_equal(got, want):
+            raise AssertionError(f"fused minwise mismatch at b={bits}")
+        fam = OPHHash.make(k, 3)
+        av, bvv = fam.params()
+        v, e = oph_bin_minima_numpy(idx, mask, fam)
+        for densify in (True, False):
+            gp, ge = oph_pack_pallas(jnp.asarray(idx), jnp.asarray(nnz),
+                                     av, bvv, k=k, bits=bits,
+                                     densify=densify, interpret=True)
+            if densify:
+                dv, _ = densify_rotation_numpy(v, e)
+                wantp = pack_codes(
+                    (dv & ((1 << bits) - 1)).astype(np.uint16), bits)
+            else:
+                wantp = pack_codes(
+                    np.where(e, 0, v & ((1 << bits) - 1)).astype(np.uint16),
+                    bits)
+            if not (np.array_equal(np.asarray(gp), wantp)
+                    and np.array_equal(np.asarray(ge),
+                                       np.packbits(e, axis=1))):
+                raise AssertionError(
+                    f"fused oph mismatch at b={bits} densify={densify}")
+        checks += 3
+    rows = [("kernel/fused_parity_interpret", 0.0,
+             f"checks={checks};bit_identical=1")]
+    if SMOKE:
+        return emit(rows)
+    for (n, m, k, bits) in [(256, 1024, 256, 1), (256, 1024, 256, 8)]:
+        idx = rng.integers(0, 1 << 30, (n, m)).astype(np.int32)
+        nnz = np.full(n, m, np.int32)
+        sch = make_scheme("oph", k, 3)
+        sch.encode_packed(idx, nnz, bits)          # warm the jit caches
+        _, dt = timed(lambda: sch.encode_packed(idx, nnz, bits),
+                      repeats=3)
+        rows.append((
+            f"kernel/fused_oph_packed_n{n}_m{m}_k{k}_b{bits}", dt * 1e6,
+            f"Mnnz_per_s={n * m / dt / 1e6:.0f};"
+            f"bytes_per_row={(k * bits + 7) // 8}"))
+    return emit(rows)
+
+
 def bbit_linear_bench():
     from repro.kernels import ref
     rng = np.random.default_rng(1)

@@ -1,0 +1,146 @@
+"""End-to-end preprocessing throughput: PR-1 baseline vs fused pipeline.
+
+Measures the full raw-rows → packed-bytes pass (the paper's one-time
+Table-2 cost — paid exactly once per dataset, so compile time IS part
+of the cost) two ways on identical data:
+
+  * ``baseline`` — the PR-1 pipeline: length-sorted chunks padded to
+    exact 128-multiples (a fresh jit shape — and XLA compile — for
+    nearly every distinct chunk width), unfused encode returning
+    full-width uint16 codes to the host, then host-side numpy
+    ``pack_codes`` over the whole matrix (the v2 save path);
+  * ``fused``    — the PR-2 pipeline (``preprocess_rows_packed``):
+    fixed-width nnz tiles streamed through O(1) compiled graphs
+    (``core.schemes._stream_tiles``), hash→b-bit→pack fused on the
+    device, double-buffered dispatch, only ceil(k·b/8) bytes per row
+    synced.
+
+Each (variant, b) cell runs in a FRESH subprocess so jit caches never
+leak between measurements: ``cold`` is the first pass (the one-time
+preprocessing number), ``warm`` a second pass in the same process (the
+steady state a many-chunk 200GB run amortizes to).  Derived columns
+carry Mnnz/s, the fused/baseline speedup, and host↔device bytes per
+row.  Outputs are asserted bit-identical before timing is trusted.
+
+Suite ``preprocess`` feeds ``BENCH_preprocess.json`` via benchmarks.run
+(skipped in ``--smoke`` mode, which runs one tiny in-process parity
+pass instead, so CI shapes never clobber the tracked trajectory).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, SMOKE, corpus, emit
+
+K = 256
+SCHEME = "oph"     # the ROADMAP hot path; minwise differs only in-kernel
+# Many small chunks = the 200GB regime in miniature: enough distinct
+# chunk widths that the PR-1 per-width recompile pathology is visible.
+CHUNK = 64
+N_DOCS = 24 if SMOKE else (800 if QUICK else 3000)
+
+
+def _baseline_preprocess(rows, k, b, *, scheme=SCHEME, seed=1,
+                         chunk=CHUNK):
+    """The PR-1 pipeline, reproduced exactly (see module docstring)."""
+    from repro.core.bbit import pack_codes
+    from repro.core.schemes import make_scheme
+    from repro.data.packing import pad_rows
+    sch = make_scheme(scheme, k, seed)
+    out = np.empty((len(rows), k), dtype=np.uint16)
+    order = np.argsort([len(r) for r in rows], kind="stable")
+    for lo in range(0, len(rows), chunk):
+        sel = order[lo: lo + chunk]
+        idx, nnz = pad_rows([rows[i] for i in sel])   # exact width: one
+        out[sel] = sch.encode_padded(idx, nnz, b)     # jit shape per m
+    return pack_codes(out, b)                         # host-side pack
+
+
+def _fused_preprocess(rows, k, b, *, seed=1, chunk=CHUNK):
+    from repro.data import preprocess_rows_packed
+    packed, _ = preprocess_rows_packed(rows, k, b, scheme=SCHEME,
+                                       seed=seed, chunk=chunk)
+    return packed
+
+
+def _measure(variant: str, b: int) -> dict:
+    """Cold + warm wall time of one variant — run me in a fresh process."""
+    rows, _ = corpus(N_DOCS)
+    fn = _baseline_preprocess if variant == "baseline" else _fused_preprocess
+    t0 = time.perf_counter()
+    out = fn(rows, K, b)
+    cold = time.perf_counter() - t0
+    warm = float("inf")          # best-of-3: robust to CI box noise
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out2 = fn(rows, K, b)
+        warm = min(warm, time.perf_counter() - t0)
+        assert np.array_equal(out, out2)
+    import hashlib
+    return dict(cold=cold, warm=warm,
+                nnz=int(sum(len(r) for r in rows)),
+                digest=hashlib.sha1(
+                    np.ascontiguousarray(out).tobytes()).hexdigest())
+
+
+def _measure_subprocess(variant: str, b: int, repeats: int = 2) -> dict:
+    """Best-of-``repeats`` fresh-process measurements (2-core CI boxes
+    make single cold timings swing ~2×; min-of-N is the usual cure)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    best = None
+    for _ in range(repeats):
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.preprocess_bench", variant,
+             str(b)],
+            capture_output=True, text=True, env=env, check=True)
+        r = json.loads(out.stdout.splitlines()[-1])
+        if best is None:
+            best = r
+        else:
+            assert r["digest"] == best["digest"]
+            best["cold"] = min(best["cold"], r["cold"])
+            best["warm"] = min(best["warm"], r["warm"])
+    return best
+
+
+def preprocess_bench():
+    if SMOKE:
+        # tiny in-process parity pass: catches pipeline breakage in CI
+        rows, _ = corpus(N_DOCS)
+        base = _baseline_preprocess(rows, K, 8, chunk=8)
+        fused = _fused_preprocess(rows, K, 8, chunk=8)
+        assert np.array_equal(base, fused), "fused != baseline bytes"
+        return emit([("preprocess/smoke_parity_k%d_b8" % K, 0.0,
+                      f"rows={len(rows)};bit_identical=1")])
+    recs = []
+    for b in (1, 8):
+        base = _measure_subprocess("baseline", b)
+        fused = _measure_subprocess("fused", b)
+        assert base["digest"] == fused["digest"], "output bytes differ"
+        nnz = base["nnz"]
+        bytes_row = (K * b + 7) // 8
+        for phase in ("cold", "warm"):
+            dt_b, dt_f = base[phase], fused[phase]
+            recs.append((
+                f"preprocess/{phase}_k{K}_b{b}_baseline", dt_b * 1e6,
+                f"Mnnz_per_s={nnz / dt_b / 1e6:.1f};bytes_per_row={K * 4}"))
+            recs.append((
+                f"preprocess/{phase}_k{K}_b{b}_fused", dt_f * 1e6,
+                f"Mnnz_per_s={nnz / dt_f / 1e6:.1f};"
+                f"bytes_per_row={bytes_row};"
+                f"speedup_vs_baseline={dt_b / dt_f:.1f}x"))
+    return emit(recs)
+
+
+if __name__ == "__main__":
+    print(json.dumps(_measure(sys.argv[1], int(sys.argv[2]))))

@@ -4,23 +4,33 @@ Prints ``name,us_per_call,derived`` CSV.  QUICK grids by default;
 ``BENCH_FULL=1`` restores the paper's full sweeps.  Select subsets with
 ``python -m benchmarks.run fig1 fig8 table2``.
 
-OPH suites additionally write ``BENCH_oph.json`` (override the path
-with ``BENCH_OPH_JSON``) so the preprocessing-throughput trajectory is
-machine-readable across commits.
+``python -m benchmarks.run --smoke`` is the CI tier: tiny shapes
+(``BENCH_SMOKE=1``), interpret-mode fused-kernel parity canaries and a
+preprocessing-pipeline parity pass — fast enough for every merge, and
+any bit mismatch fails the run.  Smoke mode never writes trajectory
+JSON files.
+
+OPH suites write ``BENCH_oph.json`` and the preprocess suite writes
+``BENCH_preprocess.json`` (override paths with ``BENCH_OPH_JSON`` /
+``BENCH_PREPROCESS_JSON``) so the preprocessing-throughput trajectory
+is machine-readable across commits.
 """
 import json
 import os
 import sys
 import traceback
 
-# Suites whose records feed the OPH perf-trajectory file.
+# Suites whose records feed the perf-trajectory files.
 OPH_SUITES = ("kernels_oph", "oph_curve")
+PREPROCESS_SUITES = ("preprocess",)
+
+SMOKE_DEFAULT = ["kernels_fused", "preprocess"]
 
 
-def _write_oph_json(records) -> None:
-    path = os.environ.get("BENCH_OPH_JSON", "BENCH_oph.json")
+def _write_json(path_env: str, default: str, bench: str, records) -> None:
+    path = os.environ.get(path_env, default)
     payload = {
-        "bench": "oph",
+        "bench": bench,
         "records": [
             {"name": name, "us_per_call": us, "derived": derived}
             for name, us, derived in records
@@ -32,7 +42,14 @@ def _write_oph_json(records) -> None:
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_figures, roofline_report
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    if smoke:
+        argv = [a for a in argv if a != "--smoke"]
+        os.environ["BENCH_SMOKE"] = "1"   # before benchmarks.* imports
+
+    from benchmarks import (kernel_bench, paper_figures, preprocess_bench,
+                            roofline_report)
 
     suites = {
         "fig1": paper_figures.fig1_fig2_svm,
@@ -46,30 +63,49 @@ def main() -> None:
         "oph_curve": paper_figures.oph_vs_minwise_vs_vw,
         "kernels_minhash": kernel_bench.minhash_bench,
         "kernels_oph": kernel_bench.oph_bench,
+        "kernels_fused": kernel_bench.fused_encode_bench,
         "kernels_bbit": kernel_bench.bbit_linear_bench,
         "kernels_vw": kernel_bench.vw_sketch_bench,
         "roofline": roofline_report.roofline_rows,
+        "preprocess": preprocess_bench.preprocess_bench,
     }
-    selected = sys.argv[1:] or list(suites)
+    if argv:
+        selected = argv
+    elif smoke:
+        selected = SMOKE_DEFAULT
+    else:
+        selected = list(suites)
     print("name,us_per_call,derived")
     failures = 0
-    oph_records, oph_failed = [], False
+    trajectories = {           # suite group → (records, failed flag)
+        "oph": [OPH_SUITES, [], False],
+        "preprocess": [PREPROCESS_SUITES, [], False],
+    }
     for name in selected:
         try:
             rows = suites[name]()
-            if name in OPH_SUITES and rows:
-                oph_records.extend(rows)
+            for group in trajectories.values():
+                if name in group[0] and rows:
+                    group[1].extend(rows)
         except Exception:  # noqa: BLE001
             failures += 1
-            oph_failed = oph_failed or name in OPH_SUITES
+            for group in trajectories.values():
+                group[2] = group[2] or name in group[0]
             print(f"{name},0,ERROR")
             traceback.print_exc()
-    if oph_records and not oph_failed:
-        _write_oph_json(oph_records)
-    elif oph_failed:
-        # never clobber a complete trajectory file with partial records
-        print("# BENCH_oph.json not written (an OPH suite failed)",
-              file=sys.stderr)
+    if not smoke:              # tiny smoke shapes must never clobber
+        if trajectories["oph"][1] and not trajectories["oph"][2]:
+            _write_json("BENCH_OPH_JSON", "BENCH_oph.json", "oph",
+                        trajectories["oph"][1])
+        if (trajectories["preprocess"][1]
+                and not trajectories["preprocess"][2]):
+            _write_json("BENCH_PREPROCESS_JSON", "BENCH_preprocess.json",
+                        "preprocess", trajectories["preprocess"][1])
+    for key, (group_suites, records, failed) in trajectories.items():
+        if failed:
+            # never clobber a complete trajectory file with partials
+            print(f"# BENCH_{key}.json not written (a suite failed)",
+                  file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

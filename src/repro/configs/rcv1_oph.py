@@ -29,6 +29,11 @@ class OPHPaperConfig:
     ambient_dim: int = 1 << 30   # expanded rcv1: D ≈ 1.01e9
     global_batch: int = 65536    # examples per distributed step
     seed: int = 0
+    # streaming preprocessing (PR 2): rows per fused-encode chunk and
+    # shards per hashed dataset — peak preprocessing memory is
+    # O(pipeline depth · chunk + one shard), never the (n, k) matrix
+    preprocess_chunk: int = 4096
+    preprocess_shards: int = 16
 
     def linear_config(self) -> BBitLinearConfig:
         return BBitLinearConfig(k=self.k, b=self.b,

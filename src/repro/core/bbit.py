@@ -5,8 +5,17 @@ min-hash, so a dataset of n examples costs exactly ``n·b·k`` bits.
 ``pack_codes``/``unpack_codes`` realize that storage format bit-exactly;
 the data pipeline uses it as the on-disk representation of the
 preprocessed (hashed) dataset.
+
+Two packers share one bit layout (row-major bitstream, LSB-first within
+each byte): ``pack_codes`` is the numpy reference, ``pack_codes_jnp``
+the jit-able device-side twin used by the fused encode pipeline so only
+``n·ceil(k·b/8)`` packed bytes — not ``n·k`` full-width minima — ever
+cross the host↔device boundary.  ``pack_mask_jnp`` is the device twin
+of ``np.packbits`` (MSB-first) for the ``oph_zero`` empty-bin bitmask.
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 import jax
@@ -50,6 +59,56 @@ def pack_codes(codes: np.ndarray, b: int) -> np.ndarray:
     flat = flat.reshape(n, -1, 8)
     weights = (1 << np.arange(8, dtype=np.uint16)).astype(np.uint8)
     return (flat * weights[None, None, :]).sum(axis=2).astype(np.uint8)
+
+
+def packed_width(k: int, b: int) -> int:
+    """Bytes per row of the packed code matrix: ceil(k·b/8)."""
+    return (k * b + 7) // 8
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def pack_codes_jnp(codes: jax.Array, b: int) -> jax.Array:
+    """Device-side ``pack_codes`` (bit-exact, jit-able) → uint8.
+
+    For b ∈ {1, 2, 4, 8} each byte holds exactly 8/b whole codes, so
+    packing is 8/b strided shift-ors (VPU-friendly; the same formula the
+    fused Pallas kernels inline).  Other b go through the general
+    bit-expansion, still fully on device.
+    """
+    n, k = codes.shape
+    c = codes.astype(jnp.uint32)
+    if 8 % b == 0:
+        r = 8 // b
+        pad = (-k) % r
+        if pad:
+            c = jnp.pad(c, ((0, 0), (0, pad)))
+        out = jnp.zeros((n, c.shape[1] // r), jnp.uint32)
+        for t in range(r):
+            out = out | (c[:, t::r] << jnp.uint32(t * b))
+        return out.astype(jnp.uint8)
+    bits = ((c[:, :, None] >> jnp.arange(b, dtype=jnp.uint32)[None, None, :])
+            & 1)
+    flat = bits.reshape(n, k * b)
+    pad = (-flat.shape[1]) % 8
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    flat = flat.reshape(n, -1, 8)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint32))
+    return jnp.sum(flat * weights[None, None, :], axis=2).astype(jnp.uint8)
+
+
+@jax.jit
+def pack_mask_jnp(mask: jax.Array) -> jax.Array:
+    """Device-side ``np.packbits(mask, axis=1)`` (MSB-first) → uint8."""
+    n, k = mask.shape
+    m = mask.astype(jnp.uint32)
+    pad = (-k) % 8
+    if pad:
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    out = jnp.zeros((n, m.shape[1] // 8), jnp.uint32)
+    for t in range(8):
+        out = out | (m[:, t::8] << jnp.uint32(7 - t))
+    return out.astype(jnp.uint8)
 
 
 def unpack_codes(packed: np.ndarray, k: int, b: int) -> np.ndarray:

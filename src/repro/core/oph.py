@@ -68,6 +68,8 @@ OPH_EMPTY_CODE = np.uint16(0xFFFF)
 
 # Rotation offset constant (odd => full-period in Z_2^32): decorrelates
 # values borrowed across different distances (arXiv:1406.4784 §3).
+# Mirrored by the in-kernel densification in kernels/fused_encode.py —
+# the two must stay bit-identical (tests/test_fused_encode.py enforces).
 _ROT_C = 0x9E3779B1
 
 

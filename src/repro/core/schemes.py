@@ -11,20 +11,29 @@ interchangeable:
     sch = make_scheme("oph", k=256, seed=0)
     codes = sch.encode_padded(idx, nnz, b=8)        # offline, numpy in/out
     codes, empty = sch.encode_jnp(idx, mask, b=8)   # jit-able, serving
+    packed, em = sch.encode_packed(idx, nnz, b=8)   # on-disk bytes direct
 
 ``encode_jnp`` returns an optional per-bin ``empty`` mask (only the
 zero-coded OPH variant produces one; ``None`` otherwise) which
 ``bbit_logits`` uses to zero out empty-bin contributions.
 Registered schemes: ``minwise``, ``oph`` (densified), ``oph_zero``.
+
+The ``*_device`` variants return un-synced jax arrays so the streaming
+preprocessor can keep several chunks in flight (double buffering);
+``encode_packed*`` is the device-resident hot path — hash, b-bit mask
+and byte packing fused on the accelerator (Pallas kernel on TPU, XLA
+elsewhere), so only ``n·ceil(k·b/8)`` bytes cross to the host.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bbit import pack_codes_jnp, pack_mask_jnp
 from repro.core.minhash import minhash_jnp
 from repro.core.oph import (
     OPH_EMPTY_CODE,
@@ -52,6 +61,89 @@ def make_scheme(name: str, k: int, seed: int) -> "HashingScheme":
     return SCHEMES[name](k=k, seed=seed)
 
 
+def _prefix_mask(indices: jax.Array, nnz) -> jax.Array:
+    m = indices.shape[1]
+    return (jnp.arange(m, dtype=jnp.int32)[None, :]
+            < jnp.asarray(nnz)[:, None])
+
+
+# -- tiled XLA encode: compile-count O(1) in the pad width ------------------
+#
+# The packed path streams fixed-width nonzero tiles through ONE compiled
+# minima graph and accumulates the running min on the device — the same
+# structure as the Pallas kernels' nnz grid dimension.  Pad width then
+# never appears in a jit signature: a heavy-tailed corpus compiles ONE
+# tile graph + one finisher (per row bucket) instead of one graph per
+# chunk width (the PR-1 recompile pathology).  Tiles past every row's
+# nnz are skipped on the host, so over-padded chunks cost nothing.
+ENCODE_TILE_M = 512
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _oph_tile_step(vals, tile, nnz, col0, a, bv, k):
+    """vals ← min(vals, bin minima of one nonzero tile): ONE dispatch
+    (and one compiled graph per tile width) per tile."""
+    col = col0 + jnp.arange(tile.shape[1], dtype=jnp.int32)
+    mask = col[None, :] < nnz[:, None]
+    t, _ = oph_bin_minima_jnp(tile, mask, a, bv, k)
+    return jnp.minimum(vals, t)
+
+
+@jax.jit
+def _minwise_tile_step(vals, tile, nnz, col0, a, bv):
+    col = col0 + jnp.arange(tile.shape[1], dtype=jnp.int32)
+    mask = col[None, :] < nnz[:, None]
+    return jnp.minimum(vals, minhash_jnp(tile, mask, a, bv))
+
+
+def _stream_tiles(indices: np.ndarray, nnz, k: int, tile_step):
+    """Running min of ``tile_step`` over fixed-width nonzero tiles.
+
+    A tile fully past ``max(nnz)`` is all-padding (its mask is all
+    False) and contributes only sentinels — skipped on the host, so the
+    effective hashed width is ceil(max_nnz/T)·T however generously the
+    chunk was padded.
+    """
+    indices = np.asarray(indices)
+    n, m = indices.shape
+    nnz = np.asarray(nnz)
+    nnz_j = jnp.asarray(nnz)
+    vals = jnp.full((n, k), jnp.uint32(0xFFFFFFFF), jnp.uint32)
+    T = ENCODE_TILE_M
+    m_live = min(m, int(nnz.max(initial=0)))
+    for lo in range(0, m_live, T):
+        span = min(T, m - lo)
+        if span == T:
+            tile = indices[:, lo: lo + T]
+        else:
+            tile = np.zeros((n, T), dtype=indices.dtype)
+            tile[:, :span] = indices[:, lo: lo + span]
+        vals = tile_step(vals, jnp.asarray(tile), nnz_j,
+                         jnp.asarray(np.int32(lo)))
+    return vals
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def _minwise_finish_packed(z, b):
+    codes = (z & jnp.uint32((1 << b) - 1)).astype(jnp.uint16)
+    return pack_codes_jnp(codes, b)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "densify"))
+def _oph_finish_packed(vals, b, densify):
+    empty = vals == jnp.uint32(0xFFFFFFFF)
+    mask_b = jnp.uint32((1 << b) - 1)
+    if densify:
+        vals, _ = densify_rotation(vals, empty)
+        # all-empty rows keep the sentinel → all-ones low bits, exactly
+        # what packing the OPH_EMPTY_CODE-marked reference matrix yields
+        codes = (vals & mask_b).astype(jnp.uint16)
+    else:
+        codes = jnp.where(empty, jnp.uint16(0),
+                          (vals & mask_b).astype(jnp.uint16))
+    return pack_codes_jnp(codes, b), pack_mask_jnp(empty)
+
+
 class HashingScheme:
     """Base: sparse rows → (n, k) uint16 b-bit codes."""
 
@@ -72,17 +164,54 @@ class HashingScheme:
         """jit-able path → (codes int32 (n, k), empty mask or None)."""
         raise NotImplementedError
 
+    def encode_device(
+        self, indices, nnz, b: int, *, use_kernel: bool = True,
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """One padded chunk → un-synced (codes, empty|None) jax arrays.
+
+        Kernel-backed on TPU; XLA-compiled jnp elsewhere (interpret-mode
+        Pallas would crawl on CPU).  Dispatch returns immediately, so
+        callers can pipeline chunks (double buffering) before syncing.
+        """
+        raise NotImplementedError
+
+    def encode_packed_device(
+        self, indices, nnz, b: int, *, use_kernel: bool = True,
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """One padded chunk → un-synced (packed uint8 (n, ceil(k·b/8)),
+        packed empty bitmask or None) — the fused device-resident path.
+
+        Bytes are bit-identical to ``pack_codes`` over ``encode_padded``
+        output (and ``np.packbits`` over the empty mask): the shard
+        writer appends them verbatim.
+        """
+        raise NotImplementedError
+
     def encode_padded(
         self, indices: np.ndarray, nnz: np.ndarray, b: int,
         *, use_kernel: bool = True,
     ) -> np.ndarray:
         """Offline path for one padded chunk → uint16 (n, k) codes.
 
-        Kernel-backed on TPU; XLA-compiled jnp elsewhere (interpret-mode
-        Pallas would crawl on CPU).  Zero-coded schemes mark empty bins
-        with ``OPH_EMPTY_CODE`` in the returned matrix.
+        Zero-coded schemes mark empty bins with ``OPH_EMPTY_CODE`` in
+        the returned matrix.
         """
-        raise NotImplementedError
+        codes, empty = self.encode_device(indices, nnz, b,
+                                          use_kernel=use_kernel)
+        out = np.asarray(codes).astype(np.uint16)
+        if empty is not None:
+            out[np.asarray(empty)] = OPH_EMPTY_CODE
+        return out
+
+    def encode_packed(
+        self, indices: np.ndarray, nnz: np.ndarray, b: int,
+        *, use_kernel: bool = True,
+    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Synchronous ``encode_packed_device`` → numpy arrays."""
+        packed, empty = self.encode_packed_device(indices, nnz, b,
+                                                  use_kernel=use_kernel)
+        return (np.asarray(packed),
+                None if empty is None else np.asarray(empty))
 
 
 @register_scheme("minwise")
@@ -103,18 +232,27 @@ class MinwiseScheme(HashingScheme):
         codes = (z & jnp.uint32((1 << b) - 1)).astype(jnp.int32)
         return codes, None
 
-    def encode_padded(self, indices, nnz, b, *, use_kernel=True):
+    def encode_device(self, indices, nnz, b, *, use_kernel=True):
+        indices = jnp.asarray(indices)
         if use_kernel and jax.default_backend() == "tpu":
             from repro.kernels import ops
-            codes = ops.minhash_bbit(
-                jnp.asarray(indices), jnp.asarray(nnz),
-                self._a, self._b, b)
-            return np.asarray(codes).astype(np.uint16)
-        m = indices.shape[1]
-        mask = jnp.arange(m, dtype=jnp.int32)[None, :] \
-            < jnp.asarray(nnz)[:, None]
-        codes, _ = self.encode_jnp(jnp.asarray(indices), mask, b)
-        return np.asarray(codes).astype(np.uint16)
+            return ops.minhash_bbit(indices, jnp.asarray(nnz),
+                                    self._a, self._b, b), None
+        codes, _ = self.encode_jnp(indices, _prefix_mask(indices, nnz), b)
+        return codes, None
+
+    def encode_packed_device(self, indices, nnz, b, *, use_kernel=True):
+        if use_kernel and jax.default_backend() == "tpu":
+            from repro.kernels import ops
+            if ops.fused_pack_supported(b):
+                return ops.minhash_packed(jnp.asarray(indices),
+                                          jnp.asarray(nnz),
+                                          self._a, self._b, b), None
+        z = _stream_tiles(
+            indices, nnz, self.k,
+            lambda v, t, nz, c0: _minwise_tile_step(v, t, nz, c0,
+                                                    self._a, self._b))
+        return _minwise_finish_packed(z, b), None
 
 
 @register_scheme("oph")
@@ -148,22 +286,33 @@ class OPHScheme(HashingScheme):
             indices, mask, self._a, self._b, self.k)
         return self._finish(vals, empty, b)
 
-    def encode_padded(self, indices, nnz, b, *, use_kernel=True):
-        m = indices.shape[1]
+    def encode_device(self, indices, nnz, b, *, use_kernel=True):
+        indices = jnp.asarray(indices)
         if use_kernel and jax.default_backend() == "tpu":
             from repro.kernels import ops
-            vals = ops.oph(jnp.asarray(indices), jnp.asarray(nnz),
+            vals = ops.oph(indices, jnp.asarray(nnz),
                            self._a, self._b, self.k)
             empty = vals == jnp.uint32(0xFFFFFFFF)
-            codes, empty = self._finish(vals, empty, b)
-        else:
-            mask = jnp.arange(m, dtype=jnp.int32)[None, :] \
-                < jnp.asarray(nnz)[:, None]
-            codes, empty = self.encode_jnp(jnp.asarray(indices), mask, b)
-        out = np.asarray(codes).astype(np.uint16)
-        if empty is not None:
-            out[np.asarray(empty)] = OPH_EMPTY_CODE
-        return out
+            return self._finish(vals, empty, b)
+        return self.encode_jnp(indices, _prefix_mask(indices, nnz), b)
+
+    def encode_packed_device(self, indices, nnz, b, *, use_kernel=True):
+        if not self.densify and b > 15:
+            raise ValueError("oph_zero reserves 0xFFFF: b must be <= 15")
+        if use_kernel and jax.default_backend() == "tpu":
+            from repro.kernels import ops
+            if ops.fused_pack_supported(b):
+                packed, empty = ops.oph_packed(
+                    jnp.asarray(indices), jnp.asarray(nnz),
+                    self._a, self._b, self.k, b,
+                    densify=self.densify)
+                return packed, (None if self.densify else empty)
+        vals = _stream_tiles(
+            indices, nnz, self.k,
+            lambda v, t, nz, c0: _oph_tile_step(v, t, nz, c0, self._a,
+                                                self._b, self.k))
+        packed, empty = _oph_finish_packed(vals, b, self.densify)
+        return packed, (None if self.densify else empty)
 
 
 @register_scheme("oph_zero")

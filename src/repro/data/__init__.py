@@ -3,9 +3,10 @@ from repro.data.synth_rcv1 import SynthRcv1Config, generate, generate_arrays
 from repro.data.libsvm_io import (
     write_libsvm, read_libsvm, write_shards, read_shards, shard_paths,
 )
-from repro.data.packing import pad_rows, batch_iterator
+from repro.data.packing import pad_rows, batch_iterator, bucket_width
 from repro.data.hashed_dataset import (
-    preprocess_rows, save_hashed, load_hashed, preprocess_and_save,
+    preprocess_rows, preprocess_rows_packed, save_hashed, load_hashed,
+    iter_hashed, preprocess_and_save, HashedShardWriter,
 )
 from repro.data.loader import HashedCodesLoader, SparseRowsLoader
 from repro.data.lm_synth import token_batch, lm_example_stream
@@ -13,8 +14,9 @@ from repro.data.lm_synth import token_batch, lm_example_stream
 __all__ = [
     "SynthRcv1Config", "generate", "generate_arrays",
     "write_libsvm", "read_libsvm", "write_shards", "read_shards",
-    "shard_paths", "pad_rows", "batch_iterator",
-    "preprocess_rows", "save_hashed", "load_hashed", "preprocess_and_save",
-    "HashedCodesLoader", "SparseRowsLoader",
+    "shard_paths", "pad_rows", "batch_iterator", "bucket_width",
+    "preprocess_rows", "preprocess_rows_packed", "save_hashed",
+    "load_hashed", "iter_hashed", "preprocess_and_save",
+    "HashedShardWriter", "HashedCodesLoader", "SparseRowsLoader",
     "token_batch", "lm_example_stream",
 ]

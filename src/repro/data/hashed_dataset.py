@@ -1,44 +1,155 @@
 """Offline preprocessing: raw sparse rows → b-bit hashed dataset on disk.
 
 This is the paper's §6 pipeline as a production feature: a one-time
-hashing pass (kernel- or numpy-backed) producing bit-packed shards that
-are then *reused* across every training experiment (C sweeps, train/test
-splits) — the exact economics the paper argues for.  Shard format
-(format_version 2):
+hashing pass producing bit-packed shards that are then *reused* across
+every training experiment (C sweeps, train/test splits) — the exact
+economics the paper argues for.  Since PR 2 the pass is **device-
+resident and streaming**:
 
-  <root>/meta.json                 {format_version, scheme, k, b,
-                                    family, seed, n, shards}
-  <root>/hashed_00000.npz          codes: packed uint8 (rows, ceil(kb/8))
-                                   labels: int32 (rows,)
-                                   empty: packed uint8 (rows, ceil(k/8))
-                                          [oph_zero only — empty-bin
-                                           bitmask, np.packbits layout]
+  * chunks are length-sorted and shape-bucketed (pad widths rounded up
+    to powers of two, ``packing.bucket_width``) so jit compiles
+    O(log max_nnz) variants instead of one per chunk;
+  * each chunk is encoded by the fused hash→b-bit→pack path
+    (``HashingScheme.encode_packed_device``: Pallas kernel on TPU, XLA
+    elsewhere), so only ``n·ceil(k·b/8)`` packed bytes leave the
+    device instead of the ``n·k·4``-byte minima the PR-1 pipeline
+    round-tripped;
+  * dispatch is double-buffered: chunk i+1 is enqueued while chunk i's
+    result is synced and appended, and shards stream to disk through
+    ``HashedShardWriter`` — the full (n, k) code matrix is never
+    materialized.
+
+Shard format (format_version 3, written by ``preprocess_and_save``):
+
+  <root>/meta.json                   {format_version, scheme, k, b,
+                                      family, seed, n, shards,
+                                      packed_width, seconds_hashing,
+                                      mnnz_per_s, total_nnz}
+  <root>/hashed_00000.codes.npy      packed uint8 (rows, ceil(kb/8))
+  <root>/hashed_00000.labels.npy     int32 (rows,)
+  <root>/hashed_00000.rows.npy       int64 (rows,) original row ids
+  <root>/hashed_00000.empty.npy      packed uint8 (rows, ceil(k/8))
+                                     [oph_zero only — empty-bin
+                                      bitmask, np.packbits layout]
+
+Shards hold contiguous runs of the length-sorted processing order; the
+``rows`` array records original positions, so a full ``load_hashed``
+restores the original row order and ``iter_hashed`` streams shard-sized
+pieces with ``np.load(mmap_mode=...)`` — no all-shards concatenation.
+Plain ``.npy`` members (not ``.npz``) are what makes the mmap path
+possible.
 
 ``scheme`` selects the hashing recipe (see ``repro.core.schemes``):
 ``minwise`` (the paper's k-permutation pass), ``oph`` (densified one
 permutation hashing — k× fewer hash evaluations, same code format) or
 ``oph_zero`` (zero-coded OPH; empty bins are stored as a side bitmask
-and surface as ``OPH_EMPTY_CODE`` in the unpacked matrix).  Version-1
-archives (no ``format_version``/``scheme`` keys) load unchanged and are
-interpreted as minwise.
+and surface as ``OPH_EMPTY_CODE`` in the unpacked matrix).  Version-1/2
+archives (monolithic ``.npz`` shards, round-robin row subsets) load and
+iterate unchanged; ``save_hashed`` still writes the version-2 layout
+for callers that already hold a full code matrix.
 """
 from __future__ import annotations
 
+import collections
 import json
 import os
 import time
-from typing import Optional, Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.bbit import bbit_codes, pack_codes, unpack_codes
+from repro.core.bbit import bbit_codes, pack_codes, packed_width, unpack_codes
 from repro.core.minhash import minhash_numpy
 from repro.core.oph import OPH_EMPTY_CODE
 from repro.core.schemes import make_scheme
 from repro.core.universal_hash import make_hash_family
 from repro.data.packing import pad_rows
 
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
+
+# Chunks kept in flight on the device before the oldest is synced —
+# depth 2 = classic double buffering (enqueue i+1 while i computes).
+PIPELINE_DEPTH = 2
+
+
+def _length_sorted_chunks(rows: Sequence[np.ndarray], chunk: int):
+    """Yields index arrays of ≤``chunk`` rows, shortest documents first.
+
+    Length-sorting keeps heavy-tailed corpora from padding every chunk
+    to the global max nnz; pow-2 bucketing (``pad_rows(bucket=True)``)
+    then caps the number of distinct jit shapes the sort produces.
+    """
+    order = np.argsort([len(r) for r in rows], kind="stable")
+    for lo in range(0, len(rows), chunk):
+        yield order[lo: lo + chunk]
+
+
+def _stream_encoded(
+    rows: Sequence[np.ndarray],
+    k: int,
+    b: int,
+    *,
+    scheme: str,
+    family: str,
+    seed: int,
+    use_kernel: bool,
+    chunk: int,
+    packed: bool,
+    depth: int = PIPELINE_DEPTH,
+):
+    """Yields (sel, codes, empty|None) per length-sorted chunk.
+
+    ``packed=True`` streams fused uint8 bytes (the hot path);
+    ``packed=False`` streams uint16 code matrices with the
+    ``OPH_EMPTY_CODE`` sentinel applied (the compat path).  Up to
+    ``depth`` chunks stay in flight on the device: jax dispatch is
+    async, so chunk i+1's transfer+compute is enqueued before chunk i's
+    result is synced to numpy.
+    """
+    if scheme == "minwise" and family != "multiply_shift":
+        # exact offline families (mod-prime / permutation): numpy path
+        fam = make_hash_family(family, k, seed)
+        for sel in _length_sorted_chunks(rows, chunk):
+            idx, nnz = pad_rows([rows[i] for i in sel], pad_to_multiple=1)
+            mask = np.arange(idx.shape[1])[None, :] < nnz[:, None]
+            codes = np.asarray(bbit_codes(minhash_numpy(idx, mask, fam), b))
+            yield sel, (pack_codes(codes, b) if packed else codes), None
+        return
+    if scheme != "minwise" and family != "multiply_shift":
+        raise ValueError(f"scheme {scheme!r} only supports the "
+                         "multiply_shift family")
+    sch = make_scheme(scheme, k, seed)
+
+    def _materialize(sel, dev):
+        vals, empty = dev
+        if packed:
+            # row padding (if any) falls off here
+            return sel, np.asarray(vals)[: len(sel)], (
+                None if empty is None else np.asarray(empty)[: len(sel)])
+        out = np.asarray(vals).astype(np.uint16)
+        if empty is not None:
+            out[np.asarray(empty)] = OPH_EMPTY_CODE
+        return sel, out, None
+
+    pending = collections.deque()
+    for sel in _length_sorted_chunks(rows, chunk):
+        idx, nnz = pad_rows([rows[i] for i in sel], bucket=True)
+        if packed:
+            # bucket the ROW count too (ragged last chunk → next pow2,
+            # nnz=0 filler rows) so every jit shape axis is bucketed
+            n_pad = min(chunk, 1 << max(3, (len(sel) - 1).bit_length()))
+            if n_pad > len(sel):
+                idx = np.pad(idx, ((0, n_pad - len(sel)), (0, 0)))
+                nnz = np.pad(nnz, (0, n_pad - len(sel)))
+            dev = sch.encode_packed_device(idx, nnz, b,
+                                           use_kernel=use_kernel)
+        else:
+            dev = sch.encode_device(idx, nnz, b, use_kernel=use_kernel)
+        pending.append((sel, dev))
+        if len(pending) >= depth:
+            yield _materialize(*pending.popleft())
+    while pending:
+        yield _materialize(*pending.popleft())
 
 
 def preprocess_rows(
@@ -52,38 +163,151 @@ def preprocess_rows(
     use_kernel: bool = True,
     chunk: int = 1024,
 ) -> np.ndarray:
-    """Hashes rows → uint16 codes (n, k). Kernel path on the accelerator.
+    """Hashes rows → uint16 codes (n, k); in-memory compat path.
 
     ``scheme="minwise"`` is the paper's k-permutation pass (k hash
     evaluations per nonzero); ``scheme="oph"`` / ``"oph_zero"`` is one
     permutation hashing (ONE evaluation per nonzero).  ``family`` picks
     the exact offline families (mod_prime / permutation) for the
-    minwise scheme only.
+    minwise scheme only.  Prefer ``preprocess_rows_packed`` /
+    ``preprocess_and_save`` for large corpora — they never materialize
+    the full-width matrix.
     """
-    # Length-sort so each chunk pads to its own max nnz — heavy-tailed
-    # documents (the rcv1 expansion's lognormal lengths) otherwise force
-    # every chunk to the global max.
-    order = np.argsort([len(r) for r in rows], kind="stable")
     out = np.empty((len(rows), k), dtype=np.uint16)
-    if scheme == "minwise" and family != "multiply_shift":
-        # exact offline families (mod-prime / permutation) in numpy
-        fam = make_hash_family(family, k, seed)
-        for lo in range(0, len(rows), chunk):
-            sel = order[lo: lo + chunk]
-            idx, nnz = pad_rows([rows[i] for i in sel], pad_to_multiple=1)
-            mask = np.arange(idx.shape[1])[None, :] < nnz[:, None]
-            z = minhash_numpy(idx, mask, fam)
-            out[sel] = np.asarray(bbit_codes(z, b))
-        return out
-    if scheme != "minwise" and family != "multiply_shift":
-        raise ValueError(f"scheme {scheme!r} only supports the "
-                         "multiply_shift family")
-    sch = make_scheme(scheme, k, seed)
-    for lo in range(0, len(rows), chunk):
-        sel = order[lo: lo + chunk]
-        idx, nnz = pad_rows([rows[i] for i in sel])
-        out[sel] = sch.encode_padded(idx, nnz, b, use_kernel=use_kernel)
+    for sel, codes, _ in _stream_encoded(
+            rows, k, b, scheme=scheme, family=family, seed=seed,
+            use_kernel=use_kernel, chunk=chunk, packed=False):
+        out[sel] = codes
     return out
+
+
+def preprocess_rows_packed(
+    rows: Sequence[np.ndarray],
+    k: int,
+    b: int,
+    *,
+    scheme: str = "minwise",
+    family: str = "multiply_shift",
+    seed: int = 0,
+    use_kernel: bool = True,
+    chunk: int = 1024,
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Fused streaming encode → (packed uint8 (n, ceil(kb/8)),
+    packed empty bitmask (n, ceil(k/8)) | None).
+
+    Bit-identical to ``pack_codes(preprocess_rows(...), b)`` (and the
+    shard writer's bytes), but the device emits the packed bytes
+    directly — host↔device traffic per row is ceil(k·b/8) bytes, not
+    k·2 (or the kernels' k·4 minima).
+    """
+    out = np.empty((len(rows), packed_width(k, b)), dtype=np.uint8)
+    emp: Optional[np.ndarray] = None
+    for sel, pk, em in _stream_encoded(
+            rows, k, b, scheme=scheme, family=family, seed=seed,
+            use_kernel=use_kernel, chunk=chunk, packed=True):
+        out[sel] = pk
+        if em is not None:
+            if emp is None:
+                emp = np.zeros((len(rows), (k + 7) // 8), dtype=np.uint8)
+            emp[sel] = em
+    return out, emp
+
+
+class HashedShardWriter:
+    """Streaming format-v3 shard writer: append packed chunks as they
+    arrive, flush ``rows_per_shard``-row shards incrementally.
+
+    Never holds more than one shard of rows — the writer is what lets
+    ``preprocess_and_save`` run in O(shard) memory instead of
+    materializing the (n, k) matrix the v2 writer packed at the end.
+    """
+
+    def __init__(
+        self,
+        root: str,
+        k: int,
+        b: int,
+        *,
+        n_total: int,
+        scheme: str = "minwise",
+        family: str = "multiply_shift",
+        seed: int = 0,
+        n_shards: int = 1,
+    ):
+        os.makedirs(root, exist_ok=True)
+        self.root = root
+        self.k, self.b = k, b
+        self.scheme, self.family, self.seed = scheme, family, seed
+        self.n_total = int(n_total)
+        self.n_shards = n_shards
+        self.rows_per_shard = max(1, -(-self.n_total // n_shards))
+        self._codes, self._labels, self._rows, self._empty = [], [], [], []
+        self._buffered = 0
+        self._shard = 0
+        self._closed = False
+
+    def append(
+        self,
+        row_ids: np.ndarray,
+        packed: np.ndarray,
+        labels: np.ndarray,
+        empty: Optional[np.ndarray] = None,
+    ) -> None:
+        self._codes.append(np.ascontiguousarray(packed))
+        self._labels.append(np.asarray(labels, dtype=np.int32))
+        self._rows.append(np.asarray(row_ids, dtype=np.int64))
+        if empty is not None:
+            self._empty.append(np.ascontiguousarray(empty))
+        self._buffered += len(row_ids)
+        while self._buffered >= self.rows_per_shard:
+            self._flush(self.rows_per_shard)
+
+    def _take(self, parts, count):
+        out, rest, got = [], [], 0
+        for p in parts:
+            if got >= count:
+                rest.append(p)
+            elif got + len(p) <= count:
+                out.append(p)
+                got += len(p)
+            else:
+                out.append(p[: count - got])
+                rest.append(p[count - got:])
+                got = count
+        return np.concatenate(out) if out else None, rest
+
+    def _flush(self, count: int) -> None:
+        count = min(count, self._buffered)
+        if count == 0:
+            return
+        base = os.path.join(self.root, f"hashed_{self._shard:05d}")
+        codes, self._codes = self._take(self._codes, count)
+        labels, self._labels = self._take(self._labels, count)
+        rows, self._rows = self._take(self._rows, count)
+        np.save(base + ".codes.npy", codes)
+        np.save(base + ".labels.npy", labels)
+        np.save(base + ".rows.npy", rows)
+        if self._empty:
+            empty, self._empty = self._take(self._empty, count)
+            np.save(base + ".empty.npy", empty)
+        self._buffered -= count
+        self._shard += 1
+
+    def close(self, stats: Optional[dict] = None) -> dict:
+        """Flushes the remainder and writes meta.json; returns meta."""
+        if self._closed:
+            raise RuntimeError("writer already closed")
+        self._flush(self._buffered)
+        self._closed = True
+        meta = dict(format_version=FORMAT_VERSION, scheme=self.scheme,
+                    k=self.k, b=self.b, family=self.family, seed=self.seed,
+                    n=self.n_total, shards=self._shard,
+                    packed_width=packed_width(self.k, self.b))
+        if stats:
+            meta.update(stats)
+        with open(os.path.join(self.root, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        return meta
 
 
 def save_hashed(
@@ -98,9 +322,13 @@ def save_hashed(
     seed: int = 0,
     n_shards: int = 1,
 ) -> None:
+    """Version-2 bulk writer: an already-materialized (n, k) uint16 code
+    matrix → round-robin ``.npz`` shards.  Kept for callers that hold
+    full matrices; ``preprocess_and_save`` streams v3 shards instead.
+    """
     os.makedirs(root, exist_ok=True)
     n = codes.shape[0]
-    meta = dict(format_version=FORMAT_VERSION, scheme=scheme, k=k, b=b,
+    meta = dict(format_version=2, scheme=scheme, k=k, b=b,
                 family=family, seed=seed, n=int(n), shards=n_shards)
     with open(os.path.join(root, "meta.json"), "w") as f:
         json.dump(meta, f)
@@ -108,14 +336,73 @@ def save_hashed(
     if empty is not None:
         codes = np.where(empty, np.uint16(0), codes)
     for s in range(n_shards):
-        sel = np.arange(s, n, n_shards)
+        # basic (strided) slicing — a view, unlike the O(rows) copy an
+        # np.arange fancy index would make per shard
         arrays = dict(
-            codes=pack_codes(codes[sel], b),
-            labels=labels[sel].astype(np.int32),
+            codes=pack_codes(codes[s::n_shards], b),
+            labels=labels[s::n_shards].astype(np.int32),
         )
         if empty is not None:
-            arrays["empty"] = np.packbits(empty[sel], axis=1)
+            arrays["empty"] = np.packbits(empty[s::n_shards], axis=1)
         np.savez(os.path.join(root, f"hashed_{s:05d}.npz"), **arrays)
+
+
+def _read_meta(root: str) -> dict:
+    with open(os.path.join(root, "meta.json")) as f:
+        meta = json.load(f)
+    meta.setdefault("format_version", 1)
+    meta.setdefault("scheme", "minwise")      # v1 archives predate OPH
+    return meta
+
+
+def _load_shard(
+    root: str, meta: dict, s: int, mmap_mode: Optional[str] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One shard → (codes uint16 (rows, k), labels, original row ids)."""
+    k, b = meta["k"], meta["b"]
+    if meta["format_version"] >= 3:
+        base = os.path.join(root, f"hashed_{s:05d}")
+        packed = np.load(base + ".codes.npy", mmap_mode=mmap_mode)
+        labels = np.asarray(np.load(base + ".labels.npy",
+                                    mmap_mode=mmap_mode))
+        rows = np.asarray(np.load(base + ".rows.npy", mmap_mode=mmap_mode))
+        codes = unpack_codes(np.asarray(packed), k, b)
+        epath = base + ".empty.npy"
+        if os.path.exists(epath):
+            empty = np.unpackbits(
+                np.asarray(np.load(epath, mmap_mode=mmap_mode)),
+                axis=1, count=k).astype(bool)
+            codes = np.where(empty, OPH_EMPTY_CODE, codes)
+        return codes, labels, rows
+    z = np.load(os.path.join(root, f"hashed_{s:05d}.npz"))
+    codes = unpack_codes(z["codes"], k, b)
+    if "empty" in z:
+        empty = np.unpackbits(z["empty"], axis=1, count=k).astype(bool)
+        codes = np.where(empty, OPH_EMPTY_CODE, codes)
+    return codes, z["labels"], np.arange(s, meta["n"], meta["shards"])
+
+
+def iter_hashed(
+    root: str,
+    shard_ids: Optional[Sequence[int]] = None,
+    *,
+    mmap: bool = True,
+) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Yields (codes uint16 (rows, k), labels int32, original row ids)
+    one shard at a time — evaluation over many shards without
+    concatenating everything in RAM.
+
+    For format-v3 archives the packed arrays are ``np.load``-ed with
+    ``mmap_mode="r"`` (plain ``.npy`` members make this possible), so
+    resident memory is one shard's *unpacked* codes regardless of
+    dataset size.  v1/v2 ``.npz`` archives iterate per shard too (zip
+    members can't mmap, but only one shard is ever decompressed).
+    """
+    meta = _read_meta(root)
+    ids = range(meta["shards"]) if shard_ids is None else shard_ids
+    mode = "r" if (mmap and meta["format_version"] >= 3) else None
+    for s in ids:
+        yield _load_shard(root, meta, s, mmap_mode=mode)
 
 
 def load_hashed(
@@ -123,28 +410,20 @@ def load_hashed(
 ) -> Tuple[np.ndarray, np.ndarray, dict]:
     """Returns (codes uint16 (n,k), labels int32 (n,), meta).
 
-    Loading all shards restores the ORIGINAL row order (shards are
-    round-robin row subsets); loading a subset returns shard order.
-    For ``oph_zero`` archives, empty bins carry ``OPH_EMPTY_CODE``
-    (split them back out with ``repro.core.oph.split_zero_codes``).
+    Loading all shards restores the ORIGINAL row order (v3 shards carry
+    explicit row ids; v1/v2 shards are round-robin row subsets);
+    loading a subset returns shard order.  For ``oph_zero`` archives,
+    empty bins carry ``OPH_EMPTY_CODE`` (split them back out with
+    ``repro.core.oph.split_zero_codes``).  Prefer ``iter_hashed`` when
+    the concatenated matrix would not fit in RAM.
     """
-    with open(os.path.join(root, "meta.json")) as f:
-        meta = json.load(f)
-    meta.setdefault("format_version", 1)
-    meta.setdefault("scheme", "minwise")      # v1 archives predate OPH
+    meta = _read_meta(root)
     all_shards = shard_ids is None
-    ids = range(meta["shards"]) if all_shards else shard_ids
     all_codes, all_labels, sels = [], [], []
-    for s in ids:
-        z = np.load(os.path.join(root, f"hashed_{s:05d}.npz"))
-        codes = unpack_codes(z["codes"], meta["k"], meta["b"])
-        if "empty" in z:
-            empty = np.unpackbits(
-                z["empty"], axis=1, count=meta["k"]).astype(bool)
-            codes = np.where(empty, OPH_EMPTY_CODE, codes)
+    for codes, labels, rows in iter_hashed(root, shard_ids, mmap=False):
         all_codes.append(codes)
-        all_labels.append(z["labels"])
-        sels.append(np.arange(s, meta["n"], meta["shards"]))
+        all_labels.append(labels)
+        sels.append(rows)
     codes = np.concatenate(all_codes)
     labels = np.concatenate(all_labels)
     if all_shards:
@@ -163,16 +442,30 @@ def preprocess_and_save(
     b: int,
     **kw,
 ) -> dict:
-    """End-to-end preprocessing with timing (Table-2 instrumentation)."""
+    """End-to-end streaming preprocessing (Table-2 instrumentation).
+
+    Fused encode (packed bytes off the device) → ``HashedShardWriter``;
+    peak memory is O(pipeline depth · chunk + one shard), never the
+    (n, k) matrix.  Timing covers hash+pack+write; ``seconds_hashing``
+    and ``mnnz_per_s`` are recorded in meta.json so the preprocessing-
+    throughput trajectory is tracked next to the data it produced.
+    """
+    scheme = kw.get("scheme", "minwise")
+    family = kw.get("family", "multiply_shift")
+    seed = kw.get("seed", 0)
+    labels = np.asarray(labels)
+    writer = HashedShardWriter(
+        root, k, b, n_total=len(rows), scheme=scheme, family=family,
+        seed=seed, n_shards=kw.get("n_shards", 1))
+    total_nnz = int(sum(len(r) for r in rows))
     t0 = time.perf_counter()
-    codes = preprocess_rows(rows, k, b, **{
-        kk: v for kk, v in kw.items()
-        if kk in ("scheme", "family", "seed", "use_kernel", "chunk")})
+    for sel, packed, empty in _stream_encoded(
+            rows, k, b, scheme=scheme, family=family, seed=seed,
+            use_kernel=kw.get("use_kernel", True),
+            chunk=kw.get("chunk", 1024), packed=True):
+        writer.append(sel, packed, labels[sel], empty)
     t_hash = time.perf_counter() - t0
-    save_hashed(root, codes, labels, k, b,
-                scheme=kw.get("scheme", "minwise"),
-                family=kw.get("family", "multiply_shift"),
-                seed=kw.get("seed", 0),
-                n_shards=kw.get("n_shards", 1))
-    return dict(seconds_hashing=t_hash, n=len(rows), k=k, b=b,
-                scheme=kw.get("scheme", "minwise"))
+    stats = dict(seconds_hashing=t_hash, total_nnz=total_nnz,
+                 mnnz_per_s=total_nnz / max(t_hash, 1e-9) / 1e6)
+    writer.close(stats)
+    return dict(stats, n=len(rows), k=k, b=b, scheme=scheme)

@@ -1,0 +1,350 @@
+"""Pallas TPU kernels: fused hash → b-bit → pack encode pipeline.
+
+The unfused pipeline (`kernels/minhash.py`, `kernels/oph.py`) ships the
+full uint32 minima — n·k·4 bytes — back to the host, where b-bit
+extraction (`core/bbit.py`) and numpy bit-packing run serially.  At the
+paper's claimed throughput (§6 Table 2: GPU hashing ≪ data loading)
+that host round-trip IS the pipeline; these kernels remove it by
+emitting the on-disk representation directly:
+
+  * the running min lives in a VMEM scratch accumulator, revisited
+    across the nnz grid dimension (HBM traffic identical to the
+    unfused kernels — each nonzero block is still read once);
+  * on the FINAL nnz grid step the accumulator is finished in-register:
+    b-bit mask (and for OPH, rotation densification or zero-coding),
+    then 8/b codes packed per output byte — so only n·ceil(k·b/8)
+    packed bytes ever leave the device instead of n·k·4.
+
+Packing layout is bit-exact with ``core.bbit.pack_codes`` (row-major
+bitstream, LSB-first within each byte): byte j of a row holds codes
+j·(8/b) … (j+1)·(8/b)−1, code t at bit offset t·b.  Requires b ∈
+{1, 2, 4, 8} so codes never straddle bytes (other b fall back to the
+XLA path, ``core.bbit.pack_codes_jnp``).  The ``oph_zero`` variant
+additionally packs the empty-bin bitmask MSB-first — the
+``np.packbits`` layout the shard format stores.
+
+In-kernel densification mirrors ``core.oph.densify_rotation``: the
+next-non-empty-bin search is a reverse cummin over doubled (circular)
+lanes, and the borrow gather is lane-broadcast compare-select — the
+same VPU-style trick as the scatter-min — since a true gather is
+TPU-hostile.  O(k²) selects per row, done ONCE per row versus O(k·nnz)
+work in the main loop.
+
+Layout caveat: packed output rows are ceil(k·b/8) bytes, which for
+small k·b is narrower than the 128-lane tile; interpret mode (CPU CI)
+is exact for any shape, while a compiled TPU deployment should keep
+k·b ≥ 1024 (e.g. k=256, b≥4) or accept lane padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.minhash import _fmix32
+
+PACK_BITS = (1, 2, 4, 8)   # b where codes never straddle byte bounds
+
+# Rotation offset constant — must match core.oph._ROT_C bit-exactly.
+_ROT_C = 0x9E3779B1
+
+
+def _check_bits(bits: int) -> None:
+    if bits not in PACK_BITS:
+        raise ValueError(
+            f"fused packing needs b ∈ {PACK_BITS}, got {bits}")
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _pack_lanes(codes, width: int, bits: int):
+    """(bn, L) uint32 codes < 2^bits → (bn, width) uint8, LSB-first.
+
+    L must equal width·(8/bits); lanes beyond the logical k are expected
+    to be zeroed by the caller so padding bits match ``pack_codes``.
+    """
+    r = 8 // bits
+    packed = jnp.zeros((codes.shape[0], width), jnp.uint32)
+    for t in range(r):
+        packed = packed | (codes[:, t::r] << jnp.uint32(t * bits))
+    return packed.astype(jnp.uint8)
+
+
+def _pack_mask_lanes(mask, width: int):
+    """(bn, width·8) bool → (bn, width) uint8, MSB-first (packbits)."""
+    packed = jnp.zeros((mask.shape[0], width), jnp.uint32)
+    for t in range(8):
+        packed = packed | (mask[:, t::8].astype(jnp.uint32)
+                           << jnp.uint32(7 - t))
+    return packed.astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Fused minwise: k-permutation min-hash → b-bit → packed bytes.
+# ---------------------------------------------------------------------------
+def _minhash_pack_kernel(idx_ref, nnz_ref, a_ref, b_ref, out_ref, acc_ref, *,
+                         mc: int, bits: int, k: int, bk: int, nc: int):
+    """One (doc-block, hash-block, nnz-block) grid step.
+
+    Minima accumulate in VMEM scratch across grid dim 2; the final step
+    masks to b bits, zeroes lanes ≥ k (param padding), and packs.
+    """
+    j = pl.program_id(1)
+    c = pl.program_id(2)
+    sentinel = jnp.uint32(0xFFFFFFFF)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, sentinel)
+
+    idx = idx_ref[...].astype(jnp.uint32)            # (BN, MC)
+    nnz = nnz_ref[...]                               # (BN,)
+    a = a_ref[...]                                   # (BK,)
+    b = b_ref[...]                                   # (BK,)
+    bn = idx.shape[0]
+    col = c * mc + jax.lax.broadcasted_iota(jnp.int32, (bn, mc), 1)
+    valid = col < nnz[:, None]                       # (BN, MC)
+    h = _fmix32(a[None, None, :] * idx[:, :, None] + b[None, None, :])
+    h = jnp.where(valid[:, :, None], h, sentinel)    # (BN, MC, BK)
+    acc_ref[...] = jnp.minimum(acc_ref[...], jnp.min(h, axis=1))
+
+    @pl.when(c == nc - 1)
+    def _finish():
+        codes = acc_ref[...] & jnp.uint32((1 << bits) - 1)
+        lane = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bn, bk), 1)
+        codes = jnp.where(lane < k, codes, jnp.uint32(0))
+        out_ref[...] = _pack_lanes(codes, bk * bits // 8, bits)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_n", "block_k", "block_m", "interpret"),
+)
+def minhash_pack_pallas(
+    indices: jax.Array,
+    nnz: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bits: int,
+    block_n: int = 8,
+    block_k: int = 128,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """uint8 (n, ceil(k·bits/8)) packed b-bit min-hash codes.
+
+    Bit-identical to ``pack_codes(bbit_codes(minhash_pallas(...), bits),
+    bits)`` — validated by tests/test_fused_encode.py — at 1/(32/bits)
+    of the device→host traffic.
+
+    Args:
+      indices: int32 (n, m), contiguously padded rows.
+      nnz:     int32 (n,) valid prefix length per row.
+      a, b:    uint32 (k,) multiply-shift params (a odd).
+      bits:    b ∈ {1, 2, 4, 8}.
+    """
+    _check_bits(bits)
+    n, m = indices.shape
+    k = a.shape[0]
+    bn = min(block_n, n)
+    # hash-block must be a multiple of 8 so each out byte is intra-block
+    bk = _round_up(min(block_k, _round_up(k, 8)), 8)
+    mc = min(block_m, m)
+
+    def _pad_to(x, mult, axis, value):
+        pad = (-x.shape[axis]) % mult
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths, constant_values=value)
+
+    idx_p = _pad_to(_pad_to(indices, bn, 0, 0), mc, 1, 0)
+    nnz_p = _pad_to(nnz, bn, 0, 0)
+    a_p = _pad_to(a, bk, 0, jnp.uint32(1))
+    b_p = _pad_to(b, bk, 0, jnp.uint32(0))
+    np_, mp_ = idx_p.shape
+    kp_ = a_p.shape[0]
+    nc = mp_ // mc
+    ob = bk * bits // 8                   # packed bytes per hash-block
+
+    grid = (np_ // bn, kp_ // bk, nc)
+    out = pl.pallas_call(
+        functools.partial(_minhash_pack_kernel, mc=mc, bits=bits, k=k,
+                          bk=bk, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, mc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((bn,), lambda i, j, c: (i,)),
+            pl.BlockSpec((bk,), lambda i, j, c: (j,)),
+            pl.BlockSpec((bk,), lambda i, j, c: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn, ob), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, kp_ * bits // 8), jnp.uint8),
+        scratch_shapes=[pltpu.VMEM((bn, bk), jnp.uint32)],
+        interpret=interpret,
+    )(idx_p, nnz_p, a_p, b_p)
+    return out[:n, :(k * bits + 7) // 8]
+
+
+# ---------------------------------------------------------------------------
+# Fused OPH: bin minima → densify/zero-code → b-bit → packed bytes.
+# ---------------------------------------------------------------------------
+def _oph_pack_kernel(a_ref, b_ref, idx_ref, nnz_ref, out_ref, eout_ref,
+                     acc_ref, *, mc: int, shift: int, k: int, kp: int,
+                     bits: int, densify: bool, nc: int, ow: int, ew: int):
+    """One (doc-block, nnz-block) grid step: hash once, min-scatter into
+    scratch; densify + pack on the final step."""
+    c = pl.program_id(1)
+    sentinel = jnp.uint32(0xFFFFFFFF)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, sentinel)
+
+    idx = idx_ref[...].astype(jnp.uint32)            # (BN, MC)
+    nnz = nnz_ref[...]                               # (BN,)
+    bn = idx.shape[0]
+    col = c * mc + jax.lax.broadcasted_iota(jnp.int32, (bn, mc), 1)
+    valid = col < nnz[:, None]
+
+    h = _fmix32(a_ref[0, 0] * idx + b_ref[0, 0])     # ONE hash per nonzero
+    bins = (h >> jnp.uint32(shift)).astype(jnp.int32)
+    hv = jnp.where(valid, h, sentinel)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bn, mc, kp), 2)
+    scat = jnp.where(bins[:, :, None] == lane, hv[:, :, None], sentinel)
+    acc_ref[...] = jnp.minimum(acc_ref[...], jnp.min(scat, axis=1))
+
+    @pl.when(c == nc - 1)
+    def _finish():
+        vals = acc_ref[...]                          # (BN, KP)
+        vk = vals[:, :k] if kp > k else vals         # logical bins only
+        ek = vk == sentinel                          # (BN, K) empty bins
+        mask_b = jnp.uint32((1 << bits) - 1)
+        if densify:
+            # next non-empty bin at-or-after j, circular: reverse cummin
+            # over doubled lanes (== core.oph.densify_rotation).
+            ne2 = jnp.concatenate([~ek, ~ek], axis=1)            # (BN, 2K)
+            iota2 = jax.lax.broadcasted_iota(jnp.int32, (bn, 2 * k), 1)
+            cand = jnp.where(ne2, iota2, jnp.int32(2 * k))
+            nxt = jax.lax.cummin(cand, axis=1, reverse=True)[:, :k]
+            iota_k = jax.lax.broadcasted_iota(jnp.int32, (bn, k), 1)
+            dist = nxt - iota_k
+            src = jnp.where(nxt < 2 * k, nxt & (k - 1), 0)
+            # borrow gather, the VPU way: broadcast-compare src against a
+            # k-lane iota and select (exactly one lane matches).
+            lane_j = jax.lax.broadcasted_iota(jnp.int32, (bn, k, k), 2)
+            borrowed = jnp.min(
+                jnp.where(src[:, :, None] == lane_j, vk[:, None, :],
+                          sentinel), axis=2)
+            borrowed = borrowed + dist.astype(jnp.uint32) * jnp.uint32(
+                _ROT_C)
+            all_empty = jnp.all(ek, axis=1, keepdims=True)
+            dense = jnp.where(all_empty | (nxt >= 2 * k), sentinel,
+                              borrowed)
+            codes = dense & mask_b    # all-empty rows → all-ones bits,
+        else:                         # matching the packed reference
+            codes = jnp.where(ek, jnp.uint32(0), vk & mask_b)
+        kpad = ow * (8 // bits)
+        if kpad > k:
+            codes = jnp.concatenate(
+                [codes, jnp.zeros((bn, kpad - k), jnp.uint32)], axis=1)
+        out_ref[...] = _pack_lanes(codes, ow, bits)
+        e = ek
+        if ew * 8 > k:
+            e = jnp.concatenate(
+                [ek, jnp.zeros((bn, ew * 8 - k), jnp.bool_)], axis=1)
+        eout_ref[...] = _pack_mask_lanes(e, ew)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "bits", "densify", "block_n", "block_m",
+                     "interpret"),
+)
+def oph_pack_pallas(
+    indices: jax.Array,
+    nnz: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    k: int,
+    bits: int,
+    densify: bool = True,
+    block_n: int = 8,
+    block_m: int = 256,
+    interpret: bool = False,
+):
+    """(packed uint8 (n, ceil(k·bits/8)), empty uint8 (n, ceil(k/8))).
+
+    Fused OPH encode: one hash evaluation per nonzero, running bin
+    minima in VMEM scratch, then — in the same kernel pass —
+    densification by rotation (``densify=True``; bit-identical to
+    ``core.oph.densify_rotation``) or zero-coding (empty bins → code 0,
+    reported in the MSB-first packed ``empty`` bitmask), b-bit masking
+    and byte packing.  ``empty`` marks raw empty bins in both modes
+    (the densified shard format simply doesn't store it).
+
+    Args:
+      indices: int32 (n, m), contiguously padded rows.
+      nnz:     int32 (n,) valid prefix length per row.
+      a, b:    uint32 (1,) single multiply-shift params (a odd).
+      k:       number of bins; power of two.
+      bits:    b ∈ {1, 2, 4, 8}.
+    """
+    _check_bits(bits)
+    if k < 2 or (k & (k - 1)) != 0:
+        raise ValueError(f"OPH kernel needs k = power of two, got {k}")
+    shift = 32 - (int(k).bit_length() - 1)
+    n, m = indices.shape
+    bn = min(block_n, n)
+    mc = min(block_m, m)
+    kp = max(k, 128)
+    ow = (k * bits + 7) // 8
+    ew = (k + 7) // 8
+
+    def _pad_to(x, mult, axis):
+        pad = (-x.shape[axis]) % mult
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    idx_p = _pad_to(_pad_to(indices, bn, 0), mc, 1)
+    nnz_p = _pad_to(nnz, bn, 0)
+    np_, mp_ = idx_p.shape
+    nc = mp_ // mc
+
+    grid = (np_ // bn, nc)
+    packed, empty = pl.pallas_call(
+        functools.partial(_oph_pack_kernel, mc=mc, shift=shift, k=k,
+                          kp=kp, bits=bits, densify=densify, nc=nc,
+                          ow=ow, ew=ew),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, c: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, c: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bn, mc), lambda i, c: (i, c)),
+            pl.BlockSpec((bn,), lambda i, c: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, ow), lambda i, c: (i, 0)),
+            pl.BlockSpec((bn, ew), lambda i, c: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, ow), jnp.uint8),
+            jax.ShapeDtypeStruct((np_, ew), jnp.uint8),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn, kp), jnp.uint32)],
+        interpret=interpret,
+    )(a.reshape(1, 1), b.reshape(1, 1), idx_p, nnz_p)
+    return packed[:n], empty[:n]

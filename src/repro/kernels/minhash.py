@@ -14,6 +14,13 @@ hashes + a min-reduction over each document's nonzeros.  We map
 VMEM working set per step: BN·MC (indices) + BN·MC·BK (hash values)
 ≈ 8·256·128·4 B ≈ 1 MiB — well inside the ~16 MiB/core budget, with
 MXU-free pure-VPU arithmetic (uint32 mul/add/xor/shift/min).
+
+This kernel returns the raw uint32 minima (n·k·4 bytes to the host).
+The preprocessing hot path uses ``repro.kernels.fused_encode``'s
+``minhash_pack_pallas`` instead, which shares this hash loop (and
+``_fmix32``) but accumulates minima in VMEM scratch and emits packed
+b-bit bytes in the final nnz grid step — n·ceil(k·b/8) bytes off the
+device instead of n·k·4.
 """
 from __future__ import annotations
 

@@ -23,6 +23,12 @@ VMEM working set per step: BN·MC (indices) + BN·MC·K (compare/select)
 k must be a power of two (bin = top log2(k) bits of the hash) and is
 padded to the 128-lane boundary; padded lanes never match a bin id and
 fall off at the final slice.
+
+This kernel returns the raw uint32 minima (n·k·4 bytes to the host).
+The preprocessing hot path uses ``repro.kernels.fused_encode``'s
+``oph_pack_pallas`` instead, which shares this kernel's grid and
+scatter-min body but densifies, b-bit-masks and byte-packs in the
+final grid step so only n·ceil(k·b/8) bytes leave the device.
 """
 from __future__ import annotations
 

@@ -27,6 +27,11 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.minhash import minhash_pallas
 from repro.kernels.oph import oph_pallas
+from repro.kernels.fused_encode import (
+    PACK_BITS,
+    minhash_pack_pallas,
+    oph_pack_pallas,
+)
 from repro.kernels.bbit_linear import (
     bbit_linear_fwd_pallas,
     bbit_linear_bwd_dw_pallas,
@@ -65,6 +70,39 @@ def oph(indices, nnz, a, b, k: int, *, interpret: Optional[bool] = None):
     """
     return oph_pallas(indices, nnz, a, b, k=k,
                       interpret=_auto_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+def fused_pack_supported(bits: int) -> bool:
+    """Fused hash→b-bit→pack kernels need codes that never straddle a
+    byte boundary (b ∈ {1, 2, 4, 8}); other b pack on-device via XLA
+    (``core.bbit.pack_codes_jnp``)."""
+    return bits in PACK_BITS
+
+
+def minhash_packed(indices, nnz, a, b, bits: int,
+                   *, interpret: Optional[bool] = None):
+    """Fused min-hash + b-bit + pack → uint8 (n, ceil(k·bits/8)).
+
+    Only the packed bytes leave the device — 1/(32/bits) of the
+    ``minhash_bbit`` host↔device traffic.
+    """
+    return minhash_pack_pallas(indices, nnz, a, b, bits=bits,
+                               interpret=_auto_interpret(interpret))
+
+
+def oph_packed(indices, nnz, a, b, k: int, bits: int, *,
+               densify: bool = True,
+               interpret: Optional[bool] = None):
+    """Fused OPH + densify/zero-code + b-bit + pack.
+
+    Returns (packed uint8 (n, ceil(k·bits/8)), empty uint8 (n,
+    ceil(k/8)) — the np.packbits empty-bin bitmask, meaningful for the
+    zero-coded variant).
+    """
+    return oph_pack_pallas(indices, nnz, a, b, k=k, bits=bits,
+                           densify=densify,
+                           interpret=_auto_interpret(interpret))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,273 @@
+"""Fused encode pipeline: the hash→b-bit→pack kernels must be
+bit-identical to the unfused reference (bbit_codes ∘ minhash/oph +
+pack_codes), across b ∈ {1,2,4,8}, ragged nnz (empty rows included),
+k that is not a lane multiple, and oph_zero empty-bin masks; plus the
+streaming writer / loader / iterator built on top of them."""
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core.bbit import (
+    pack_codes,
+    pack_codes_jnp,
+    pack_mask_jnp,
+    packed_width,
+    unpack_codes,
+)
+from repro.core.oph import (
+    OPH_EMPTY_CODE,
+    OPHHash,
+    densify_rotation_numpy,
+    oph_bin_minima_numpy,
+)
+from repro.core.schemes import make_scheme
+from repro.data.packing import bucket_width, pad_rows
+from repro.kernels import ref
+from repro.kernels.fused_encode import minhash_pack_pallas, oph_pack_pallas
+
+B_FUSED = (1, 2, 4, 8)
+
+
+def _mk_minwise(n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, 1 << 30, size=(n, m)).astype(np.int32)
+    nnz = rng.integers(0, m + 1, size=(n,)).astype(np.int32)  # ragged, 0 ok
+    a = (rng.integers(0, 1 << 32, size=k, dtype=np.uint64) | 1
+         ).astype(np.uint32)
+    b = rng.integers(0, 1 << 32, size=k, dtype=np.uint64).astype(np.uint32)
+    return idx, nnz, a, b
+
+
+def _ref_minwise_packed(idx, nnz, a, b, bits):
+    z = np.asarray(ref.minhash(jnp.asarray(idx), jnp.asarray(nnz),
+                               jnp.asarray(a), jnp.asarray(b)))
+    return pack_codes((z & ((1 << bits) - 1)).astype(np.uint16), bits)
+
+
+# ---------------------------------------------------------------------------
+# Packers: device twins are bit-exact against the numpy reference.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b", [1, 2, 3, 4, 6, 8, 12, 16])
+def test_pack_codes_jnp_matches_numpy(b):
+    rng = np.random.default_rng(b)
+    codes = rng.integers(0, 1 << b, size=(7, 37)).astype(np.uint16)
+    got = np.asarray(pack_codes_jnp(jnp.asarray(codes), b))
+    want = pack_codes(codes, b)
+    assert np.array_equal(got, want)
+    assert got.shape[1] == packed_width(37, b)
+    assert np.array_equal(unpack_codes(got, 37, b), codes)
+
+
+def test_pack_mask_jnp_matches_packbits():
+    rng = np.random.default_rng(0)
+    mask = rng.random((6, 43)) < 0.3
+    assert np.array_equal(np.asarray(pack_mask_jnp(jnp.asarray(mask))),
+                          np.packbits(mask, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Fused minwise kernel ≡ pack_codes ∘ bbit_codes ∘ minhash.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,m,k", [
+    (1, 1, 1), (4, 16, 8), (3, 40, 33),      # k not a multiple of 8
+    (6, 300, 130), (2, 9, 7), (5, 64, 129),  # k not a lane multiple
+])
+@pytest.mark.parametrize("bits", B_FUSED)
+def test_fused_minwise_bit_identical(n, m, k, bits):
+    idx, nnz, a, b = _mk_minwise(n, m, k, seed=n * 100 + m + k + bits)
+    got = minhash_pack_pallas(jnp.asarray(idx), jnp.asarray(nnz),
+                              jnp.asarray(a), jnp.asarray(b),
+                              bits=bits, interpret=True)
+    want = _ref_minwise_packed(idx, nnz, a, b, bits)
+    assert got.shape == (n, packed_width(k, bits))
+    assert np.array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(1, 8), m=st.integers(1, 48), k=st.integers(1, 40),
+       bits=st.sampled_from(B_FUSED), bn=st.sampled_from([2, 8]),
+       bm=st.sampled_from([16, 256]))
+def test_fused_minwise_property(n, m, k, bits, bn, bm):
+    idx, nnz, a, b = _mk_minwise(n, m, k, seed=n + m * 5 + k * 11 + bits)
+    got = minhash_pack_pallas(jnp.asarray(idx), jnp.asarray(nnz),
+                              jnp.asarray(a), jnp.asarray(b), bits=bits,
+                              block_n=bn, block_m=bm, interpret=True)
+    want = _ref_minwise_packed(idx, nnz, a, b, bits)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_fused_rejects_straddling_b():
+    idx, nnz, a, b = _mk_minwise(2, 4, 4, seed=0)
+    with pytest.raises(ValueError):
+        minhash_pack_pallas(jnp.asarray(idx), jnp.asarray(nnz),
+                            jnp.asarray(a), jnp.asarray(b), bits=6,
+                            interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Fused OPH kernel ≡ pack_codes ∘ (densify | zero-code) ∘ bin minima.
+# ---------------------------------------------------------------------------
+def _ref_oph_packed(idx, nnz, fam, bits, densify):
+    mask = np.arange(idx.shape[1])[None, :] < nnz[:, None]
+    v, e = oph_bin_minima_numpy(idx, mask, fam)
+    if densify:
+        dv, _ = densify_rotation_numpy(v, e)
+        codes = (dv & ((1 << bits) - 1)).astype(np.uint16)
+    else:
+        codes = np.where(e, 0, v & ((1 << bits) - 1)).astype(np.uint16)
+    return pack_codes(codes, bits), np.packbits(e, axis=1)
+
+
+@pytest.mark.parametrize("n,m,k", [
+    (1, 1, 2), (4, 16, 8), (6, 5, 64),       # nnz ≪ k: empty bins
+    (3, 300, 256), (5, 40, 128),
+])
+@pytest.mark.parametrize("bits", B_FUSED)
+@pytest.mark.parametrize("densify", [True, False])
+def test_fused_oph_bit_identical(n, m, k, bits, densify):
+    rng = np.random.default_rng(n * 100 + m + k + bits)
+    idx = rng.integers(0, 1 << 30, size=(n, m)).astype(np.int32)
+    nnz = rng.integers(0, m + 1, size=(n,)).astype(np.int32)
+    fam = OPHHash.make(k, seed=n + k)
+    a, b = fam.params()
+    got_p, got_e = oph_pack_pallas(jnp.asarray(idx), jnp.asarray(nnz),
+                                   a, b, k=k, bits=bits, densify=densify,
+                                   interpret=True)
+    want_p, want_e = _ref_oph_packed(idx, nnz, fam, bits, densify)
+    assert np.array_equal(np.asarray(got_p), want_p)
+    assert np.array_equal(np.asarray(got_e), want_e)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(1, 6), m=st.integers(1, 40),
+       k=st.sampled_from([2, 8, 32, 64]), bits=st.sampled_from(B_FUSED),
+       densify=st.sampled_from([True, False]))
+def test_fused_oph_property(n, m, k, bits, densify):
+    """Ragged nnz (empty rows included) + oph_zero empty-bin masks."""
+    rng = np.random.default_rng(n + m * 3 + k * 7 + bits)
+    idx = rng.integers(0, 1 << 30, size=(n, m)).astype(np.int32)
+    nnz = rng.integers(0, m + 1, size=(n,)).astype(np.int32)
+    fam = OPHHash.make(k, seed=m + bits)
+    a, b = fam.params()
+    got_p, got_e = oph_pack_pallas(jnp.asarray(idx), jnp.asarray(nnz),
+                                   a, b, k=k, bits=bits, densify=densify,
+                                   interpret=True)
+    want_p, want_e = _ref_oph_packed(idx, nnz, fam, bits, densify)
+    assert np.array_equal(np.asarray(got_p), want_p)
+    assert np.array_equal(np.asarray(got_e), want_e)
+
+
+# ---------------------------------------------------------------------------
+# Scheme layer: encode_packed ≡ pack_codes ∘ encode_padded, every scheme.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", ["minwise", "oph", "oph_zero"])
+@pytest.mark.parametrize("b", [1, 6, 8])
+def test_scheme_encode_packed_matches_padded(scheme, b):
+    rng = np.random.default_rng(3)
+    rows = [np.unique(rng.integers(0, 1 << 28, size=rng.integers(0, 60)))
+            for _ in range(18)]
+    idx, nnz = pad_rows(rows, pad_to_multiple=1)
+    sch = make_scheme(scheme, 32, 5)
+    codes = sch.encode_padded(idx, nnz, b)
+    packed, empty = sch.encode_packed(idx, nnz, b)
+    if scheme == "oph_zero":
+        want = np.where(codes == OPH_EMPTY_CODE, 0, codes)
+        assert np.array_equal(
+            empty, np.packbits(codes == OPH_EMPTY_CODE, axis=1))
+    else:
+        want = codes & ((1 << b) - 1)   # 'oph' all-empty rows: sentinel
+        assert empty is None            # low bits are all-ones both ways
+    assert np.array_equal(packed, pack_codes(want.astype(np.uint16), b))
+
+
+# ---------------------------------------------------------------------------
+# Streaming pipeline: packed path ≡ compat path, shards round-trip.
+# ---------------------------------------------------------------------------
+def _corpus(n=40, seed=9):
+    rng = np.random.default_rng(seed)
+    rows = [np.unique(rng.integers(0, 1 << 28, size=rng.integers(1, 150)))
+            for _ in range(n)]
+    return rows, rng.integers(0, 2, n).astype(np.int32)
+
+
+@pytest.mark.parametrize("scheme", ["minwise", "oph", "oph_zero"])
+def test_preprocess_rows_packed_matches_unpacked(scheme):
+    from repro.data import preprocess_rows, preprocess_rows_packed
+    rows, _ = _corpus()
+    codes = preprocess_rows(rows, 32, 8, scheme=scheme, chunk=16)
+    packed, empty = preprocess_rows_packed(rows, 32, 8, scheme=scheme,
+                                           chunk=16)
+    if scheme == "oph_zero":
+        ref_codes = np.where(codes == OPH_EMPTY_CODE, 0, codes)
+        assert np.array_equal(
+            empty, np.packbits(codes == OPH_EMPTY_CODE, axis=1))
+    else:
+        ref_codes, _ = codes & 255, None
+        assert empty is None
+    assert np.array_equal(
+        packed, pack_codes(ref_codes.astype(np.uint16), 8))
+
+
+@pytest.mark.parametrize("scheme", ["minwise", "oph_zero"])
+def test_streaming_save_restores_order_and_iterates(tmp_path, scheme):
+    from repro.data import (iter_hashed, load_hashed, preprocess_and_save,
+                            preprocess_rows)
+    rows, labels = _corpus(50)
+    d = str(tmp_path / scheme)
+    stats = preprocess_and_save(d, rows, labels, k=32, b=8, scheme=scheme,
+                                n_shards=4, chunk=16)
+    assert stats["mnnz_per_s"] > 0 and stats["seconds_hashing"] > 0
+    codes, l2, meta = load_hashed(d)
+    assert meta["format_version"] == 3 and meta["shards"] == 4
+    assert meta["packed_width"] == packed_width(32, 8)
+    assert "mnnz_per_s" in meta       # throughput recorded next to data
+    assert np.array_equal(l2, labels)
+    assert np.array_equal(codes, preprocess_rows(rows, 32, 8,
+                                                 scheme=scheme))
+    # per-shard mmap iterator: covers every row exactly once, no concat
+    seen = []
+    for c, lab, rids in iter_hashed(d):
+        assert len(c) <= -(-50 // 4) and c.shape[1] == 32
+        assert np.array_equal(c, codes[rids])
+        assert np.array_equal(lab, labels[rids])
+        seen.extend(rids.tolist())
+    assert sorted(seen) == list(range(50))
+
+
+def test_streaming_writer_v2_archives_still_load(tmp_path):
+    """The bulk v2 writer and old archives stay readable (and iterable)."""
+    from repro.data import iter_hashed, load_hashed, preprocess_rows, \
+        save_hashed
+    rows, labels = _corpus(30)
+    codes = preprocess_rows(rows, 16, 4, scheme="oph")
+    d = str(tmp_path / "v2")
+    save_hashed(d, codes, labels, 16, 4, scheme="oph", n_shards=3)
+    c2, l2, meta = load_hashed(d)
+    assert meta["format_version"] == 2
+    assert np.array_equal(c2 & 15, codes & 15)
+    assert np.array_equal(l2, labels)
+    for c, lab, rids in iter_hashed(d):
+        assert np.array_equal(c & 15, codes[rids] & 15)
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing: O(log m) jit variants instead of one per chunk.
+# ---------------------------------------------------------------------------
+def test_bucket_width_pow2():
+    assert bucket_width(1) == 128 and bucket_width(128) == 128
+    assert bucket_width(129) == 256 and bucket_width(300) == 512
+    widths = {bucket_width(m) for m in range(1, 5000)}
+    assert widths == {128, 256, 512, 1024, 2048, 4096, 8192}
+
+
+def test_pad_rows_bucketed_width():
+    rows = [np.arange(300), np.arange(5)]
+    idx, nnz = pad_rows(rows, bucket=True)
+    assert idx.shape[1] == 512            # next pow2 above 300
+    assert nnz.tolist() == [300, 5]
+    idx2, _ = pad_rows([np.arange(3)], bucket=True)
+    assert idx2.shape[1] == 128           # floor at one lane tile

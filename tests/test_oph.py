@@ -173,7 +173,8 @@ def test_one_hash_eval_per_nonzero_vs_k():
 @pytest.mark.parametrize("scheme", ["oph", "oph_zero"])
 def test_hashed_dataset_roundtrip_oph(tmp_path, scheme):
     """preprocess → bit-packed shards → load restores codes, scheme and
-    (for zero-coding) the empty-bin sentinel; meta is version 2."""
+    (for zero-coding) the empty-bin sentinel; meta is version 3
+    (streaming v3 shards since PR 2)."""
     from repro.data import load_hashed, preprocess_and_save, preprocess_rows
     rng = np.random.default_rng(7)
     rows = [np.unique(rng.integers(0, 1 << 28,
@@ -185,7 +186,7 @@ def test_hashed_dataset_roundtrip_oph(tmp_path, scheme):
                                 scheme=scheme, n_shards=3)
     assert stats["scheme"] == scheme
     codes, l2, meta = load_hashed(d)
-    assert meta["scheme"] == scheme and meta["format_version"] == 2
+    assert meta["scheme"] == scheme and meta["format_version"] == 3
     assert np.array_equal(l2, labels)
     want = preprocess_rows(rows, k=32, b=6, scheme=scheme)
     assert np.array_equal(codes, want)
