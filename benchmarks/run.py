@@ -10,10 +10,12 @@ preprocessing-pipeline parity pass — fast enough for every merge, and
 any bit mismatch fails the run.  Smoke mode never writes trajectory
 JSON files.
 
-OPH suites write ``BENCH_oph.json`` and the preprocess suite writes
-``BENCH_preprocess.json`` (override paths with ``BENCH_OPH_JSON`` /
-``BENCH_PREPROCESS_JSON``) so the preprocessing-throughput trajectory
-is machine-readable across commits.
+OPH suites write ``BENCH_oph.json``, the preprocess suite writes
+``BENCH_preprocess.json`` and the streaming-trainer suite writes
+``BENCH_streaming.json`` (override paths with ``BENCH_OPH_JSON`` /
+``BENCH_PREPROCESS_JSON`` / ``BENCH_STREAMING_JSON``) so the
+preprocessing- and training-throughput trajectories are
+machine-readable across commits.
 """
 import json
 import os
@@ -23,8 +25,9 @@ import traceback
 # Suites whose records feed the perf-trajectory files.
 OPH_SUITES = ("kernels_oph", "oph_curve")
 PREPROCESS_SUITES = ("preprocess",)
+STREAMING_SUITES = ("streaming",)
 
-SMOKE_DEFAULT = ["kernels_fused", "preprocess"]
+SMOKE_DEFAULT = ["kernels_fused", "preprocess", "streaming"]
 
 
 def _write_json(path_env: str, default: str, bench: str, records) -> None:
@@ -49,7 +52,7 @@ def main() -> None:
         os.environ["BENCH_SMOKE"] = "1"   # before benchmarks.* imports
 
     from benchmarks import (kernel_bench, paper_figures, preprocess_bench,
-                            roofline_report)
+                            roofline_report, streaming_bench)
 
     suites = {
         "fig1": paper_figures.fig1_fig2_svm,
@@ -68,6 +71,7 @@ def main() -> None:
         "kernels_vw": kernel_bench.vw_sketch_bench,
         "roofline": roofline_report.roofline_rows,
         "preprocess": preprocess_bench.preprocess_bench,
+        "streaming": streaming_bench.streaming_bench,
     }
     if argv:
         selected = argv
@@ -80,6 +84,7 @@ def main() -> None:
     trajectories = {           # suite group → (records, failed flag)
         "oph": [OPH_SUITES, [], False],
         "preprocess": [PREPROCESS_SUITES, [], False],
+        "streaming": [STREAMING_SUITES, [], False],
     }
     for name in selected:
         try:
@@ -101,6 +106,10 @@ def main() -> None:
                 and not trajectories["preprocess"][2]):
             _write_json("BENCH_PREPROCESS_JSON", "BENCH_preprocess.json",
                         "preprocess", trajectories["preprocess"][1])
+        if (trajectories["streaming"][1]
+                and not trajectories["streaming"][2]):
+            _write_json("BENCH_STREAMING_JSON", "BENCH_streaming.json",
+                        "streaming", trajectories["streaming"][1])
     for key, (group_suites, records, failed) in trajectories.items():
         if failed:
             # never clobber a complete trajectory file with partials

@@ -1,0 +1,131 @@
+"""One-pass streaming trainer vs the in-memory SGD path.
+
+The paper's 200 GB scenario in miniature: preprocess a synthetic
+expanded-rcv1 corpus into a multi-shard format-v3 archive, then train
+
+  * ``streaming`` — ``fit_streaming``: one pass straight off the
+    mmap'd packed shards (codes widened on device inside the train
+    step), Polyak tail averaging, progressive validation;
+  * ``in_memory`` — ``load_hashed`` the whole code matrix, then the
+    classic ``train_bbit_sgd`` minibatch loop (same epochs / batch /
+    lr, so the comparison isolates the streaming machinery).
+
+Derived columns carry rows/s, the one-pass progressive accuracy (the
+number VW reports online), held-out test accuracy for both paths and
+the streaming/in-memory throughput ratio.  Suite ``streaming`` feeds
+``BENCH_streaming.json`` via benchmarks.run.
+
+``--smoke`` (CI) runs a tiny archive instead and asserts the
+determinism contract: two identical runs produce bit-identical params,
+and a kill (``stop_after_shards``) + resume reproduces the
+uninterrupted run exactly — any drift fails the merge.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, SMOKE, corpus, emit
+
+K = 64
+B = 8
+N_SHARDS = 8
+BATCH = 64
+LR = 5e-3
+EPOCHS = 1                    # one pass — the online regime
+N_DOCS = 24 if SMOKE else (800 if QUICK else 3000)
+
+
+def _setup(root, n_docs, k, b, n_shards):
+    """Fills ``root`` (caller-owned temp dir) with a packed archive of
+    the corpus' training half; returns (codes_te, labels_te, n_tr) —
+    only the held-out half is hashed in memory."""
+    from repro.data import preprocess_and_save, preprocess_rows
+    rows, labels = corpus(n_docs)
+    n_tr = len(rows) // 2
+    codes_te = preprocess_rows(rows[n_tr:], k=k, b=b, seed=1, chunk=256)
+    preprocess_and_save(root, rows[:n_tr], labels[:n_tr], k=k, b=b,
+                        seed=1, n_shards=n_shards, chunk=256)
+    return codes_te, labels[n_tr:], n_tr
+
+
+def _test_acc(params, codes_te, labels_te, lcfg):
+    import jax.numpy as jnp
+    from repro.models.linear import predict_classes
+    from repro.train.metrics import accuracy
+    return accuracy(predict_classes(params, jnp.asarray(codes_te), lcfg),
+                    labels_te)
+
+
+def _smoke() -> list:
+    import jax
+    from repro.models.linear import BBitLinearConfig
+    from repro.train import fit_streaming
+    with tempfile.TemporaryDirectory(prefix="stream_bench_") as root:
+        _, _, n_tr = _setup(root, N_DOCS, 16, 4, 2)
+        lcfg = BBitLinearConfig(k=16, b=4)
+        kw = dict(epochs=2, batch_size=8, lr=LR, seed=0)
+        a = fit_streaming(root, lcfg, **kw)
+        b = fit_streaming(root, lcfg, **kw)
+        for x, y in zip(jax.tree.leaves(a.params),
+                        jax.tree.leaves(b.params)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                "streaming run is not deterministic"
+        with tempfile.TemporaryDirectory() as ck:
+            part = fit_streaming(root, lcfg, ckpt_dir=ck,
+                                 stop_after_shards=1, **kw)
+            assert not part.completed
+            resumed = fit_streaming(root, lcfg, ckpt_dir=ck, **kw)
+            for x, y in zip(jax.tree.leaves(a.params),
+                            jax.tree.leaves(resumed.params)):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                    "kill/resume drifted from the uninterrupted run"
+    return emit([("streaming/smoke_determinism_k16_b4", 0.0,
+                  f"rows={n_tr};resume_bit_identical=1")])
+
+
+def streaming_bench() -> list:
+    if SMOKE:
+        return _smoke()
+    from repro.configs.rcv1_oph import CONFIG
+    from repro.data import load_hashed
+    from repro.models.linear import BBitLinearConfig
+    from repro.train import fit_streaming, train_bbit_sgd
+    with tempfile.TemporaryDirectory(prefix="stream_bench_") as root:
+        codes_te, labels_te, n_tr = _setup(root, N_DOCS, K, B, N_SHARDS)
+        lcfg = BBitLinearConfig(k=K, b=B)
+
+        # config supplies epochs (one pass) + averaging window; the
+        # bench corpus is small so batch/lr shrink with it
+        res = fit_streaming(root, lcfg, **CONFIG.stream_kwargs(
+            epochs=EPOCHS, batch_size=BATCH, lr=LR), seed=0)
+        t_stream = res.train_seconds
+        rows_s_stream = res.examples_seen / max(t_stream, 1e-9)
+        acc_stream = _test_acc(res.eval_params, codes_te, labels_te,
+                               lcfg)
+
+        t0 = time.perf_counter()
+        codes_tr, labels_tr, _ = load_hashed(root)
+        t_load = time.perf_counter() - t0
+        mem = train_bbit_sgd(codes_tr, labels_tr, codes_te, labels_te,
+                             lcfg, epochs=EPOCHS, batch_size=BATCH,
+                             lr=LR, seed=0)
+        rows_s_mem = (EPOCHS * n_tr) / max(mem.train_seconds, 1e-9)
+
+    return emit([
+        (f"streaming/onepass_k{K}_b{B}_stream", t_stream * 1e6,
+         f"rows_per_s={rows_s_stream:.0f};"
+         f"progressive_acc={res.progressive_acc:.4f};"
+         f"test_acc={acc_stream:.4f};shards={N_SHARDS}"),
+        (f"streaming/onepass_k{K}_b{B}_in_memory",
+         (t_load + mem.train_seconds) * 1e6,
+         f"rows_per_s={rows_s_mem:.0f};test_acc={mem.test_acc:.4f};"
+         f"load_s={t_load:.3f};"
+         f"stream_vs_mem={rows_s_stream / max(rows_s_mem, 1e-9):.2f}x"),
+    ])
+
+
+if __name__ == "__main__":
+    streaming_bench()

@@ -34,10 +34,30 @@ class OPHPaperConfig:
     # O(pipeline depth · chunk + one shard), never the (n, k) matrix
     preprocess_chunk: int = 4096
     preprocess_shards: int = 16
+    # streaming training (PR 3): train.streaming.fit_streaming over the
+    # v3 shards — one-pass SGD + Polyak tail averaging, packed bytes to
+    # the device, shard-boundary checkpoints.  avg_start_frac opens the
+    # tail-averaging window after that fraction of planned steps.
+    stream_batch: int = 1024
+    stream_lr: float = 1e-2
+    stream_epochs: int = 1       # one pass — the VW-online comparison
+    avg_start_frac: float = 0.5
+    ckpt_every_shards: int = 4
 
     def linear_config(self) -> BBitLinearConfig:
         return BBitLinearConfig(k=self.k, b=self.b,
                                 n_classes=self.n_classes)
+
+    def stream_kwargs(self, **overrides) -> dict:
+        """Keyword arguments for ``train.streaming.fit_streaming`` at
+        this config's paper scale; pass overrides for scaled-down runs
+        (examples/benchmarks shrink batch/epochs, keep the averaging
+        and checkpoint cadence)."""
+        kw = dict(epochs=self.stream_epochs, batch_size=self.stream_batch,
+                  lr=self.stream_lr, avg_start_frac=self.avg_start_frac,
+                  ckpt_every_shards=self.ckpt_every_shards)
+        kw.update(overrides)
+        return kw
 
 
 CONFIG = OPHPaperConfig()

@@ -111,6 +111,47 @@ def pack_mask_jnp(mask: jax.Array) -> jax.Array:
     return out.astype(jnp.uint8)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "b"))
+def unpack_codes_jnp(packed: jax.Array, k: int, b: int) -> jax.Array:
+    """Device-side ``unpack_codes`` — bit-exact inverse of
+    ``pack_codes_jnp`` → uint16 (n, k), jit-able.
+
+    This is what lets training consume the on-disk packed shards
+    directly: a minibatch crosses the host↔device boundary as
+    ceil(k·b/8) bytes per row and is widened to (n, k) codes on the
+    accelerator, inside the jitted train step.  For b ∈ {1, 2, 4, 8}
+    each byte splits into 8/b strided shift-ands (the mirror image of
+    the packer's shift-ors); other b go through the general bit
+    expansion.
+    """
+    n = packed.shape[0]
+    p = packed.astype(jnp.uint32)
+    if 8 % b == 0:
+        r = 8 // b
+        mask = jnp.uint32((1 << b) - 1)
+        # (n, w, r): code j·r+t sits in bits [t·b, (t+1)·b) of byte j
+        cols = jnp.stack(
+            [(p >> jnp.uint32(t * b)) & mask for t in range(r)], axis=2)
+        return cols.reshape(n, -1)[:, :k].astype(jnp.uint16)
+    bits = ((p[:, :, None] >> jnp.arange(8, dtype=jnp.uint32)[None, None, :])
+            & 1)
+    flat = bits.reshape(n, -1)[:, : k * b].reshape(n, k, b)
+    weights = (1 << jnp.arange(b, dtype=jnp.uint32))
+    return jnp.sum(flat * weights[None, None, :], axis=2).astype(jnp.uint16)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def unpack_mask_jnp(packed: jax.Array, k: int) -> jax.Array:
+    """Device-side ``np.unpackbits(..., axis=1, count=k)`` (MSB-first)
+    → bool (n, k); the inverse of ``pack_mask_jnp`` for the
+    ``oph_zero`` empty-bin bitmask."""
+    n = packed.shape[0]
+    p = packed.astype(jnp.uint32)
+    cols = jnp.stack(
+        [(p >> jnp.uint32(7 - t)) & 1 for t in range(8)], axis=2)
+    return cols.reshape(n, -1)[:, :k].astype(bool)
+
+
 def unpack_codes(packed: np.ndarray, k: int, b: int) -> np.ndarray:
     """Inverse of ``pack_codes`` → uint16 (n, k)."""
     n = packed.shape[0]

@@ -6,7 +6,8 @@ from repro.data.libsvm_io import (
 from repro.data.packing import pad_rows, batch_iterator, bucket_width
 from repro.data.hashed_dataset import (
     preprocess_rows, preprocess_rows_packed, save_hashed, load_hashed,
-    iter_hashed, preprocess_and_save, HashedShardWriter,
+    iter_hashed, iter_packed, iter_hashed_batches, load_packed_shard,
+    shard_row_counts, preprocess_and_save, HashedShardWriter,
 )
 from repro.data.loader import HashedCodesLoader, SparseRowsLoader
 from repro.data.lm_synth import token_batch, lm_example_stream
@@ -16,7 +17,8 @@ __all__ = [
     "write_libsvm", "read_libsvm", "write_shards", "read_shards",
     "shard_paths", "pad_rows", "batch_iterator", "bucket_width",
     "preprocess_rows", "preprocess_rows_packed", "save_hashed",
-    "load_hashed", "iter_hashed", "preprocess_and_save",
+    "load_hashed", "iter_hashed", "iter_packed", "iter_hashed_batches",
+    "load_packed_shard", "shard_row_counts", "preprocess_and_save",
     "HashedShardWriter", "HashedCodesLoader", "SparseRowsLoader",
     "token_batch", "lm_example_stream",
 ]

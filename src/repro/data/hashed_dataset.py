@@ -39,6 +39,20 @@ pieces with ``np.load(mmap_mode=...)`` — no all-shards concatenation.
 Plain ``.npy`` members (not ``.npz``) are what makes the mmap path
 possible.
 
+Training consumes the archive without EVER widening a full shard
+(PR 3, the train-from-shards path):
+
+  * ``load_packed_shard`` / ``iter_packed`` hand back the raw packed
+    bytes (mmap'd for v3), labels, row ids and the packed ``oph_zero``
+    empty bitmask;
+  * ``iter_hashed_batches`` slices minibatches of packed rows straight
+    off the mmap — resident memory is the touched pages of ONE shard
+    and codes are widened on the *device* (``core.bbit
+    .unpack_codes_jnp`` inside the jitted train step), which is what
+    ``train.streaming.fit_streaming`` iterates;
+  * ``shard_row_counts`` exposes per-shard row counts (mmap'd shape
+    reads) so trainers can size epochs without loading data.
+
 ``scheme`` selects the hashing recipe (see ``repro.core.schemes``):
 ``minwise`` (the paper's k-permutation pass), ``oph`` (densified one
 permutation hashing — k× fewer hash evaluations, same code format) or
@@ -245,6 +259,11 @@ class HashedShardWriter:
         self._buffered = 0
         self._shard = 0
         self._closed = False
+        # None until the first append decides; every later append must
+        # agree — an oph_zero stream that mixes empty=None and non-None
+        # chunks would otherwise silently desync the per-shard
+        # .empty.npy rows from the codes rows.
+        self._has_empty: Optional[bool] = None
 
     def append(
         self,
@@ -253,11 +272,35 @@ class HashedShardWriter:
         labels: np.ndarray,
         empty: Optional[np.ndarray] = None,
     ) -> None:
-        self._codes.append(np.ascontiguousarray(packed))
-        self._labels.append(np.asarray(labels, dtype=np.int32))
-        self._rows.append(np.asarray(row_ids, dtype=np.int64))
-        if empty is not None:
-            self._empty.append(np.ascontiguousarray(empty))
+        row_ids = np.asarray(row_ids, dtype=np.int64)
+        packed = np.ascontiguousarray(packed)
+        labels = np.asarray(labels, dtype=np.int32)
+        if not len(row_ids) == len(packed) == len(labels):
+            raise ValueError(
+                f"append row mismatch: {len(row_ids)} row_ids, "
+                f"{len(packed)} code rows, {len(labels)} labels")
+        has_empty = empty is not None
+        if self._has_empty is not None and has_empty != self._has_empty:
+            raise ValueError(
+                "inconsistent empty mask: this writer has seen "
+                f"empty={'arrays' if self._has_empty else 'None'} so far "
+                f"but this append passes empty="
+                f"{'an array' if has_empty else 'None'} — a shard's "
+                ".empty.npy rows must stay in lockstep with its codes")
+        if has_empty:
+            empty = np.ascontiguousarray(empty)
+            if len(empty) != len(row_ids):
+                raise ValueError(
+                    f"append row mismatch: {len(row_ids)} row_ids but "
+                    f"{len(empty)} empty-mask rows")
+        # commit the mode only after every validation passed — a failed
+        # append must leave the writer reusable
+        self._has_empty = has_empty
+        if has_empty:
+            self._empty.append(empty)
+        self._codes.append(packed)
+        self._labels.append(labels)
+        self._rows.append(row_ids)
         self._buffered += len(row_ids)
         while self._buffered >= self.rows_per_shard:
             self._flush(self.rows_per_shard)
@@ -287,7 +330,7 @@ class HashedShardWriter:
         np.save(base + ".codes.npy", codes)
         np.save(base + ".labels.npy", labels)
         np.save(base + ".rows.npy", rows)
-        if self._empty:
+        if self._has_empty:
             empty, self._empty = self._take(self._empty, count)
             np.save(base + ".empty.npy", empty)
         self._buffered -= count
@@ -358,28 +401,20 @@ def _read_meta(root: str) -> dict:
 def _load_shard(
     root: str, meta: dict, s: int, mmap_mode: Optional[str] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """One shard → (codes uint16 (rows, k), labels, original row ids)."""
+    """One shard → (codes uint16 (rows, k), labels, original row ids).
+
+    The widening twin of ``load_packed_shard`` — same bytes off disk
+    (single source of truth for the shard layout), then host-side
+    ``unpack_codes`` + the ``OPH_EMPTY_CODE`` sentinel."""
     k, b = meta["k"], meta["b"]
-    if meta["format_version"] >= 3:
-        base = os.path.join(root, f"hashed_{s:05d}")
-        packed = np.load(base + ".codes.npy", mmap_mode=mmap_mode)
-        labels = np.asarray(np.load(base + ".labels.npy",
-                                    mmap_mode=mmap_mode))
-        rows = np.asarray(np.load(base + ".rows.npy", mmap_mode=mmap_mode))
-        codes = unpack_codes(np.asarray(packed), k, b)
-        epath = base + ".empty.npy"
-        if os.path.exists(epath):
-            empty = np.unpackbits(
-                np.asarray(np.load(epath, mmap_mode=mmap_mode)),
-                axis=1, count=k).astype(bool)
-            codes = np.where(empty, OPH_EMPTY_CODE, codes)
-        return codes, labels, rows
-    z = np.load(os.path.join(root, f"hashed_{s:05d}.npz"))
-    codes = unpack_codes(z["codes"], k, b)
-    if "empty" in z:
-        empty = np.unpackbits(z["empty"], axis=1, count=k).astype(bool)
-        codes = np.where(empty, OPH_EMPTY_CODE, codes)
-    return codes, z["labels"], np.arange(s, meta["n"], meta["shards"])
+    packed, labels, rows, empty = load_packed_shard(
+        root, s, meta=meta, mmap=mmap_mode is not None)
+    codes = unpack_codes(np.asarray(packed), k, b)
+    if empty is not None:
+        mask = np.unpackbits(np.asarray(empty), axis=1,
+                             count=k).astype(bool)
+        codes = np.where(mask, OPH_EMPTY_CODE, codes)
+    return codes, labels, rows
 
 
 def iter_hashed(
@@ -405,6 +440,112 @@ def iter_hashed(
         yield _load_shard(root, meta, s, mmap_mode=mode)
 
 
+def load_packed_shard(
+    root: str,
+    s: int,
+    *,
+    meta: Optional[dict] = None,
+    mmap: bool = True,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Optional[np.ndarray]]:
+    """One shard WITHOUT widening: → (packed uint8 (rows, ceil(k·b/8)),
+    labels int32, original row ids int64, packed empty bitmask | None).
+
+    For format-v3 archives the packed arrays come back mmap'd
+    (``mmap=True``), so touching a minibatch of rows faults in only
+    those pages; the caller widens on the device with
+    ``core.bbit.unpack_codes_jnp``.  v1/v2 ``.npz`` shards also store
+    packed bytes — they decompress one shard but never unpack codes.
+    """
+    meta = _read_meta(root) if meta is None else meta
+    if meta["format_version"] >= 3:
+        mode = "r" if mmap else None
+        base = os.path.join(root, f"hashed_{s:05d}")
+        packed = np.load(base + ".codes.npy", mmap_mode=mode)
+        labels = np.asarray(np.load(base + ".labels.npy", mmap_mode=mode))
+        rows = np.asarray(np.load(base + ".rows.npy", mmap_mode=mode))
+        epath = base + ".empty.npy"
+        empty = (np.load(epath, mmap_mode=mode)
+                 if os.path.exists(epath) else None)
+        return packed, labels, rows, empty
+    z = np.load(os.path.join(root, f"hashed_{s:05d}.npz"))
+    rows = np.arange(s, meta["n"], meta["shards"], dtype=np.int64)
+    return (z["codes"], z["labels"], rows,
+            z["empty"] if "empty" in z else None)
+
+
+def iter_packed(
+    root: str,
+    shard_ids: Optional[Sequence[int]] = None,
+    *,
+    mmap: bool = True,
+) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray,
+                    Optional[np.ndarray]]]:
+    """Yields ``load_packed_shard`` tuples one shard at a time."""
+    meta = _read_meta(root)
+    ids = range(meta["shards"]) if shard_ids is None else shard_ids
+    for s in ids:
+        yield load_packed_shard(root, s, meta=meta, mmap=mmap)
+
+
+def iter_hashed_batches(
+    root: str,
+    batch_size: int,
+    *,
+    shard_ids: Optional[Sequence[int]] = None,
+    perm_seed: Optional[int] = None,
+    mmap: bool = True,
+    drop_remainder: bool = False,
+) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray,
+                    Optional[np.ndarray]]]:
+    """Minibatches of PACKED rows straight off the shards: yields
+    (packed uint8 (B, ceil(k·b/8)), labels int32 (B,), original row
+    ids int64 (B,), packed empty bitmask (B, ceil(k/8)) | None).
+
+    The v3 shard arrays stay mmap'd; each batch fancy-indexes only its
+    B rows, so resident memory is O(one batch + the touched pages of
+    one shard) however large the archive — the iterator
+    ``train.streaming.fit_streaming`` drives shard by shard.
+    ``perm_seed`` (an int, or a tuple of ints such as the trainer's
+    ``(seed, epoch)``) applies a deterministic within-shard row
+    permutation — a pure function of (*perm_seed, shard id), so
+    restarted consumers replay identical batches; the final partial
+    batch of each shard is yielded, not dropped, unless
+    ``drop_remainder``.
+    """
+    meta = _read_meta(root)
+    ids = range(meta["shards"]) if shard_ids is None else shard_ids
+    for s in ids:
+        packed, labels, rows, empty = load_packed_shard(
+            root, s, meta=meta, mmap=mmap)
+        n = packed.shape[0]
+        if perm_seed is None:
+            order = np.arange(n)
+        else:
+            ent = (tuple(perm_seed) if isinstance(perm_seed, (tuple, list))
+                   else (perm_seed,))
+            order = np.random.default_rng(
+                np.random.SeedSequence(ent + (int(s),))).permutation(n)
+        stop = (n - batch_size + 1) if drop_remainder else n
+        for lo in range(0, max(stop, 0), batch_size):
+            sel = order[lo: lo + batch_size]
+            yield (np.ascontiguousarray(packed[sel]), labels[sel],
+                   rows[sel],
+                   None if empty is None
+                   else np.ascontiguousarray(empty[sel]))
+
+
+def shard_row_counts(root: str) -> list:
+    """Rows per shard, without loading shard data (v3: mmap'd shape
+    reads; v1/v2: the round-robin formula)."""
+    meta = _read_meta(root)
+    if meta["format_version"] >= 3:
+        return [int(np.load(os.path.join(root, f"hashed_{s:05d}.labels.npy"),
+                            mmap_mode="r").shape[0])
+                for s in range(meta["shards"])]
+    return [len(range(s, meta["n"], meta["shards"]))
+            for s in range(meta["shards"])]
+
+
 def load_hashed(
     root: str, shard_ids: Optional[Sequence[int]] = None
 ) -> Tuple[np.ndarray, np.ndarray, dict]:
@@ -424,6 +565,11 @@ def load_hashed(
         all_codes.append(codes)
         all_labels.append(labels)
         sels.append(rows)
+    if not all_codes:
+        # 0-shard archive (or an empty shard_ids selection): a clear
+        # empty result instead of np.concatenate's bare ValueError
+        return (np.zeros((0, meta["k"]), np.uint16),
+                np.zeros((0,), np.int32), meta)
     codes = np.concatenate(all_codes)
     labels = np.concatenate(all_labels)
     if all_shards:

@@ -1,9 +1,13 @@
-"""Optimizers: SGD/momentum/AdamW (quantizable moments), TRON, schedules."""
+"""Optimizers: SGD/momentum/AdamW (quantizable moments), TRON,
+schedules, Polyak iterate averaging."""
 from repro.optim.optimizers import (
     Optimizer, AdamWConfig, sgd, adamw, make_optimizer,
 )
 from repro.optim.schedules import constant, warmup_cosine, inverse_sqrt, make
 from repro.optim.tron import tron_minimize, TronResult
+from repro.optim.averaging import (
+    init_average, polyak_update, average_or_none,
+)
 from repro.optim.quantized_state import (
     QuantizedArray, quantize, dequantize, maybe_quantize, maybe_dequantize,
 )
@@ -12,6 +16,7 @@ __all__ = [
     "Optimizer", "AdamWConfig", "sgd", "adamw", "make_optimizer",
     "constant", "warmup_cosine", "inverse_sqrt", "make",
     "tron_minimize", "TronResult",
+    "init_average", "polyak_update", "average_or_none",
     "QuantizedArray", "quantize", "dequantize", "maybe_quantize",
     "maybe_dequantize",
 ]

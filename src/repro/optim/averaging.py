@@ -1,0 +1,53 @@
+"""Polyak(-Ruppert) iterate averaging — the online-SGD variance killer.
+
+VW's online mode (and the averaged-SGD baseline of arXiv:1205.2958 §5)
+reports the *averaged* iterate: after a burn-in, the running mean of
+the SGD parameters converges at the optimal O(1/t) rate even though
+the raw iterate keeps bouncing at O(lr).  ``polyak_update`` is the
+jit-able hook ``train.steps.build_averaged_train_step`` folds into the
+train step; *tail* averaging (start averaging only after a fraction of
+the run, controlled by the caller via ``active``) avoids polluting the
+mean with far-from-optimum early iterates.
+
+The update is the numerically-stable running mean
+
+    count' = count + active
+    avg'   = avg + active · (params − avg) / max(count', 1)
+
+so ``active`` ∈ {0, 1} gates averaging without a second jit variant:
+with ``active = 0`` both avg and count pass through untouched, and the
+first active step makes ``avg = params`` exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_average(params: Any) -> Tuple[Any, jax.Array]:
+    """→ (zeros-like f32 average tree, count 0.0) — the state pair
+    ``polyak_update`` threads."""
+    avg = jax.tree.map(
+        lambda p: jnp.zeros(jnp.shape(p), jnp.float32), params)
+    return avg, jnp.zeros((), jnp.float32)
+
+
+def polyak_update(avg: Any, count: jax.Array, params: Any,
+                  active) -> Tuple[Any, jax.Array]:
+    """One running-mean step over the param tree; ``active`` (0/1 or
+    bool) gates whether this iterate joins the average."""
+    a = jnp.asarray(active, jnp.float32)
+    new_count = count + a
+    denom = jnp.maximum(new_count, 1.0)
+    new_avg = jax.tree.map(
+        lambda m, p: m + a * (p.astype(jnp.float32) - m) / denom,
+        avg, params)
+    return new_avg, new_count
+
+
+def average_or_none(avg: Any, count) -> Any:
+    """The averaged tree if any step was averaged, else ``None`` (the
+    caller never steered into the averaging window)."""
+    return avg if float(count) > 0 else None

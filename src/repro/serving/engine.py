@@ -22,16 +22,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schemes import make_scheme
-from repro.data.packing import pad_rows
+from repro.data.packing import bucket_width, pad_rows
 from repro.models.linear import BBitLinearConfig, bbit_logits
 from repro.serving.batcher import DynamicBatcher
 
 
 def _bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
+    """Pad width for an nnz of ``n``: the smallest fixed bucket that
+    fits, growing by powers of two past the largest one.  Clamping to
+    ``buckets[-1]`` instead would hand ``_score`` an ``idx`` wider than
+    its ``mask`` and crash the batcher thread on giant documents."""
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    return bucket_width(n, floor=buckets[-1])
 
 
 class HashedClassifierEngine:

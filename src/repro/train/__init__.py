@@ -1,22 +1,40 @@
-"""Training substrate: losses, steps, metrics, trainers."""
+"""Training substrate: losses, steps, metrics, trainers.
+
+Two ways to fit the paper's linear models over hashed codes:
+
+  * in-memory (``linear_trainer``): TRON on the exact LIBLINEAR
+    objective, or minibatch SGD over a materialized code matrix;
+  * streaming (``streaming.fit_streaming``): one-pass / multi-epoch
+    SGD + Polyak tail averaging straight off format-v3 packed shard
+    archives — codes are unpacked on the device inside the train step,
+    progressive validation reports the VW-style one-pass accuracy, and
+    shard-boundary checkpoints make kill/resume bit-exact.  This is
+    the path for data that never fits in memory (the paper's 200 GB
+    regime).
+"""
 from repro.train.losses import (
     logistic, hinge, squared_hinge, softmax_xent, binary_margins,
-    liblinear_objective, mean_loss_fn, LOSSES,
+    liblinear_objective, mean_loss_fn, mean_loss_with_preds_fn, LOSSES,
 )
 from repro.train.steps import (
     TrainState, init_state, build_train_step, build_microbatched_train_step,
+    AveragedTrainState, init_averaged_state, build_averaged_train_step,
 )
 from repro.train.metrics import accuracy, batched_accuracy
 from repro.train.linear_trainer import (
     FitResult, train_bbit_liblinear, train_vw_liblinear, train_bbit_sgd,
 )
+from repro.train.streaming import StreamFitResult, fit_streaming
 
 __all__ = [
     "logistic", "hinge", "squared_hinge", "softmax_xent", "binary_margins",
-    "liblinear_objective", "mean_loss_fn", "LOSSES",
+    "liblinear_objective", "mean_loss_fn", "mean_loss_with_preds_fn",
+    "LOSSES",
     "TrainState", "init_state", "build_train_step",
     "build_microbatched_train_step",
+    "AveragedTrainState", "init_averaged_state", "build_averaged_train_step",
     "accuracy", "batched_accuracy",
     "FitResult", "train_bbit_liblinear", "train_vw_liblinear",
     "train_bbit_sgd",
+    "StreamFitResult", "fit_streaming",
 ]

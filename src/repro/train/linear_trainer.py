@@ -122,23 +122,31 @@ def train_bbit_sgd(
     batch_size: int = 256,
     seed: int = 0,
 ) -> FitResult:
+    n = codes_tr.shape[0]
+    if n < 1:
+        raise ValueError("train_bbit_sgd: empty training set")
+    if epochs < 1:
+        raise ValueError(f"train_bbit_sgd: epochs must be >= 1, got {epochs}")
     fwd = lambda p, c: bbit_logits(p, c, cfg)
     loss_fn = mean_loss_fn(fwd, loss, l2=l2)
     opt = make_optimizer(optimizer, lr)
     state = init_state(init_bbit_linear(cfg, jax.random.key(seed)), opt)
     step_fn = build_train_step(loss_fn, opt)
-    n = codes_tr.shape[0]
     t0 = time.perf_counter()
     rng = np.random.default_rng(seed)
     steps = 0
     for ep in range(epochs):
         order = rng.permutation(n)
-        for lo in range(0, n - batch_size + 1, batch_size):
+        # the final partial minibatch trains too: stepping to
+        # n - batch_size + 1 would silently drop the tail each epoch
+        # and perform ZERO steps whenever n < batch_size
+        for lo in range(0, n, batch_size):
             sel = order[lo: lo + batch_size]
             state, _ = step_fn(state, jnp.asarray(codes_tr[sel]),
                                jnp.asarray(y_tr[sel]))
             steps += 1
     dt = time.perf_counter() - t0
+    assert steps > 0, "SGD performed no steps — params are untrained"
     tr_acc = accuracy(
         predict_classes(state.params, jnp.asarray(codes_tr), cfg), y_tr)
     te_acc = accuracy(

@@ -84,18 +84,39 @@ def liblinear_objective(
     return objective
 
 
-def mean_loss_fn(forward: Callable, loss_name: str, l2: float = 0.0):
-    """Mean-per-example loss (SGD/minibatch path), optional L2."""
+def mean_loss_with_preds_fn(forward: Callable, loss_name: str,
+                            l2: float = 0.0):
+    """Mean-per-example loss + predicted classes from the SAME forward.
+
+    The ``has_aux`` twin of ``mean_loss_fn``: returns ``(loss, pred)``
+    where ``pred`` is the decision rule matching the loss (argmax for
+    ``"softmax"``, sign of the margin logit otherwise) — what the
+    streaming trainer's progressive validation counts without paying a
+    second forward pass.  This is the single definition of the
+    minibatch loss parameterization; ``mean_loss_fn`` wraps it.
+    """
     def f(params, codes, labels):
         logits = forward(params, codes)
         if loss_name == "softmax":
             per = softmax_xent(logits, labels)
+            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
             per = LOSSES[loss_name](binary_margins(logits, labels))
+            z = logits[:, 0] if logits.ndim == 2 else logits
+            pred = (z > 0).astype(jnp.int32)
         loss = jnp.mean(per)
         if l2:
             loss = loss + 0.5 * l2 * sum(
                 jnp.sum(p.astype(jnp.float32) ** 2)
                 for p in jax.tree.leaves(params))
-        return loss
+        return loss, pred
+    return f
+
+
+def mean_loss_fn(forward: Callable, loss_name: str, l2: float = 0.0):
+    """Mean-per-example loss (SGD/minibatch path), optional L2."""
+    inner = mean_loss_with_preds_fn(forward, loss_name, l2)
+
+    def f(params, codes, labels):
+        return inner(params, codes, labels)[0]
     return f

@@ -1,4 +1,11 @@
-"""Jitted train/eval step builders shared by linear and LM training."""
+"""Jitted train/eval step builders shared by linear and LM training.
+
+``build_train_step`` is the plain SGD/AdamW step; ``build_averaged_
+train_step`` wraps the same update with Polyak tail averaging
+(``optim.averaging``) threaded through an ``AveragedTrainState`` — the
+averaged-weights state the streaming trainer checkpoints, so a resumed
+run continues the running mean bit-for-bit.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -8,6 +15,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.optim.averaging import init_average, polyak_update
 from repro.optim.optimizers import Optimizer
 
 
@@ -40,6 +48,64 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
         new_params, new_opt = optimizer.update(
             grads, state.opt_state, state.params, state.step)
         return TrainState(new_params, new_opt, state.step + 1), loss
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AveragedTrainState:
+    """TrainState plus the Polyak running mean of the parameters.
+
+    ``avg_params`` is the f32 running mean over the steps where the
+    averaging gate was active (tail averaging); ``avg_count`` the
+    number of averaged steps.  Checkpointing the whole structure makes
+    kill/resume reproduce the averaged iterate exactly.
+    """
+
+    state: TrainState
+    avg_params: Any
+    avg_count: jax.Array
+
+    def tree_flatten(self):
+        return (self.state, self.avg_params, self.avg_count), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+def init_averaged_state(params, optimizer: Optimizer) -> AveragedTrainState:
+    avg, count = init_average(params)
+    return AveragedTrainState(state=init_state(params, optimizer),
+                              avg_params=avg, avg_count=count)
+
+
+def build_averaged_train_step(loss_fn: Callable, optimizer: Optimizer,
+                              donate: bool = True, has_aux: bool = False):
+    """``loss_fn(params, *batch) -> scalar`` (or ``(scalar, aux)`` with
+    ``has_aux``); returns a jitted
+    ``step(astate, active, *batch) -> (astate, loss | (loss, aux))``.
+
+    ``active`` (0/1, traced — toggling it does NOT retrace) gates
+    whether the post-update parameters join the Polyak average: pass 0
+    during burn-in and 1 once the tail-averaging window opens.
+    ``has_aux`` lets the loss return pre-update side products from the
+    SAME forward pass — the streaming trainer rides its progressive-
+    validation hit count through here instead of paying a second
+    forward per batch.
+    """
+
+    def step(astate: AveragedTrainState, active, *batch):
+        out, grads = jax.value_and_grad(loss_fn, has_aux=has_aux)(
+            astate.state.params, *batch)
+        new_params, new_opt = optimizer.update(
+            grads, astate.state.opt_state, astate.state.params,
+            astate.state.step)
+        avg, count = polyak_update(astate.avg_params, astate.avg_count,
+                                   new_params, active)
+        new_state = TrainState(new_params, new_opt, astate.state.step + 1)
+        return AveragedTrainState(new_state, avg, count), out
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())
 

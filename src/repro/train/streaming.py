@@ -1,0 +1,320 @@
+"""One-pass / multi-epoch streaming trainer over hashed shard archives.
+
+The paper's headline scenario trains on 200 GB — data that never fits
+in memory.  Preprocessing has streamed since PR 2 (``HashedShardWriter``
+writes format-v3 packed shards in O(one shard) memory); this module
+makes the TRAINING side stream too, closing the loop arXiv:1205.2958 §5
+draws against VW's online mode:
+
+  * ``fit_streaming`` iterates the archive one shard at a time through
+    ``data.hashed_dataset.iter_hashed_batches`` (minibatches sliced
+    off mmap'd packed bytes — the full (n, k) code matrix is never
+    materialized, resident memory is one shard's packed pages + one
+    minibatch);
+  * minibatches cross the host↔device boundary PACKED — ceil(k·b/8)
+    bytes per row — and are widened on the device by
+    ``core.bbit.unpack_codes_jnp`` *inside* the jitted train step
+    (``oph_zero`` archives also carry their packed empty bitmask,
+    widened by ``unpack_mask_jnp`` and fed to ``bbit_logits``);
+  * the update is plain minibatch SGD/AdamW through the existing
+    ``build_train_step`` machinery, wrapped with Polyak *tail*
+    averaging (``optim.averaging`` via ``build_averaged_train_step``)
+    — the averaged iterate is the VW-style online baseline;
+  * **progressive validation**: every example is scored with the
+    current model BEFORE its gradient step, so ``progressive_acc`` is
+    the honest one-pass generalization estimate VW reports online;
+  * shard order is reshuffled and every shard's rows re-permuted each
+    epoch, both as pure functions of ``(seed, epoch, shard)`` — so a
+    restarted run replays identical batches;
+  * ``ckpt_dir`` checkpoints the FULL ``AveragedTrainState`` + stream
+    position at shard boundaries through ``ckpt.checkpoint``; a killed
+    run resumes at the shard boundary and reproduces the uninterrupted
+    run bit-for-bit (tested).
+
+Typical use::
+
+    stats = preprocess_and_save(root, rows, labels, k=256, b=8,
+                                scheme="oph", n_shards=64)
+    res = fit_streaming(root, BBitLinearConfig(k=256, b=8),
+                        epochs=1, batch_size=1024,
+                        ckpt_dir=root + "/ckpt")
+    w = res.eval_params            # Polyak average (or raw iterate)
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core.bbit import unpack_codes_jnp, unpack_mask_jnp
+from repro.data.hashed_dataset import (
+    _read_meta, iter_hashed_batches, shard_row_counts,
+)
+from repro.models.linear import BBitLinearConfig, bbit_logits, init_bbit_linear
+from repro.optim.averaging import average_or_none
+from repro.optim.optimizers import make_optimizer
+from repro.train.losses import mean_loss_with_preds_fn
+from repro.train.steps import build_averaged_train_step, init_averaged_state
+
+
+@dataclasses.dataclass
+class StreamFitResult:
+    params: Any                    # final SGD iterate
+    avg_params: Optional[Any]      # Polyak tail average (None if unused)
+    train_seconds: float
+    progressive_acc: float         # one-pass accuracy, VW-style
+    n_steps: int
+    examples_seen: int
+    shards_processed: int          # cumulative, survives resume
+    completed: bool                # False when stop_after_shards hit
+
+    @property
+    def eval_params(self) -> Any:
+        """The parameters to evaluate/serve: the averaged iterate when
+        tail averaging ran, else the raw final iterate."""
+        return self.avg_params if self.avg_params is not None else self.params
+
+
+def _shard_order(seed: int, epoch: int, n_shards: int,
+                 shuffle: bool) -> np.ndarray:
+    if not shuffle:
+        return np.arange(n_shards)
+    rng = np.random.default_rng(np.random.SeedSequence((seed, epoch)))
+    return rng.permutation(n_shards)
+
+
+def fit_streaming(
+    root: str,
+    cfg: BBitLinearConfig,
+    *,
+    loss: str = "logistic",
+    optimizer: str = "adamw",
+    lr: float = 1e-2,
+    l2: float = 1e-6,
+    epochs: int = 1,
+    batch_size: int = 256,
+    seed: int = 0,
+    average: bool = True,
+    avg_start_frac: float = 0.5,
+    shuffle_shards: bool = True,
+    mmap: bool = True,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every_shards: int = 1,
+    resume: bool = True,
+    stop_after_shards: Optional[int] = None,
+) -> StreamFitResult:
+    """Streams a format-v1/2/3 hashed archive through minibatch SGD.
+
+    ``avg_start_frac`` opens the Polyak tail-averaging window after
+    that fraction of the planned total steps (0.0 = average from the
+    first step; ignored when ``average=False``).  ``stop_after_shards``
+    (requires ``ckpt_dir``) processes at most that many shards IN THIS
+    CALL, checkpoints and returns with ``completed=False`` — the
+    deterministic "kill" used by the resume tests and benchmarks; call
+    again with the same arguments to continue.  Resume requires the
+    same archive and hyperparameters; the checkpoint stores the full
+    averaged train state plus stream position and progressive-
+    validation counters, so the continued run is bit-identical to an
+    uninterrupted one.
+    """
+    meta = _read_meta(root)
+    if meta.get("shards", 0) <= 0 or meta.get("n", 0) <= 0:
+        raise ValueError(
+            f"cannot stream-train on an empty archive at {root!r} "
+            f"(n={meta.get('n')}, shards={meta.get('shards')})")
+    k, b = meta["k"], meta["b"]
+    if (cfg.k, cfg.b) != (k, b):
+        raise ValueError(
+            f"config (k={cfg.k}, b={cfg.b}) does not match archive "
+            f"(k={k}, b={b})")
+    if epochs < 1 or batch_size < 1 or ckpt_every_shards < 1:
+        raise ValueError(
+            "epochs, batch_size and ckpt_every_shards must be >= 1")
+    if cfg.n_classes != 2 and loss != "softmax":
+        raise ValueError(
+            f"loss={loss!r} is binary-only; multiclass streaming "
+            "(n_classes > 2) requires loss='softmax'")
+    if cfg.n_classes == 2 and loss == "softmax":
+        # a single-logit softmax is identically zero loss — the run
+        # would "succeed" with untrained params
+        raise ValueError(
+            "loss='softmax' needs n_classes > 2; binary configs use a "
+            "margin loss ('logistic', 'hinge', 'squared_hinge')")
+    if stop_after_shards is not None and not ckpt_dir:
+        raise ValueError(
+            "stop_after_shards without ckpt_dir would discard the "
+            "partial run — a repeat call could only restart from "
+            "scratch, never continue")
+
+    counts = shard_row_counts(root)
+    n_shards = len(counts)
+    steps_per_epoch = sum(-(-c // batch_size) for c in counts if c)
+    total_steps = epochs * steps_per_epoch
+    avg_start_step = (int(math.floor(avg_start_frac * total_steps))
+                      if average else total_steps + 1)
+
+    # oph_zero archives carry a packed per-row empty bitmask; batches
+    # then travel as (codes_bytes, mask_bytes) tuples.  v3 answers this
+    # from the filesystem, older formats from the recorded scheme —
+    # neither touches shard data.
+    if meta["format_version"] >= 3:
+        has_empty = os.path.exists(
+            os.path.join(root, "hashed_00000.empty.npy"))
+    else:
+        has_empty = meta.get("scheme") == "oph_zero"
+
+    def fwd(params, batch):
+        if has_empty:
+            pk, em = batch
+            codes = unpack_codes_jnp(pk, k, b).astype(jnp.int32)
+            return bbit_logits(params, codes, cfg,
+                               empty=unpack_mask_jnp(em, k))
+        codes = unpack_codes_jnp(batch, k, b).astype(jnp.int32)
+        return bbit_logits(params, codes, cfg)
+
+    # shared minibatch loss + matching decision rule (one definition,
+    # train/losses.py); the pre-update predictions ride the train
+    # step's forward as a has_aux output — progressive validation
+    # costs no second forward per batch.
+    loss_with_preds = mean_loss_with_preds_fn(fwd, loss, l2=l2)
+
+    def loss_and_hits(params, batch, labels):
+        total, pred = loss_with_preds(params, batch, labels)
+        return total, jnp.sum(pred == labels)
+
+    opt = make_optimizer(optimizer, lr)
+    step_fn = build_averaged_train_step(loss_and_hits, opt, has_aux=True)
+
+    # a structural restore can succeed while the run semantics differ
+    # (same model/optimizer shapes, different archive/batching/seed) —
+    # fingerprint everything replay depends on and refuse a mismatch.
+    fp_src = json.dumps(
+        {"archive": {"n": meta["n"], "shards": n_shards, "k": k, "b": b,
+                     "scheme": meta.get("scheme"),
+                     "seed": meta.get("seed")},
+         "cfg": dataclasses.asdict(cfg),
+         "loss": loss, "optimizer": optimizer, "lr": lr, "l2": l2,
+         "epochs": epochs, "batch_size": batch_size, "seed": seed,
+         "average": average, "avg_start_step": avg_start_step,
+         "shuffle_shards": shuffle_shards},
+        sort_keys=True)
+    fingerprint = np.int64(int.from_bytes(
+        hashlib.sha256(fp_src.encode()).digest()[:8], "big") >> 1)
+
+    astate = init_averaged_state(
+        init_bbit_linear(cfg, jax.random.key(seed)), opt)
+    epoch0, pos0, shards_done, hits, seen = 0, 0, 0, 0, 0
+    if (ckpt_dir and not resume
+            and ckpt.latest_step(ckpt_dir) is not None):
+        # a fresh run's low step numbers would be pruned under the old
+        # run's higher ones, and a later resume would silently pick up
+        # the stale run — refuse rather than interleave two runs
+        raise ValueError(
+            f"ckpt_dir {ckpt_dir!r} already holds checkpoints (latest "
+            f"step {ckpt.latest_step(ckpt_dir)}); with resume=False "
+            "point at a fresh directory or delete the old run first")
+    if ckpt_dir and resume and ckpt.latest_step(ckpt_dir) is not None:
+        template = {"astate": astate, "epoch": np.int64(0),
+                    "pos": np.int64(0), "shards_done": np.int64(0),
+                    "hits": np.int64(0), "seen": np.int64(0),
+                    "fingerprint": np.int64(0)}
+        try:
+            tree, _ = ckpt.restore(ckpt_dir, template)
+        except ValueError as e:
+            # restarting from scratch here would silently discard the
+            # run the caller believes they are continuing
+            raise ValueError(
+                f"checkpoint under {ckpt_dir!r} is incompatible with "
+                "this run's model/optimizer state (resume requires the "
+                f"same archive and hyperparameters): {e}") from e
+        if int(tree["fingerprint"]) != int(fingerprint):
+            raise ValueError(
+                f"checkpoint under {ckpt_dir!r} is incompatible: it was "
+                "written by a run with different hyperparameters or a "
+                "different archive (fingerprint mismatch) — resume "
+                "requires identical settings")
+        astate = tree["astate"]
+        epoch0 = int(tree["epoch"])
+        pos0 = int(tree["pos"])
+        shards_done = int(tree["shards_done"])
+        hits, seen = int(tree["hits"]), int(tree["seen"])
+
+    def save_boundary(next_epoch: int, next_pos: int) -> None:
+        tree = {"astate": astate, "epoch": np.int64(next_epoch),
+                "pos": np.int64(next_pos),
+                "shards_done": np.int64(shards_done),
+                "hits": np.int64(hits), "seen": np.int64(seen),
+                "fingerprint": fingerprint}
+        ckpt.save(ckpt_dir, shards_done, tree)
+
+    global_step = int(astate.state.step)
+    processed_here = 0
+    stopped = False
+    t0 = time.perf_counter()
+    for epoch in range(epoch0, epochs):
+        order = _shard_order(seed, epoch, n_shards, shuffle_shards)
+        for pos in range(pos0 if epoch == epoch0 else 0, n_shards):
+            s = int(order[pos])
+            shard_hits = []
+            # (seed, epoch) + shard id seeds the within-shard
+            # permutation — identical on replay, fresh every epoch
+            for bp, bl, _rid, bem in iter_hashed_batches(
+                    root, batch_size, shard_ids=[s],
+                    perm_seed=(seed, epoch), mmap=mmap):
+                if (bem is None) == has_empty:
+                    raise ValueError(
+                        f"shard {s} of {root!r} "
+                        f"{'lacks' if bem is None else 'carries'} an "
+                        "empty bitmask while shard 0 "
+                        f"{'has one' if has_empty else 'does not'} — "
+                        "archive written with desynced empty masks?")
+                batch = ((jnp.asarray(bp), jnp.asarray(bem))
+                         if has_empty else jnp.asarray(bp))
+                active = np.float32(global_step >= avg_start_step)
+                astate, (_, h) = step_fn(astate, active, batch,
+                                         jnp.asarray(bl))
+                # device scalars, drained once per shard: no per-step
+                # host sync to break async dispatch overlap
+                shard_hits.append(h)
+                seen += len(bl)
+                global_step += 1
+            if shard_hits:
+                hits += int(np.sum(jax.device_get(shard_hits)))
+            shards_done += 1
+            processed_here += 1
+            next_epoch, next_pos = ((epoch, pos + 1)
+                                    if pos + 1 < n_shards
+                                    else (epoch + 1, 0))
+            at_stop = (stop_after_shards is not None
+                       and processed_here >= stop_after_shards)
+            done = next_epoch >= epochs
+            if ckpt_dir and (shards_done % ckpt_every_shards == 0
+                             or at_stop or done):
+                save_boundary(next_epoch, next_pos)
+            if at_stop and not done:
+                stopped = True
+                break
+        if stopped:
+            break
+    dt = time.perf_counter() - t0
+
+    assert stopped or global_step > 0, "streaming run performed no steps"
+    return StreamFitResult(
+        params=astate.state.params,
+        avg_params=average_or_none(astate.avg_params, astate.avg_count),
+        train_seconds=dt,
+        progressive_acc=hits / max(seen, 1),
+        n_steps=global_step,
+        examples_seen=seen,
+        shards_processed=shards_done,
+        completed=not stopped,
+    )

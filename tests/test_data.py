@@ -83,6 +83,47 @@ def test_hashed_dataset_roundtrip(tmp_path, corpus):
     assert np.array_equal(codes, codes2)
 
 
+def test_shard_writer_rejects_mixed_empty(tmp_path):
+    """Regression: mixing empty=None and non-None appends on an
+    oph_zero stream silently desynced .empty.npy rows from the codes."""
+    from repro.data import HashedShardWriter
+    w = HashedShardWriter(str(tmp_path / "w"), 16, 8, n_total=8)
+    w.append(np.arange(2), np.zeros((2, 16), np.uint8),
+             np.zeros(2, np.int32), np.zeros((2, 2), np.uint8))
+    with pytest.raises(ValueError, match="inconsistent empty"):
+        w.append(np.arange(2, 4), np.zeros((2, 16), np.uint8),
+                 np.zeros(2, np.int32), None)
+    # the reverse direction too
+    w2 = HashedShardWriter(str(tmp_path / "w2"), 16, 8, n_total=8)
+    w2.append(np.arange(2), np.zeros((2, 16), np.uint8),
+              np.zeros(2, np.int32), None)
+    with pytest.raises(ValueError, match="inconsistent empty"):
+        w2.append(np.arange(2, 4), np.zeros((2, 16), np.uint8),
+                  np.zeros(2, np.int32), np.zeros((2, 2), np.uint8))
+    # and mismatched row counts are caught at append time
+    with pytest.raises(ValueError, match="row mismatch"):
+        w2.append(np.arange(3), np.zeros((2, 16), np.uint8),
+                  np.zeros(2, np.int32))
+    # a failed FIRST append must not commit the empty-mask mode: a
+    # corrected retry without a mask is still a legitimate stream
+    w3 = HashedShardWriter(str(tmp_path / "w3"), 16, 8, n_total=8)
+    with pytest.raises(ValueError, match="row mismatch"):
+        w3.append(np.arange(2), np.zeros((2, 16), np.uint8),
+                  np.zeros(2, np.int32), np.zeros((3, 2), np.uint8))
+    w3.append(np.arange(2), np.zeros((2, 16), np.uint8),
+              np.zeros(2, np.int32), None)
+
+
+def test_load_hashed_empty_archive(tmp_path):
+    """Regression: a 0-shard archive used to raise a bare
+    np.concatenate ValueError instead of a clear empty result."""
+    d = str(tmp_path / "empty")
+    preprocess_and_save(d, [], np.zeros((0,), np.int32), k=16, b=8)
+    codes, labels, meta = load_hashed(d)
+    assert codes.shape == (0, 16) and codes.dtype == np.uint16
+    assert labels.shape == (0,) and meta["shards"] == 0
+
+
 def test_loader_restart_and_sharding():
     codes = (np.arange(2000) % 251).astype(np.uint16).reshape(200, 10)
     y = np.arange(200, dtype=np.int32)

@@ -123,3 +123,41 @@ def test_sgd_path_trains(hashed_data):
         codes[:n_tr], labels[:n_tr], codes[n_tr:], labels[n_tr:],
         BBitLinearConfig(k=64, b=8), epochs=8, batch_size=64, lr=5e-3)
     assert res.test_acc > 0.85
+
+
+def test_sgd_includes_tail_batch(hashed_data):
+    """Regression: the final partial minibatch used to be dropped each
+    epoch — 400 rows at batch 64 must take ceil(400/64)=7 steps/epoch."""
+    codes, labels = hashed_data
+    res = train_bbit_sgd(
+        codes[:400], labels[:400], codes[400:], labels[400:],
+        BBitLinearConfig(k=64, b=8), epochs=2, batch_size=64, lr=5e-3)
+    assert res.n_iter == 2 * 7
+
+
+def test_sgd_trains_when_n_below_batch_size(hashed_data):
+    """Regression: n < batch_size used to run ZERO steps and hand back
+    the untrained init params inside a plausible-looking FitResult."""
+    from repro.models.linear import init_bbit_linear
+    codes, labels = hashed_data
+    lcfg = BBitLinearConfig(k=64, b=8)
+    res = train_bbit_sgd(
+        codes[:100], labels[:100], codes[400:], labels[400:],
+        lcfg, epochs=3, batch_size=256, lr=5e-3, seed=4)
+    assert res.n_iter == 3            # one (tail) step per epoch
+    init = init_bbit_linear(lcfg, jax.random.key(4))
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(res.params), jax.tree.leaves(init)))
+    assert changed, "params untouched — SGD never stepped"
+
+
+def test_sgd_rejects_degenerate_inputs(hashed_data):
+    codes, labels = hashed_data
+    lcfg = BBitLinearConfig(k=64, b=8)
+    with pytest.raises(ValueError, match="empty training set"):
+        train_bbit_sgd(codes[:0], labels[:0], codes[400:], labels[400:],
+                       lcfg)
+    with pytest.raises(ValueError, match="epochs"):
+        train_bbit_sgd(codes[:100], labels[:100], codes[400:],
+                       labels[400:], lcfg, epochs=0)

@@ -57,6 +57,28 @@ def test_engine_scores_match_direct_path():
     eng.close()
 
 
+def test_engine_survives_nnz_over_largest_bucket():
+    """Regression: a document with nnz > the largest pad bucket (32768)
+    used to get an ``idx`` wider than its ``mask``, crashing the
+    batcher thread inside the jitted ``_score``.  The bucket now grows
+    to the next power of two and scoring stays consistent."""
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    cfg = BBitLinearConfig(k=8, b=4)
+    params = init_bbit_linear(cfg, jax.random.key(1))
+    eng = HashedClassifierEngine(params, cfg, seed=3, max_batch=4,
+                                 max_wait_ms=5)
+    rng = np.random.default_rng(0)
+    big = np.unique(rng.integers(0, 1 << 28, size=40000))
+    assert len(big) > 32768
+    small = np.unique(rng.integers(0, 1 << 20, size=30))
+    futs = [eng.submit(d) for d in (small, big, small)]
+    vals = [float(f.result(timeout=120)) for f in futs]
+    assert all(np.isfinite(v) for v in vals)
+    # identical docs must score identically regardless of batch mates
+    assert vals[0] == vals[2]
+    eng.close()
+
+
 def test_greedy_generate_consistency():
     """Generation via prefill+decode == argmax over forward_train."""
     from repro.configs.base import ArchConfig

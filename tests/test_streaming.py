@@ -1,0 +1,235 @@
+"""Streaming trainer over packed shards: device unpack parity, packed
+batch iteration, one-pass accuracy vs the in-memory SGD path, Polyak
+averaging, and kill/resume bitwise determinism."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bbit import (
+    pack_codes, pack_codes_jnp, pack_mask_jnp, unpack_codes,
+    unpack_codes_jnp, unpack_mask_jnp,
+)
+from repro.data import (
+    SynthRcv1Config, generate_arrays, iter_hashed_batches, load_hashed,
+    preprocess_and_save, preprocess_rows, shard_row_counts,
+)
+from repro.models.linear import BBitLinearConfig, predict_classes
+from repro.train import fit_streaming, train_bbit_sgd
+from repro.train.metrics import accuracy
+
+
+# ---------------------------------------------------------------- unpack --
+@pytest.mark.parametrize("b", [1, 2, 4, 8, 3, 6, 12])
+@pytest.mark.parametrize("k", [1, 16, 63, 128])
+def test_unpack_codes_jnp_inverts_both_packers(b, k):
+    rng = np.random.default_rng(b * 131 + k)
+    codes = rng.integers(0, 1 << b, size=(9, k)).astype(np.uint16)
+    packed = pack_codes(codes, b)
+    assert np.array_equal(packed, np.asarray(pack_codes_jnp(
+        jnp.asarray(codes), b)))
+    got = np.asarray(unpack_codes_jnp(jnp.asarray(packed), k, b))
+    assert np.array_equal(got, codes)
+    assert np.array_equal(got, unpack_codes(packed, k, b))
+
+
+@pytest.mark.parametrize("k", [1, 8, 37, 256])
+def test_unpack_mask_jnp_inverts_packbits(k):
+    rng = np.random.default_rng(k)
+    mask = rng.integers(0, 2, size=(7, k)).astype(bool)
+    packed = np.packbits(mask, axis=1)
+    assert np.array_equal(packed, np.asarray(pack_mask_jnp(
+        jnp.asarray(mask))))
+    assert np.array_equal(
+        np.asarray(unpack_mask_jnp(jnp.asarray(packed), k)), mask)
+
+
+# ------------------------------------------------------------ corpus ------
+@pytest.fixture(scope="module")
+def corpus():
+    cfg = SynthRcv1Config(seed=11, topic_tokens=150, background_frac=0.35,
+                          max_pairs_per_doc=4000, max_triples_per_doc=2000)
+    return generate_arrays(600, cfg)
+
+
+@pytest.fixture(scope="module")
+def archive(corpus, tmp_path_factory):
+    """400-row / 5-shard v3 archive + full 600-row code matrix."""
+    rows, labels = corpus
+    codes = preprocess_rows(rows, k=64, b=8, seed=1, chunk=256)
+    d = str(tmp_path_factory.mktemp("arch"))
+    preprocess_and_save(d, rows[:400], labels[:400], k=64, b=8, seed=1,
+                        n_shards=5, chunk=128)
+    return d, codes, labels
+
+
+# ----------------------------------------------------- batch iterator -----
+def test_iter_hashed_batches_covers_every_row_once(archive):
+    d, codes, labels = archive
+    seen = {}
+    for pk, lb, rid, em in iter_hashed_batches(d, 48):
+        assert em is None
+        assert len(pk) == len(lb) == len(rid) <= 48
+        for r, c, l in zip(rid, unpack_codes(pk, 64, 8), lb):
+            assert int(r) not in seen
+            seen[int(r)] = (c, int(l))
+    assert sorted(seen) == list(range(400))
+    for r, (c, l) in seen.items():
+        assert np.array_equal(c, codes[r]) and l == labels[r]
+
+
+def test_iter_hashed_batches_permutation_is_deterministic(archive):
+    d, _, _ = archive
+    a = [tuple(rid) for _, _, rid, _ in iter_hashed_batches(
+        d, 32, perm_seed=9)]
+    b = [tuple(rid) for _, _, rid, _ in iter_hashed_batches(
+        d, 32, perm_seed=9)]
+    c = [tuple(rid) for _, _, rid, _ in iter_hashed_batches(
+        d, 32, perm_seed=10)]
+    assert a == b and a != c
+    assert sorted(r for t in a for r in t) == list(range(400))
+
+
+def test_shard_row_counts_matches_archive(archive):
+    d, _, _ = archive
+    counts = shard_row_counts(d)
+    assert sum(counts) == 400 and len(counts) == 5
+
+
+# --------------------------------------------------- streaming trainer ----
+def test_fit_streaming_matches_in_memory_sgd(archive):
+    """Acceptance: multi-shard streaming within ±0.5% of the in-memory
+    SGD path, holding only packed shards resident."""
+    d, codes, labels = archive
+    lcfg = BBitLinearConfig(k=64, b=8)
+    res = fit_streaming(d, lcfg, epochs=8, batch_size=64, lr=5e-3, seed=0)
+    stream_acc = accuracy(
+        predict_classes(res.params, jnp.asarray(codes[400:]), lcfg),
+        labels[400:])
+    mem = train_bbit_sgd(codes[:400], labels[:400], codes[400:],
+                         labels[400:], lcfg, epochs=8, batch_size=64,
+                         lr=5e-3)
+    assert abs(stream_acc - mem.test_acc) <= 0.005 + 1e-9, (
+        stream_acc, mem.test_acc)
+    assert stream_acc > 0.9
+    # progressive validation saw every example once per epoch
+    assert res.examples_seen == 8 * 400
+    assert 0.5 < res.progressive_acc <= 1.0
+    # tail-averaged iterate generalizes too
+    avg_acc = accuracy(
+        predict_classes(res.avg_params, jnp.asarray(codes[400:]), lcfg),
+        labels[400:])
+    assert avg_acc > 0.9
+
+
+def test_fit_streaming_resume_is_bitwise_identical(archive, tmp_path):
+    d, _, _ = archive
+    lcfg = BBitLinearConfig(k=64, b=8)
+    kw = dict(epochs=2, batch_size=64, lr=5e-3, seed=3)
+    straight = fit_streaming(d, lcfg, **kw)
+    ck = str(tmp_path / "ck")
+    part = fit_streaming(d, lcfg, ckpt_dir=ck, stop_after_shards=3, **kw)
+    assert not part.completed and part.shards_processed == 3
+    resumed = fit_streaming(d, lcfg, ckpt_dir=ck, **kw)
+    assert resumed.completed
+    for a, b in zip(jax.tree.leaves(straight.params),
+                    jax.tree.leaves(resumed.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(straight.avg_params),
+                    jax.tree.leaves(resumed.avg_params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert straight.n_steps == resumed.n_steps
+    assert straight.examples_seen == resumed.examples_seen
+    assert abs(straight.progressive_acc - resumed.progressive_acc) < 1e-12
+
+
+def test_fit_streaming_oph_zero_empty_mask_path(corpus, tmp_path):
+    rows, labels = corpus
+    d = str(tmp_path / "z")
+    preprocess_and_save(d, rows[:200], labels[:200], k=32, b=6, seed=1,
+                        scheme="oph_zero", n_shards=3, chunk=64)
+    lcfg = BBitLinearConfig(k=32, b=6)
+    res = fit_streaming(d, lcfg, epochs=4, batch_size=64, lr=5e-3, seed=0)
+    spe = sum(-(-c // 64) for c in shard_row_counts(d))
+    assert res.completed and res.n_steps == 4 * spe
+    assert res.progressive_acc > 0.5
+
+
+def test_fit_streaming_rejects_incompatible_checkpoint(archive, tmp_path):
+    """Resuming with different hyperparameters must fail loudly, not
+    silently restart from scratch over the old checkpoints."""
+    d, _, _ = archive
+    lcfg = BBitLinearConfig(k=64, b=8)
+    ck = str(tmp_path / "ck")
+    fit_streaming(d, lcfg, epochs=1, batch_size=64, optimizer="adamw",
+                  ckpt_dir=ck, stop_after_shards=2)
+    # structural mismatch: different optimizer state tree
+    with pytest.raises(ValueError, match="incompatible"):
+        fit_streaming(d, lcfg, epochs=1, batch_size=64, optimizer="sgd",
+                      ckpt_dir=ck)
+    # semantic mismatch: identical tree structure, different batching —
+    # must not silently resume with a divergent replay
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        fit_streaming(d, lcfg, epochs=1, batch_size=32,
+                      optimizer="adamw", ckpt_dir=ck)
+    # model-config semantics (same param shapes!) are fingerprinted too
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        fit_streaming(d, BBitLinearConfig(k=64, b=8, normalize=True),
+                      epochs=1, batch_size=64, optimizer="adamw",
+                      ckpt_dir=ck)
+    # resume=False into a populated ckpt_dir: the fresh run's low step
+    # numbers would be pruned under the old run's — refuse
+    with pytest.raises(ValueError, match="already holds checkpoints"):
+        fit_streaming(d, lcfg, epochs=1, batch_size=64,
+                      optimizer="adamw", ckpt_dir=ck, resume=False)
+
+
+def test_fit_streaming_rejects_mismatched_config_and_empty_archive(
+        archive, tmp_path):
+    d, _, _ = archive
+    with pytest.raises(ValueError, match="does not match archive"):
+        fit_streaming(d, BBitLinearConfig(k=32, b=8))
+    e = str(tmp_path / "empty")
+    preprocess_and_save(e, [], np.zeros((0,), np.int32), k=16, b=8)
+    with pytest.raises(ValueError, match="empty archive"):
+        fit_streaming(e, BBitLinearConfig(k=16, b=8))
+    with pytest.raises(ValueError, match="ckpt_every_shards"):
+        fit_streaming(d, BBitLinearConfig(k=64, b=8), ckpt_dir="/tmp/x",
+                      ckpt_every_shards=0)
+    with pytest.raises(ValueError, match="binary-only"):
+        fit_streaming(d, BBitLinearConfig(k=64, b=8, n_classes=4),
+                      loss="logistic")
+    with pytest.raises(ValueError, match="stop_after_shards"):
+        fit_streaming(d, BBitLinearConfig(k=64, b=8), stop_after_shards=2)
+
+
+# ------------------------------------------------------ averaging hook ----
+def test_polyak_average_equals_mean_of_iterates():
+    from repro.optim import make_optimizer
+    from repro.train import (build_averaged_train_step, init_averaged_state,
+                             mean_loss_fn)
+    from repro.models.linear import bbit_logits, init_bbit_linear
+    lcfg = BBitLinearConfig(k=8, b=4)
+    opt = make_optimizer("sgd", 0.1)
+    loss_fn = mean_loss_fn(lambda p, c: bbit_logits(p, c, lcfg),
+                           "logistic")
+    step = build_averaged_train_step(loss_fn, opt, donate=False)
+    astate = init_averaged_state(init_bbit_linear(lcfg, jax.random.key(0)),
+                                 opt)
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 16, size=(32, 8)).astype(np.uint16)
+    y = (codes.sum(axis=1) % 2).astype(np.int32)
+    iterates = []
+    for t in range(6):
+        active = np.float32(t >= 2)          # tail: average steps 2..5
+        astate, _ = step(astate, active, jnp.asarray(codes),
+                         jnp.asarray(y))
+        if t >= 2:
+            iterates.append(jax.tree.map(np.asarray, astate.state.params))
+    assert float(astate.avg_count) == 4.0
+    want = jax.tree.map(lambda *xs: np.mean(np.stack(xs), axis=0),
+                        *iterates)
+    for a, b in zip(jax.tree.leaves(astate.avg_params),
+                    jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), b, rtol=1e-6, atol=1e-7)
