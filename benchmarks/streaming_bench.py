@@ -1,27 +1,51 @@
-"""One-pass streaming trainer vs the in-memory SGD path.
+"""Streaming-trainer benchmarks: overlap, data parallelism, baselines.
 
 The paper's 200 GB scenario in miniature: preprocess a synthetic
 expanded-rcv1 corpus into a multi-shard format-v3 archive, then train
 
-  * ``streaming`` — ``fit_streaming``: one pass straight off the
-    mmap'd packed shards (codes widened on device inside the train
-    step), Polyak tail averaging, progressive validation;
-  * ``in_memory`` — ``load_hashed`` the whole code matrix, then the
-    classic ``train_bbit_sgd`` minibatch loop (same epochs / batch /
-    lr, so the comparison isolates the streaming machinery).
+  * ``prefetch_off`` / ``prefetch_on`` — ``fit_streaming`` with the
+    host-side pipeline inline vs running in the async producer thread
+    (``data.prefetch``), measuring what overlap buys on this box.
+    Honest caveat: the bench archive is tiny and page-cache-hot, so
+    there is no real I/O to hide — what remains is GIL-held Python
+    batch bookkeeping vs thread/queue overhead, and the ratio hovers
+    around 1× (run-to-run 0.9–1.4× observed).  The feature targets the
+    paper's regime — archives that fault in from disk — which this
+    box cannot exhibit; the record tracks that the pipeline at least
+    never LOSES materially;
+  * ``dp2`` — the same corpus run data-parallel over 2 host-platform
+    devices (``XLA_FLAGS=--xla_force_host_platform_device_count=2``,
+    ``shard_map`` + ``psum_mean``): accuracy/counters parity at the
+    paper config;
+  * ``scaling_serial`` / ``scaling_dp2`` — 1→2 device weak scaling
+    (fixed per-device batch) on a synthetic throughput archive.  The
+    per-device batch must be large: each all-reduce rendezvous costs
+    ~1.6 ms on a fake-device CPU mesh, and only compute-bound steps
+    amortize it (at B=64/device DP measures BELOW 1× for exactly this
+    reason — which is why the corpus-config ``dp2`` record documents
+    accuracy parity, not speed);
+  * ``onepass …_stream`` / ``…_in_memory`` — the PR-3 legacy pair:
+    one-pass streaming vs ``load_hashed`` + ``train_bbit_sgd``.
 
-Derived columns carry rows/s, the one-pass progressive accuracy (the
-number VW reports online), held-out test accuracy for both paths and
-the streaming/in-memory throughput ratio.  Suite ``streaming`` feeds
-``BENCH_streaming.json`` via benchmarks.run.
+Each overlap/scaling variant runs in its OWN subprocess (fresh compile
+cache, own XLA device count) and fits TWICE: the first (cold) call
+pays compile, the second (warm) call is the steady-state rows/s the
+derived columns report — the number the paper's "loading should be
+hidden behind compute" claim is about.  Workers also assert their two
+fits are bit-identical (a determinism canary on every bench run).
 
 ``--smoke`` (CI) runs a tiny archive instead and asserts the
-determinism contract: two identical runs produce bit-identical params,
-and a kill (``stop_after_shards``) + resume reproduces the
-uninterrupted run exactly — any drift fails the merge.
+determinism contract: prefetch-on equals prefetch-off BITWISE, two
+identical runs produce bit-identical params, and a kill
+(``stop_after_shards``) + resume reproduces the uninterrupted run
+exactly — any drift fails the merge.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import tempfile
 import time
 
@@ -35,7 +59,13 @@ N_SHARDS = 8
 BATCH = 64
 LR = 5e-3
 EPOCHS = 1                    # one pass — the online regime
-N_DOCS = 24 if SMOKE else (800 if QUICK else 3000)
+WARM_EPOCHS = 10              # steady-state timing runs
+N_DOCS = 24 if SMOKE else (1600 if QUICK else 3000)
+# device-scaling pair: per-device batch big enough that compute
+# amortizes the per-step collective rendezvous
+SCALE_BATCH = 4096
+SCALE_SHARDS = 2
+SCALE_EPOCHS = 12
 
 
 def _setup(root, n_docs, k, b, n_shards):
@@ -59,33 +89,168 @@ def _test_acc(params, codes_te, labels_te, lcfg):
                     labels_te)
 
 
-def _smoke() -> list:
+def _setup_scaling(root, rows_per_shard, n_shards, k, b):
+    """Throughput-only archive: many short random docs, hashed fast —
+    rows sized so one shard holds a full SCALE_BATCH minibatch.  Labels
+    are arbitrary (no accuracy is reported off this archive)."""
+    from repro.data import preprocess_and_save
+    rng = np.random.default_rng(7)
+    n = rows_per_shard * n_shards
+    rows = [rng.integers(0, 1 << 24, size=rng.integers(16, 48))
+            .astype(np.int32) for _ in range(n)]
+    labels = rng.integers(0, 2, size=n).astype(np.int32)
+    preprocess_and_save(root, rows, labels, k=k, b=b, seed=1,
+                        n_shards=n_shards, chunk=2048)
+
+
+# ------------------------------------------------------ worker side -------
+def _summarize(run, cold, lcfg, te_path):
+    """``cold=None`` when this variant never ran its own cold fit (the
+    overlap worker pays compile once, under the ON pipeline)."""
     import jax
+    out = {
+        "rows_per_s": run.examples_seen / max(run.train_seconds, 1e-9),
+        "warm_s": run.train_seconds,
+        "steps": run.n_steps,
+        "progressive_acc": run.progressive_acc,
+        "devices": len(jax.devices()),
+    }
+    if cold is not None:
+        out["cold_s"] = cold.train_seconds
+    if te_path:
+        te = np.load(te_path)
+        out["test_acc"] = float(_test_acc(
+            run.eval_params, te["codes"], te["labels"], lcfg))
+    return out
+
+
+def _assert_same_params(a, b):
+    from repro.train import trees_bitwise_equal
+    assert trees_bitwise_equal(a.params, b.params), \
+        "bench fits are not deterministic"
+
+
+def _worker(cfg: dict) -> None:
+    """Runs inside a fresh subprocess (XLA_FLAGS set by the parent):
+    cold fit (pays compile) + warm fits (steady state), bit-identity
+    asserted between every pair, held-out accuracy on the reported
+    result.  Prints one JSON line on stdout.
+
+    ``mode="single"``: best-of-3 warm fits (fastest ≈ least
+    contended).  ``mode="overlap"``: alternates prefetch-OFF and
+    prefetch-ON fits in the SAME process — they share the cached
+    jitted step, so only the pipeline differs — and reports the
+    adjacent pair with the smallest combined time; box-level load
+    swings (±40 % observed across subprocesses on this shared
+    2-core machine) cancel out of the ratio.
+    """
     from repro.models.linear import BBitLinearConfig
     from repro.train import fit_streaming
+
+    lcfg = BBitLinearConfig(k=cfg["k"], b=cfg["b"])
+    kw = dict(epochs=cfg["epochs"], batch_size=cfg["batch"],
+              lr=cfg["lr"], seed=0, data_parallel=cfg["data_parallel"])
+    if cfg.get("mode", "single") == "overlap":
+        cold = fit_streaming(cfg["root"], lcfg, prefetch=cfg["prefetch"],
+                             **kw)
+        best = None
+        for _ in range(3):
+            off = fit_streaming(cfg["root"], lcfg, prefetch=0, **kw)
+            on = fit_streaming(cfg["root"], lcfg,
+                               prefetch=cfg["prefetch"], **kw)
+            _assert_same_params(cold, off)
+            _assert_same_params(off, on)
+            combined = off.train_seconds + on.train_seconds
+            if best is None or combined < best[0]:
+                best = (combined, off, on)
+        _, off, on = best
+        print(json.dumps({
+            "off": _summarize(off, None, lcfg, cfg["te_path"]),
+            "on": _summarize(on, cold, lcfg, cfg["te_path"]),
+        }))
+        return
+    cold = fit_streaming(cfg["root"], lcfg, prefetch=cfg["prefetch"],
+                         **kw)
+    warm = None
+    for _ in range(3):
+        run = fit_streaming(cfg["root"], lcfg,
+                            prefetch=cfg["prefetch"], **kw)
+        _assert_same_params(cold, run)
+        if warm is None or run.train_seconds < warm.train_seconds:
+            warm = run
+    print(json.dumps(_summarize(warm, cold, lcfg, cfg["te_path"])))
+
+
+def _paired(run_a, run_b, rounds=2):
+    """Runs the (baseline, variant) worker pair ``rounds`` times
+    back-to-back and returns the round with the smallest combined warm
+    time.  Ratios on this shared box are meaningless unless both sides
+    see the same load window — independent best-of runs routinely
+    catch one lucky and one contended measurement."""
+    best = None
+    for _ in range(rounds):
+        a, b = run_a(), run_b()
+        combined = a["warm_s"] + b["warm_s"]
+        if best is None or combined < best[0]:
+            best = (combined, a, b)
+    return best[1], best[2]
+
+
+def _run_worker(root, te_path, *, prefetch, data_parallel, devices,
+                batch=BATCH, epochs=WARM_EPOCHS, mode="single"):
+    cfg = dict(root=root, te_path=te_path, k=K, b=B, batch=batch, lr=LR,
+               epochs=epochs, prefetch=prefetch,
+               data_parallel=data_parallel, mode=mode)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "src"), here,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.streaming_bench",
+         "--worker", json.dumps(cfg)],
+        capture_output=True, text=True, timeout=1800, env=env, cwd=here)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"bench worker failed\nSTDOUT:\n{proc.stdout[-2000:]}\n"
+            f"STDERR:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+# ------------------------------------------------------- smoke tier -------
+def _smoke() -> list:
+    from repro.models.linear import BBitLinearConfig
+    from repro.train import fit_streaming, trees_bitwise_equal as same
+
     with tempfile.TemporaryDirectory(prefix="stream_bench_") as root:
         _, _, n_tr = _setup(root, N_DOCS, 16, 4, 2)
         lcfg = BBitLinearConfig(k=16, b=4)
-        kw = dict(epochs=2, batch_size=8, lr=LR, seed=0)
-        a = fit_streaming(root, lcfg, **kw)
-        b = fit_streaming(root, lcfg, **kw)
-        for x, y in zip(jax.tree.leaves(a.params),
-                        jax.tree.leaves(b.params)):
-            assert np.array_equal(np.asarray(x), np.asarray(y)), \
-                "streaming run is not deterministic"
+        kw = dict(epochs=2, batch_size=4, lr=LR, seed=0)
+        off = fit_streaming(root, lcfg, prefetch=0, **kw)
+        on = fit_streaming(root, lcfg, prefetch=2, **kw)
+        assert same(off.params, on.params), \
+            "prefetch-on drifted from prefetch-off"
+        assert (off.examples_seen == on.examples_seen
+                and off.progressive_acc == on.progressive_acc), \
+            "prefetch changed the progressive-validation counters"
+        again = fit_streaming(root, lcfg, prefetch=2, **kw)
+        assert same(on.params, again.params), \
+            "streaming run is not deterministic"
         with tempfile.TemporaryDirectory() as ck:
             part = fit_streaming(root, lcfg, ckpt_dir=ck,
                                  stop_after_shards=1, **kw)
             assert not part.completed
             resumed = fit_streaming(root, lcfg, ckpt_dir=ck, **kw)
-            for x, y in zip(jax.tree.leaves(a.params),
-                            jax.tree.leaves(resumed.params)):
-                assert np.array_equal(np.asarray(x), np.asarray(y)), \
-                    "kill/resume drifted from the uninterrupted run"
+            assert same(on.params, resumed.params), \
+                "kill/resume drifted from the uninterrupted run"
     return emit([("streaming/smoke_determinism_k16_b4", 0.0,
-                  f"rows={n_tr};resume_bit_identical=1")])
+                  f"rows={n_tr};resume_bit_identical=1;"
+                  "prefetch_bit_identical=1")])
 
 
+# -------------------------------------------------------- full tier -------
 def streaming_bench() -> list:
     if SMOKE:
         return _smoke()
@@ -95,12 +260,36 @@ def streaming_bench() -> list:
     from repro.train import fit_streaming, train_bbit_sgd
     with tempfile.TemporaryDirectory(prefix="stream_bench_") as root:
         codes_te, labels_te, n_tr = _setup(root, N_DOCS, K, B, N_SHARDS)
+        te_path = os.path.join(root, "heldout.npz")
+        np.savez(te_path, codes=codes_te, labels=labels_te)
         lcfg = BBitLinearConfig(k=K, b=B)
 
-        # config supplies epochs (one pass) + averaging window; the
-        # bench corpus is small so batch/lr shrink with it
+        # prefetch off/on alternate INSIDE one worker process (shared
+        # cached step, adjacent load windows) — the only measurement
+        # structure that survives this box's noise
+        pair = _run_worker(root, te_path, prefetch=2, data_parallel=None,
+                           devices=1, mode="overlap")
+        off, on = pair["off"], pair["on"]
+        dp2 = _run_worker(root, te_path, prefetch=2, data_parallel=2,
+                          devices=2)
+        overlap = on["rows_per_s"] / max(off["rows_per_s"], 1e-9)
+
+        # 1→2 device weak scaling at a compute-bound per-device batch
+        scale_root = os.path.join(root, "scaling")
+        _setup_scaling(scale_root, SCALE_BATCH, SCALE_SHARDS, K, B)
+        s1, s2 = _paired(
+            lambda: _run_worker(scale_root, None, prefetch=2,
+                                data_parallel=None, devices=1,
+                                batch=SCALE_BATCH, epochs=SCALE_EPOCHS),
+            lambda: _run_worker(scale_root, None, prefetch=2,
+                                data_parallel=2, devices=2,
+                                batch=SCALE_BATCH, epochs=SCALE_EPOCHS))
+        scaling = s2["rows_per_s"] / max(s1["rows_per_s"], 1e-9)
+
+        # PR-3 legacy pair: one-pass streaming vs load-then-SGD
         res = fit_streaming(root, lcfg, **CONFIG.stream_kwargs(
-            epochs=EPOCHS, batch_size=BATCH, lr=LR), seed=0)
+            epochs=EPOCHS, batch_size=BATCH, lr=LR,
+            data_parallel=None), seed=0)
         t_stream = res.train_seconds
         rows_s_stream = res.examples_seen / max(t_stream, 1e-9)
         acc_stream = _test_acc(res.eval_params, codes_te, labels_te,
@@ -115,6 +304,25 @@ def streaming_bench() -> list:
         rows_s_mem = (EPOCHS * n_tr) / max(mem.train_seconds, 1e-9)
 
     return emit([
+        (f"streaming/prefetch_off_k{K}_b{B}", off["warm_s"] * 1e6,
+         f"rows_per_s={off['rows_per_s']:.0f};"
+         f"steps={off['steps']};test_acc={off['test_acc']:.4f}"),
+        (f"streaming/prefetch_on_k{K}_b{B}", on["warm_s"] * 1e6,
+         f"rows_per_s={on['rows_per_s']:.0f};overlap_vs_off={overlap:.2f}x;"
+         f"cold_s={on['cold_s']:.3f};test_acc={on['test_acc']:.4f};"
+         "note=page_cache_hot_no_real_io_to_hide"),
+        (f"streaming/dp2_k{K}_b{B}", dp2["warm_s"] * 1e6,
+         f"rows_per_s={dp2['rows_per_s']:.0f};devices={dp2['devices']};"
+         f"test_acc={dp2['test_acc']:.4f};"
+         f"progressive_acc={dp2['progressive_acc']:.4f}"),
+        (f"streaming/scaling_serial_k{K}_b{B}_B{SCALE_BATCH}",
+         s1["warm_s"] * 1e6,
+         f"rows_per_s={s1['rows_per_s']:.0f};steps={s1['steps']}"),
+        (f"streaming/scaling_dp2_k{K}_b{B}_B{SCALE_BATCH}",
+         s2["warm_s"] * 1e6,
+         f"rows_per_s={s2['rows_per_s']:.0f};"
+         f"scaling_1to2dev={scaling:.2f}x;devices={s2['devices']};"
+         "note=weak_scaling_fixed_per_device_batch"),
         (f"streaming/onepass_k{K}_b{B}_stream", t_stream * 1e6,
          f"rows_per_s={rows_s_stream:.0f};"
          f"progressive_acc={res.progressive_acc:.4f};"
@@ -128,4 +336,7 @@ def streaming_bench() -> list:
 
 
 if __name__ == "__main__":
-    streaming_bench()
+    if len(sys.argv) >= 3 and sys.argv[1] == "--worker":
+        _worker(json.loads(sys.argv[2]))
+    else:
+        streaming_bench()

@@ -22,6 +22,7 @@ a pure function of step.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -29,6 +30,26 @@ from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+def run_fingerprint(payload: dict) -> np.int64:
+    """Stable int64 fingerprint of run-defining settings.
+
+    JSON-canonicalized (sorted keys) SHA-256, truncated to 63 bits so it
+    round-trips as a non-negative np.int64 checkpoint leaf.  A restored
+    run compares the stored fingerprint against its own and refuses to
+    continue on mismatch — this is how ``fit_streaming`` detects "same
+    tree structure, different run semantics" (different archive,
+    batching, seed, loss …).  Data-parallel runs additionally include
+    their world size and shard-assignment policy in ``payload``, so a
+    checkpoint written on N devices refuses to resume on M ≠ N (the
+    batch schedule — hence the replayed step sequence — depends on the
+    topology).
+    """
+    src = json.dumps(payload, sort_keys=True)
+    return np.int64(
+        int.from_bytes(hashlib.sha256(src.encode()).digest()[:8],
+                       "big") >> 1)
 
 
 def _step_dir(root: str, step: int) -> str:

@@ -13,6 +13,7 @@ within ~0.1% of the b=16 ceiling) at a quarter of the storage of the
 k=500/b=16 minwise config.
 """
 import dataclasses
+from typing import Optional
 
 from repro.models.linear import BBitLinearConfig
 
@@ -43,6 +44,12 @@ class OPHPaperConfig:
     stream_epochs: int = 1       # one pass — the VW-online comparison
     avg_start_frac: float = 0.5
     ckpt_every_shards: int = 4
+    # overlapped hot path (PR 4): async producer→queue→device pipeline
+    # depth (0 = inline; any depth is bit-identical) and the data-
+    # parallel world size (None = single device; N shards the epoch's
+    # shard groups over N devices with psum_mean gradient all-reduce)
+    stream_prefetch: int = 2
+    stream_data_parallel: Optional[int] = None
 
     def linear_config(self) -> BBitLinearConfig:
         return BBitLinearConfig(k=self.k, b=self.b,
@@ -55,7 +62,9 @@ class OPHPaperConfig:
         and checkpoint cadence)."""
         kw = dict(epochs=self.stream_epochs, batch_size=self.stream_batch,
                   lr=self.stream_lr, avg_start_frac=self.avg_start_frac,
-                  ckpt_every_shards=self.ckpt_every_shards)
+                  ckpt_every_shards=self.ckpt_every_shards,
+                  prefetch=self.stream_prefetch,
+                  data_parallel=self.stream_data_parallel)
         kw.update(overrides)
         return kw
 

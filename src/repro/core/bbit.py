@@ -66,6 +66,12 @@ def packed_width(k: int, b: int) -> int:
     return (k * b + 7) // 8
 
 
+def packed_mask_width(k: int) -> int:
+    """Bytes per row of the packed ``oph_zero`` empty bitmask:
+    ceil(k/8) (``np.packbits`` layout, MSB-first)."""
+    return (k + 7) // 8
+
+
 @functools.partial(jax.jit, static_argnames=("b",))
 def pack_codes_jnp(codes: jax.Array, b: int) -> jax.Array:
     """Device-side ``pack_codes`` (bit-exact, jit-able) → uint8.

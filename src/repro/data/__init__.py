@@ -9,6 +9,10 @@ from repro.data.hashed_dataset import (
     iter_hashed, iter_packed, iter_hashed_batches, load_packed_shard,
     shard_row_counts, preprocess_and_save, HashedShardWriter,
 )
+from repro.data.prefetch import (
+    StreamBatch, Boundary, shard_order, serial_batch_stream,
+    group_batch_stream, ThreadedPrefetcher,
+)
 from repro.data.loader import HashedCodesLoader, SparseRowsLoader
 from repro.data.lm_synth import token_batch, lm_example_stream
 
@@ -19,6 +23,9 @@ __all__ = [
     "preprocess_rows", "preprocess_rows_packed", "save_hashed",
     "load_hashed", "iter_hashed", "iter_packed", "iter_hashed_batches",
     "load_packed_shard", "shard_row_counts", "preprocess_and_save",
-    "HashedShardWriter", "HashedCodesLoader", "SparseRowsLoader",
+    "HashedShardWriter",
+    "StreamBatch", "Boundary", "shard_order", "serial_batch_stream",
+    "group_batch_stream", "ThreadedPrefetcher",
+    "HashedCodesLoader", "SparseRowsLoader",
     "token_batch", "lm_example_stream",
 ]

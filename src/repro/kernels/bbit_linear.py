@@ -11,6 +11,22 @@ by building the one-hot tile *in VMEM registers* (a lane-iota compare)
 and contracting it on the MXU against the (2^b, C) weight slab of each
 hash function.  The expansion never touches HBM.
 
+Two input formats share the one-hot contraction:
+
+  * ``bbit_linear_fwd_pallas`` / ``bbit_linear_bwd_dw_pallas`` take an
+    already-widened int32 ``(n, k)`` code matrix;
+  * ``bbit_linear_packed_fwd_pallas`` / ``…_packed_bwd_dw_pallas`` take
+    the ON-DISK packed rows — uint8 ``(n, ceil(k·b/8))``, the
+    ``core.bbit.pack_codes`` bit layout — and unpack the b-bit codes
+    in-register between the VMEM load and the compare, so the widened
+    matrix never exists anywhere (the streaming trainer's hot path:
+    n·ceil(k·b/8) bytes HBM→VMEM instead of n·k·4).  An optional
+    packed empty bitmask (``np.packbits`` layout, the ``oph_zero``
+    shard side file) zeroes the marked bins' one-hot rows, fusing the
+    ragged-mask path that previously forced an XLA gather.  Requires
+    b ∈ {1, 2, 4, 8} so codes never straddle bytes (other b fall back
+    to the XLA unpack path — see ops.py).
+
 TPU-adaptive dispatch (see ops.py): for 2^b ≤ 4096 the streamed
 one-hot·W matmul reads the whole table at HBM line rate and wins; for
 b = 16 the 2^b·k·C table stream dominates and ops.py falls back to
@@ -162,4 +178,229 @@ def bbit_linear_bwd_dw_pallas(
         out_shape=jax.ShapeDtypeStruct((kp_, vsize, c), jnp.float32),
         interpret=interpret,
     )(codes_p, dout_p)
+    return dw[:k]
+
+
+# ---------------------------------------------------------------------------
+# Packed-input variants: unpack b-bit codes in-register, no (n, k) int32
+# intermediate.  Bit layout matches core.bbit.pack_codes (row-major
+# bitstream, LSB-first: code j·(8/b)+t sits in byte j at bit offset t·b)
+# and np.packbits (MSB-first) for the empty bitmask.
+# ---------------------------------------------------------------------------
+def _unpack_codes_block(pk, bits: int):
+    """(BN, WB) uint8 packed block → (BN, WB·8/b) int32 codes."""
+    r = 8 // bits
+    p = pk.astype(jnp.uint32)
+    mask = jnp.uint32((1 << bits) - 1)
+    cols = jnp.stack(
+        [(p >> jnp.uint32(t * bits)) & mask for t in range(r)], axis=2)
+    return cols.reshape(pk.shape[0], -1).astype(jnp.int32)
+
+
+def _unpack_mask_block(em):
+    """(BN, EB) uint8 packbits block → (BN, EB·8) bool (MSB-first)."""
+    p = em.astype(jnp.uint32)
+    cols = jnp.stack(
+        [(p >> jnp.uint32(7 - t)) & 1 for t in range(8)], axis=2)
+    return cols.reshape(em.shape[0], -1) != 0
+
+
+def _make_packed_fwd_kernel(bits: int, masked: bool):
+    def kernel(pk_ref, *rest):
+        if masked:
+            em_ref, w_ref, out_ref = rest
+        else:
+            w_ref, out_ref = rest
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        codes = _unpack_codes_block(pk_ref[...], bits)   # (BN, BJ) int32
+        empty = _unpack_mask_block(em_ref[...]) if masked else None
+        w = w_ref[...]                                   # (BJ, V, C)
+        bn, bj = codes.shape
+        v = w.shape[1]
+
+        acc = out_ref[...]
+        for jj in range(bj):
+            onehot = (codes[:, jj][:, None]
+                      == jax.lax.broadcasted_iota(jnp.int32, (bn, v), 1))
+            if masked:
+                onehot = onehot & ~empty[:, jj][:, None]
+            acc = acc + jax.lax.dot_general(
+                onehot.astype(w.dtype), w[jj],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        out_ref[...] = acc
+    return kernel
+
+
+def _packed_blocks(n, k, bits, block_n, block_j):
+    """Shared block geometry: BJ is a multiple of 8 so one code block is
+    a whole number of packed bytes AND a whole number of mask bytes."""
+    bj = min(block_j, ((k + 7) // 8) * 8)
+    bj = ((bj + 7) // 8) * 8
+    bn = min(block_n, n)
+    kp = ((k + bj - 1) // bj) * bj
+    return bn, bj, kp
+
+
+def _pad_packed_inputs(packed, empty, weights, k, bits, bn, bj, kp):
+    """Pads rows to a BN multiple and the k axis to a BJ multiple.
+
+    Padding bytes unpack to code 0 and padded weight rows are zero, so
+    padded lanes contribute exactly nothing — this is what makes
+    non-lane-multiple k (and the pack format's own zero padding bits in
+    the final byte) exact rather than approximately masked.
+    """
+    n = packed.shape[0]
+    pad_n = (-n) % bn
+    wp = kp * bits // 8
+    packed_p = jnp.pad(packed,
+                       ((0, pad_n), (0, wp - packed.shape[1])))
+    w_p = jnp.pad(weights, ((0, kp - k), (0, 0), (0, 0)))
+    empty_p = None
+    if empty is not None:
+        ep = kp // 8
+        empty_p = jnp.pad(empty,
+                          ((0, pad_n), (0, ep - empty.shape[1])))
+    return packed_p, empty_p, w_p
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "bits", "block_n", "block_j", "interpret"),
+)
+def bbit_linear_packed_fwd_pallas(
+    packed: jax.Array,
+    weights: jax.Array,
+    *,
+    k: int,
+    bits: int,
+    empty: jax.Array = None,
+    block_n: int = 128,
+    block_j: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """logits (n, C) f32 straight from packed uint8 (n, ceil(k·bits/8)).
+
+    Bit-exact vs ``unpack_codes_jnp`` + the widened kernel/gather
+    (tests/test_packed_linear.py property-sweeps b, ragged masks and
+    non-lane-multiple k).  ``empty`` (uint8 (n, ceil(k/8)), packbits
+    layout) drops the marked bins — the ``oph_zero`` ragged-mask path,
+    fused here instead of falling back to an XLA gather.
+    """
+    n = packed.shape[0]
+    _, v, c = weights.shape
+    bn, bj, kp = _packed_blocks(n, k, bits, block_n, block_j)
+    packed_p, empty_p, w_p = _pad_packed_inputs(
+        packed, empty, weights, k, bits, bn, bj, kp)
+    np_ = packed_p.shape[0]
+    wb = bj * bits // 8
+
+    masked = empty is not None
+    in_specs = [pl.BlockSpec((bn, wb), lambda i, j: (i, j))]
+    args = [packed_p]
+    if masked:
+        in_specs.append(pl.BlockSpec((bn, bj // 8), lambda i, j: (i, j)))
+        args.append(empty_p)
+    in_specs.append(pl.BlockSpec((bj, v, c), lambda i, j: (j, 0, 0)))
+    args.append(w_p)
+
+    out = pl.pallas_call(
+        _make_packed_fwd_kernel(bits, masked),
+        grid=(np_ // bn, kp // bj),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bn, c), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, c), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out[:n]
+
+
+def _make_packed_bwd_kernel(bits: int, masked: bool):
+    def kernel(pk_ref, *rest):
+        if masked:
+            em_ref, dout_ref, dw_ref = rest
+        else:
+            dout_ref, dw_ref = rest
+        i = pl.program_id(1)
+
+        @pl.when(i == 0)
+        def _init():
+            dw_ref[...] = jnp.zeros_like(dw_ref)
+
+        codes = _unpack_codes_block(pk_ref[...], bits)   # (BN, BJ)
+        empty = _unpack_mask_block(em_ref[...]) if masked else None
+        dout = dout_ref[...]                             # (BN, C)
+        bn, bj = codes.shape
+        v = dw_ref.shape[1]
+
+        acc = dw_ref[...]
+        for jj in range(bj):
+            onehot = (codes[:, jj][:, None]
+                      == jax.lax.broadcasted_iota(jnp.int32, (bn, v), 1))
+            if masked:
+                onehot = onehot & ~empty[:, jj][:, None]
+            contrib = jax.lax.dot_general(
+                onehot.astype(dout.dtype), dout,
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc.at[jj].add(contrib)
+        dw_ref[...] = acc
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "bits", "vsize", "block_n", "block_j",
+                     "interpret"),
+)
+def bbit_linear_packed_bwd_dw_pallas(
+    packed: jax.Array,
+    dout: jax.Array,
+    vsize: int,
+    *,
+    k: int,
+    bits: int,
+    empty: jax.Array = None,
+    block_n: int = 128,
+    block_j: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """dW (k, V, C) f32 from packed rows and dout (n, C), in-register
+    unpack; ``empty`` bins contribute nothing (their one-hot row is
+    zeroed, matching the forward)."""
+    n = packed.shape[0]
+    c = dout.shape[1]
+    bn, bj, kp = _packed_blocks(n, k, bits, block_n, block_j)
+    packed_p, empty_p, _w = _pad_packed_inputs(
+        packed, empty, jnp.zeros((k, vsize, c), jnp.float32),
+        k, bits, bn, bj, kp)
+    np_ = packed_p.shape[0]
+    # Padded examples unpack to code 0 but carry zero dout → no effect.
+    dout_p = jnp.pad(dout.astype(jnp.float32), ((0, np_ - n), (0, 0)))
+    wb = bj * bits // 8
+
+    masked = empty is not None
+    in_specs = [pl.BlockSpec((bn, wb), lambda j, i: (i, j))]
+    args = [packed_p]
+    if masked:
+        in_specs.append(pl.BlockSpec((bn, bj // 8), lambda j, i: (i, j)))
+        args.append(empty_p)
+    in_specs.append(pl.BlockSpec((bn, c), lambda j, i: (i, 0)))
+    args.append(dout_p)
+
+    dw = pl.pallas_call(
+        _make_packed_bwd_kernel(bits, masked),
+        grid=(kp // bj, np_ // bn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bj, vsize, c), lambda j, i: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, vsize, c), jnp.float32),
+        interpret=interpret,
+    )(*args)
     return dw[:k]

@@ -35,6 +35,8 @@ from repro.kernels.fused_encode import (
 from repro.kernels.bbit_linear import (
     bbit_linear_fwd_pallas,
     bbit_linear_bwd_dw_pallas,
+    bbit_linear_packed_fwd_pallas,
+    bbit_linear_packed_bwd_dw_pallas,
 )
 from repro.kernels.vw_sketch import vw_sketch_pallas
 
@@ -139,6 +141,72 @@ def _bbit_linear_vjp_bwd(interpret, res, dout):
 
 
 bbit_linear.defvjp(_bbit_linear_vjp_fwd, _bbit_linear_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+def packed_kernel_supported(bits: int, v: int) -> bool:
+    """Whether the packed-input kernels handle (b=bits, V=v): the
+    in-register unpack needs byte-aligned codes, and beyond MAX_V the
+    table stream dominates so the gather fallback is memory-optimal.
+    The single eligibility predicate — models.linear dispatches on it
+    too, so policy changes here cannot diverge from the vjp's own
+    dispatch below."""
+    return bits in PACK_BITS and v <= BBIT_KERNEL_MAX_V
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _bbit_linear_packed(k, bits, interpret, packed, empty, weights):
+    return _bbit_linear_packed_fwd_impl(k, bits, interpret, packed,
+                                        empty, weights)
+
+
+def _bbit_linear_packed_fwd_impl(k, bits, interpret, packed, empty,
+                                 weights):
+    if packed_kernel_supported(bits, weights.shape[1]):
+        return bbit_linear_packed_fwd_pallas(
+            packed, weights, k=k, bits=bits, empty=empty,
+            interpret=_auto_interpret(interpret))
+    return ref.bbit_linear_packed_fwd(packed, weights, k, bits,
+                                      empty=empty)
+
+
+def _bbit_linear_packed_vjp_fwd(k, bits, interpret, packed, empty,
+                                weights):
+    out = _bbit_linear_packed_fwd_impl(k, bits, interpret, packed, empty,
+                                       weights)
+    return out, (packed, empty, weights)
+
+
+def _bbit_linear_packed_vjp_bwd(k, bits, interpret, res, dout):
+    packed, empty, weights = res
+    v = weights.shape[1]
+    if packed_kernel_supported(bits, v):
+        dw = bbit_linear_packed_bwd_dw_pallas(
+            packed, dout.astype(jnp.float32), v, k=k, bits=bits,
+            empty=empty, interpret=_auto_interpret(interpret))
+    else:
+        dw = ref.bbit_linear_packed_bwd_dw(packed, dout, v, k, bits,
+                                           empty=empty)
+    return (None, None, dw.astype(weights.dtype))
+
+
+_bbit_linear_packed.defvjp(_bbit_linear_packed_vjp_fwd,
+                           _bbit_linear_packed_vjp_bwd)
+
+
+def bbit_linear_packed(packed: jax.Array, weights: jax.Array, k: int,
+                       bits: int, *, empty: Optional[jax.Array] = None,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """logits (n, C) straight from PACKED uint8 rows — differentiable
+    in W; the (n, k) int32 code matrix never materializes on the
+    kernel path (in-register unpack, see bbit_linear.py).
+
+    ``empty`` (uint8 (n, ceil(k/8)), np.packbits layout) is the
+    ``oph_zero`` empty-bin bitmask: marked bins contribute nothing in
+    either direction.  Integer inputs carry no gradient; the vjp
+    returns dW only.
+    """
+    return _bbit_linear_packed(k, bits, interpret, packed, empty, weights)
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,43 @@ def bbit_linear_bwd_dw(codes: jax.Array, dout: jax.Array,
     return jnp.einsum("nkv,nc->kvc", onehot, dout.astype(jnp.float32))
 
 
+def bbit_linear_packed_fwd(packed: jax.Array, weights: jax.Array,
+                           k: int, bits: int,
+                           empty: jax.Array = None) -> jax.Array:
+    """Packed-input oracle: unpack (XLA) → gather → mask → sum.
+
+    packed: uint8 (n, ceil(k·bits/8)) in the ``core.bbit.pack_codes``
+    layout; empty: uint8 (n, ceil(k/8)) packbits bitmask or None.
+    Semantic ground truth for the packed Pallas kernels AND the non-TPU
+    fallback ops.py dispatches to — the widened (n, k) matrix exists
+    here only as a fused in-step temporary.
+    """
+    from repro.core.bbit import unpack_codes_jnp, unpack_mask_jnp
+
+    codes = unpack_codes_jnp(packed, k, bits).astype(jnp.int32)
+    gathered = jnp.take_along_axis(
+        weights[None], codes[:, :, None, None], axis=2,
+    )[:, :, 0, :].astype(jnp.float32)
+    if empty is not None:
+        mask = unpack_mask_jnp(empty, k)
+        gathered = jnp.where(mask[:, :, None], 0.0, gathered)
+    return gathered.sum(axis=1)
+
+
+def bbit_linear_packed_bwd_dw(packed: jax.Array, dout: jax.Array,
+                              vsize: int, k: int, bits: int,
+                              empty: jax.Array = None) -> jax.Array:
+    """dW[j, v, c] = Σ_n 1{codes[n,j]=v ∧ ¬empty[n,j]}·dout[n,c]."""
+    from repro.core.bbit import unpack_codes_jnp, unpack_mask_jnp
+
+    codes = unpack_codes_jnp(packed, k, bits).astype(jnp.int32)
+    onehot = jax.nn.one_hot(codes, vsize, dtype=jnp.float32)   # (n, k, V)
+    if empty is not None:
+        mask = unpack_mask_jnp(empty, k)
+        onehot = jnp.where(mask[:, :, None], 0.0, onehot)
+    return jnp.einsum("nkv,nc->kvc", onehot, dout.astype(jnp.float32))
+
+
 def vw_sketch(indices: jax.Array, values: jax.Array, nnz: jax.Array,
               m_buckets: int, seed: int) -> jax.Array:
     """Signed feature hashing into m buckets (paper Eq. 14), f32 (n, m).

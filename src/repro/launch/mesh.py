@@ -33,3 +33,27 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_test_mesh(data: int = 4, model: int = 2) -> Mesh:
     """Small mesh for unit tests (requires ≥ data·model fake devices)."""
     return _make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(n_devices=None) -> Mesh:
+    """1-D ``("data",)`` mesh over the first ``n_devices`` visible
+    devices (all of them by default) — the data-parallel streaming
+    topology (``train.data_parallel``): batches shard over the axis,
+    parameters replicate, gradients all-reduce with ``psum_mean``.
+
+    Unlike ``jax.make_mesh`` this accepts a device count below the
+    total, so a 2-way run works on an 8-fake-device test process.
+    """
+    import numpy as np
+
+    avail = jax.devices()
+    n = len(avail) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(avail):
+        raise ValueError(
+            f"data mesh needs 1 <= n_devices <= {len(avail)} visible "
+            f"devices, got {n} (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N for fake devices)")
+    devs = np.asarray(avail[:n])
+    if AxisType is not None:
+        return Mesh(devs, ("data",), axis_types=(AxisType.Auto,))
+    return Mesh(devs, ("data",))

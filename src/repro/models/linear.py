@@ -79,6 +79,35 @@ def bbit_logits(params, codes: jax.Array, cfg: BBitLinearConfig,
     return out + params["bias"].astype(jnp.float32)
 
 
+def bbit_logits_packed(params, packed: jax.Array, cfg: BBitLinearConfig,
+                       empty_packed: Optional[jax.Array] = None):
+    """Packed uint8 (n, ceil(k·b/8)) rows → logits (n, n_out) float32.
+
+    The streaming trainer's forward: minibatches arrive in the on-disk
+    packed layout and stay packed.  On the kernel path (TPU, byte-
+    aligned b, 2^b within the table-stream bound) the Pallas kernels
+    unpack b-bit codes in-register, so the (n, k) int32 code matrix of
+    the old ``unpack_codes_jnp`` + ``bbit_logits`` two-step never
+    materializes — and ``empty_packed`` (the ``oph_zero`` bitmask,
+    np.packbits layout) is fused into the same pass instead of forcing
+    the XLA gather.  Elsewhere it lowers to exactly that two-step
+    inside the caller's jit (bit-identical numerics; the widened codes
+    are a fused temporary).
+    """
+    if (_kernel_enabled(cfg)
+            and ops.packed_kernel_supported(cfg.b, 1 << cfg.b)):
+        out = ops.bbit_linear_packed(packed, params["table"], cfg.k,
+                                     cfg.b, empty=empty_packed)
+        if cfg.normalize:
+            out = out / jnp.sqrt(jnp.float32(cfg.k))
+        return out + params["bias"].astype(jnp.float32)
+    from repro.core.bbit import unpack_codes_jnp, unpack_mask_jnp
+    codes = unpack_codes_jnp(packed, cfg.k, cfg.b).astype(jnp.int32)
+    empty = (unpack_mask_jnp(empty_packed, cfg.k)
+             if empty_packed is not None else None)
+    return bbit_logits(params, codes, cfg, empty=empty)
+
+
 def predict_classes(params, codes, cfg: BBitLinearConfig) -> jax.Array:
     logits = bbit_logits(params, codes, cfg)
     if cfg.n_classes == 2:

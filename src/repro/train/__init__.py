@@ -14,13 +14,19 @@ Two ways to fit the paper's linear models over hashed codes:
 """
 from repro.train.losses import (
     logistic, hinge, squared_hinge, softmax_xent, binary_margins,
-    liblinear_objective, mean_loss_fn, mean_loss_with_preds_fn, LOSSES,
+    liblinear_objective, mean_loss_fn, mean_loss_with_preds_fn,
+    sum_loss_with_hits_fn, LOSSES,
+)
+from repro.train.data_parallel import (
+    build_dp_averaged_train_step, device_put_sharded,
 )
 from repro.train.steps import (
     TrainState, init_state, build_train_step, build_microbatched_train_step,
     AveragedTrainState, init_averaged_state, build_averaged_train_step,
 )
-from repro.train.metrics import accuracy, batched_accuracy
+from repro.train.metrics import (
+    accuracy, batched_accuracy, trees_bitwise_equal,
+)
 from repro.train.linear_trainer import (
     FitResult, train_bbit_liblinear, train_vw_liblinear, train_bbit_sgd,
 )
@@ -29,11 +35,12 @@ from repro.train.streaming import StreamFitResult, fit_streaming
 __all__ = [
     "logistic", "hinge", "squared_hinge", "softmax_xent", "binary_margins",
     "liblinear_objective", "mean_loss_fn", "mean_loss_with_preds_fn",
-    "LOSSES",
+    "sum_loss_with_hits_fn", "LOSSES",
+    "build_dp_averaged_train_step", "device_put_sharded",
     "TrainState", "init_state", "build_train_step",
     "build_microbatched_train_step",
     "AveragedTrainState", "init_averaged_state", "build_averaged_train_step",
-    "accuracy", "batched_accuracy",
+    "accuracy", "batched_accuracy", "trees_bitwise_equal",
     "FitResult", "train_bbit_liblinear", "train_vw_liblinear",
     "train_bbit_sgd",
     "StreamFitResult", "fit_streaming",

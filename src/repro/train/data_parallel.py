@@ -1,0 +1,152 @@
+"""Data-parallel averaged train step: ``shard_map`` + ``psum_mean``.
+
+The multi-device half of the streaming hot path (ROADMAP: "multi-host
+data-parallel streaming over ``distributed/``"): each device of a 1-D
+``("data",)`` mesh (``launch.mesh.make_data_mesh``) trains on its OWN
+shard of the epoch — batches arrive stacked ``(world, B, …)`` from
+``data.prefetch.group_batch_stream`` — while parameters stay
+replicated:
+
+  * every device computes the masked per-example SUM loss over its
+    valid rows (``train.losses.sum_loss_with_hits_fn``; padding rows
+    and shard-less devices contribute nothing);
+  * the local gradient sums are pre-scaled by ``world / Σ_devices
+    valid`` so the ``psum_mean`` gradient all-reduce
+    (``distributed.collectives``) yields EXACTLY the gradient of the
+    mean loss over the union of all devices' real rows — uneven tails
+    and zero-row devices change the weighting not at all; the L2 term
+    is added once AFTER the all-reduce (replicated params → identical
+    on every device);
+  * each step pays exactly TWO all-reduces — the (loss, hits, rows)
+    scalar triple crosses stacked, the gradient tree crosses fused
+    inside ``psum_mean`` — because collective setup cost, not payload,
+    dominates small steps (hit counts ride as f32, exact far beyond
+    any realistic batch); the trainer drains one replicated hits
+    scalar per step exactly like the serial path;
+  * the optimizer and Polyak-average update run on the all-reduced
+    gradient with replicated inputs → parameters remain bitwise
+    replicated without any weight broadcast, and a device that
+    contributed zero rows still applies the identical global update
+    (Polyak averaging cannot skew).
+
+A device with NO valid rows this step is safe but a step where NO
+device has rows cannot happen: ``group_batch_stream`` emits exactly
+``max_d ceil(rows_d / B)`` steps per group, and the device attaining
+the max has a non-empty batch at every one of them.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:                                   # moved out of experimental ≥ 0.5
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+from repro.distributed.collectives import psum_mean
+from repro.optim.averaging import polyak_update
+from repro.optim.optimizers import Optimizer
+from repro.train.steps import AveragedTrainState, TrainState
+
+AXIS = "data"
+
+
+def device_put_sharded(x, mesh: Mesh):
+    """Places a stacked ``(world, …)`` host array with row d on device
+    d (leading-axis sharding over the mesh's data axis)."""
+    return jax.device_put(x, NamedSharding(mesh, P(AXIS)))
+
+
+def build_dp_averaged_train_step(
+    loss_sum_fn: Callable,
+    optimizer: Optimizer,
+    mesh: Mesh,
+    *,
+    l2: float = 0.0,
+    donate: bool = True,
+):
+    """``loss_sum_fn(params, batch, labels, valid) -> (loss_sum, hits)``
+    (per-device, masked sums); returns a jitted
+
+        ``step(astate, active, batch, labels, valid)
+            -> (astate, (mean_loss, hits))``
+
+    where ``batch``/``labels``/``valid`` are stacked ``(world, B, …)``
+    arrays sharded over the mesh (``device_put_sharded``), ``astate``
+    is replicated, ``mean_loss`` is the global mean over valid rows
+    (plus the L2 term, matching ``mean_loss_with_preds_fn``'s
+    parameterization) and ``hits`` the global correct-prediction count
+    — both replicated scalars.
+    """
+    world = mesh.shape[AXIS]
+
+    def _local(astate: AveragedTrainState, active, batch, labels, valid):
+        # per-device blocks arrive with a leading axis of 1 — peel it
+        batch = jax.tree.map(lambda x: x[0], batch)
+        labels, valid = labels[0], valid[0]
+        vmask = valid.astype(jnp.float32)
+
+        def local_objective(params):
+            lsum, hits = loss_sum_fn(params, batch, labels, valid)
+            return lsum, (lsum, hits)
+
+        (_, (lsum, hits)), gsum = jax.value_and_grad(
+            local_objective, has_aux=True)(astate.state.params)
+
+        # exactly TWO all-reduces per step (collective setup dominates
+        # small steps): the scalar triple crosses stacked, then the
+        # whole gradient tree crosses fused inside psum_mean.
+        scalars = jax.lax.psum(
+            jnp.stack([lsum, hits.astype(jnp.float32),
+                       jnp.sum(vmask)]), AXIS)
+        lsum_g, hits_g, total = scalars[0], scalars[1], scalars[2]
+        # pre-scale so psum_mean (= psum / world) lands on
+        # psum(grad lsum) / total — the gradient of the mean loss over
+        # the union of all devices' real rows.  The scale is cast to
+        # each leaf's dtype: a strong-f32 multiply would widen bf16
+        # grads before psum_mean's dtype preservation ever engages.
+        scale = jnp.float32(world) / total
+        grads = psum_mean(
+            jax.tree.map(lambda g: g * scale.astype(g.dtype), gsum),
+            AXIS)
+        mean_loss = lsum_g / total
+        if l2:
+            # replicated params → identical reg term on every device;
+            # added AFTER the all-reduce so it is counted exactly once
+            grads = jax.tree.map(
+                lambda g, p: g + (l2 * p.astype(jnp.float32))
+                .astype(g.dtype),
+                grads, astate.state.params)
+            mean_loss = mean_loss + 0.5 * l2 * sum(
+                jnp.sum(p.astype(jnp.float32) ** 2)
+                for p in jax.tree.leaves(astate.state.params))
+        hits = hits_g.astype(jnp.int32)
+
+        new_params, new_opt = optimizer.update(
+            grads, astate.state.opt_state, astate.state.params,
+            astate.state.step)
+        avg, count = polyak_update(astate.avg_params, astate.avg_count,
+                                   new_params, active)
+        new_state = TrainState(new_params, new_opt,
+                               astate.state.step + 1)
+        return (AveragedTrainState(new_state, avg, count),
+                mean_loss, hits)
+
+    smapped = shard_map(
+        _local, mesh=mesh,
+        in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(), P(), P()),
+        # the packed-logits custom_vjp has no replication rule; outputs
+        # are replicated by construction (post-psum values only)
+        check_rep=False)
+
+    def step(astate, active, batch, labels, valid):
+        astate, loss, hits = smapped(astate, active, batch, labels,
+                                     valid)
+        return astate, (loss, hits)
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())

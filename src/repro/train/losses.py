@@ -84,32 +84,62 @@ def liblinear_objective(
     return objective
 
 
+def _per_example(logits: jax.Array, labels: jax.Array, loss_name: str):
+    """Per-example losses + the decision rule matching ``loss_name``
+    (argmax for ``"softmax"``, sign of the margin logit otherwise) —
+    the single definition both the serial and data-parallel minibatch
+    losses wrap, so their progressive validation can never diverge."""
+    if loss_name == "softmax":
+        per = softmax_xent(logits, labels)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        per = LOSSES[loss_name](binary_margins(logits, labels))
+        z = logits[:, 0] if logits.ndim == 2 else logits
+        pred = (z > 0).astype(jnp.int32)
+    return per, pred
+
+
 def mean_loss_with_preds_fn(forward: Callable, loss_name: str,
                             l2: float = 0.0):
     """Mean-per-example loss + predicted classes from the SAME forward.
 
     The ``has_aux`` twin of ``mean_loss_fn``: returns ``(loss, pred)``
-    where ``pred`` is the decision rule matching the loss (argmax for
-    ``"softmax"``, sign of the margin logit otherwise) — what the
+    where ``pred`` is the decision rule matching the loss — what the
     streaming trainer's progressive validation counts without paying a
     second forward pass.  This is the single definition of the
     minibatch loss parameterization; ``mean_loss_fn`` wraps it.
     """
     def f(params, codes, labels):
-        logits = forward(params, codes)
-        if loss_name == "softmax":
-            per = softmax_xent(logits, labels)
-            pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            per = LOSSES[loss_name](binary_margins(logits, labels))
-            z = logits[:, 0] if logits.ndim == 2 else logits
-            pred = (z > 0).astype(jnp.int32)
+        per, pred = _per_example(forward(params, codes), labels,
+                                 loss_name)
         loss = jnp.mean(per)
         if l2:
             loss = loss + 0.5 * l2 * sum(
                 jnp.sum(p.astype(jnp.float32) ** 2)
                 for p in jax.tree.leaves(params))
         return loss, pred
+    return f
+
+
+def sum_loss_with_hits_fn(forward: Callable, loss_name: str):
+    """Masked per-example SUM loss + correct-prediction count.
+
+    The data-parallel twin of ``mean_loss_with_preds_fn``: returns
+    ``(loss_sum, hits)`` over the rows where ``valid`` is set, so
+    ragged/padded device batches contribute exactly their real rows.
+    The global mean (and the L2 term, which must not be summed once per
+    device) is applied by ``train.data_parallel`` AFTER the cross-device
+    ``psum`` — dividing here would bake in a per-device count that the
+    all-reduce cannot undo when devices hold different row counts.
+    """
+    def f(params, codes, labels, valid):
+        per, pred = _per_example(forward(params, codes), labels,
+                                 loss_name)
+        vm = valid.astype(per.dtype)
+        loss_sum = jnp.sum(per * vm)
+        hits = jnp.sum(jnp.where(valid, (pred == labels).astype(jnp.int32),
+                                 0))
+        return loss_sum, hits
     return f
 
 

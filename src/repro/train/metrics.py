@@ -1,11 +1,26 @@
 """Evaluation metrics."""
 from __future__ import annotations
 
+from typing import Any
+
 import numpy as np
 
 
 def accuracy(pred: np.ndarray, labels: np.ndarray) -> float:
     return float(np.mean(np.asarray(pred) == np.asarray(labels)))
+
+
+def trees_bitwise_equal(a: Any, b: Any) -> bool:
+    """True iff two pytrees hold element-wise identical leaves — THE
+    check behind every determinism contract in this repo (prefetch
+    depth, kill/resume, run-to-run), defined once so the tests, the
+    benchmark canaries and the examples can never drift apart."""
+    import jax
+
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
 
 
 def batched_accuracy(predict_fn, inputs: np.ndarray, labels: np.ndarray,

@@ -2,34 +2,56 @@
 
 The paper's headline scenario trains on 200 GB — data that never fits
 in memory.  Preprocessing has streamed since PR 2 (``HashedShardWriter``
-writes format-v3 packed shards in O(one shard) memory); this module
-makes the TRAINING side stream too, closing the loop arXiv:1205.2958 §5
-draws against VW's online mode:
+writes format-v3 packed shards in O(one shard) memory); PR 3 made the
+TRAINING side stream; PR 4 makes it saturate the hardware, closing the
+loop arXiv:1205.2958 §5 draws against VW's online mode:
 
   * ``fit_streaming`` iterates the archive one shard at a time through
     ``data.hashed_dataset.iter_hashed_batches`` (minibatches sliced
     off mmap'd packed bytes — the full (n, k) code matrix is never
     materialized, resident memory is one shard's packed pages + one
     minibatch);
+  * **async prefetch** (``prefetch`` ≥ 1, the default): all host-side
+    batch work — mmap fault-in, shuffle, slice, jax transfer — runs in
+    a bounded producer thread ``prefetch`` steps ahead of the device
+    (``data.prefetch``, the producer→queue→device pipeline).  The
+    determinism contract: prefetch depth changes WHEN host work
+    happens, never WHAT is produced — results are bit-identical to the
+    inline path (``prefetch=0``) and checkpoints are interchangeable
+    across depths;
   * minibatches cross the host↔device boundary PACKED — ceil(k·b/8)
-    bytes per row — and are widened on the device by
-    ``core.bbit.unpack_codes_jnp`` *inside* the jitted train step
-    (``oph_zero`` archives also carry their packed empty bitmask,
-    widened by ``unpack_mask_jnp`` and fed to ``bbit_logits``);
+    bytes per row — and stay packed into the forward:
+    ``models.linear.bbit_logits_packed`` unpacks b-bit codes
+    in-register on the kernel path (Pallas, TPU) or as a fused in-jit
+    temporary elsewhere; ``oph_zero`` archives feed their packed empty
+    bitmask to the same fused kernels;
+  * **data parallelism** (``data_parallel=N``): the epoch's shard
+    order is split into consecutive groups of N, one shard per device
+    of a 1-D ``("data",)`` mesh; the averaged step runs under
+    ``shard_map`` with a ``psum_mean`` gradient all-reduce and a
+    ``psum`` over the progressive-validation hit counters
+    (``train.data_parallel``).  Uneven groups are safe: a device
+    holding fewer batches (or no shard) contributes zero-weight
+    padding batches, keeping every collective full-strength while the
+    global row-weighted mean gradient — and hence the Polyak average —
+    stays exact.  The checkpoint fingerprint records the world size
+    and shard-assignment policy, so resume refuses a mismatched
+    topology;
   * the update is plain minibatch SGD/AdamW through the existing
     ``build_train_step`` machinery, wrapped with Polyak *tail*
-    averaging (``optim.averaging`` via ``build_averaged_train_step``)
-    — the averaged iterate is the VW-style online baseline;
+    averaging (``optim.averaging``) — the averaged iterate is the
+    VW-style online baseline;
   * **progressive validation**: every example is scored with the
     current model BEFORE its gradient step, so ``progressive_acc`` is
     the honest one-pass generalization estimate VW reports online;
   * shard order is reshuffled and every shard's rows re-permuted each
-    epoch, both as pure functions of ``(seed, epoch, shard)`` — so a
-    restarted run replays identical batches;
+    epoch, both as pure functions of ``(seed, epoch, shard)``
+    (``data.prefetch.shard_order``) — so a restarted run replays
+    identical batches;
   * ``ckpt_dir`` checkpoints the FULL ``AveragedTrainState`` + stream
-    position at shard boundaries through ``ckpt.checkpoint``; a killed
-    run resumes at the shard boundary and reproduces the uninterrupted
-    run bit-for-bit (tested).
+    position at shard(-group) boundaries through ``ckpt.checkpoint``;
+    a killed run resumes at the boundary and reproduces the
+    uninterrupted run bit-for-bit (tested, serial and data-parallel).
 
 Typical use::
 
@@ -43,8 +65,6 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-import json
 import math
 import os
 import time
@@ -55,15 +75,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
-from repro.core.bbit import unpack_codes_jnp, unpack_mask_jnp
-from repro.data.hashed_dataset import (
-    _read_meta, iter_hashed_batches, shard_row_counts,
+from repro.core.bbit import packed_mask_width, packed_width
+from repro.data.hashed_dataset import _read_meta, shard_row_counts
+from repro.data.prefetch import (
+    Boundary, StreamBatch, ThreadedPrefetcher, group_batch_stream,
+    serial_batch_stream, shard_order,
 )
-from repro.models.linear import BBitLinearConfig, bbit_logits, init_bbit_linear
+from repro.models.linear import (
+    BBitLinearConfig, bbit_logits_packed, init_bbit_linear,
+)
 from repro.optim.averaging import average_or_none
 from repro.optim.optimizers import make_optimizer
-from repro.train.losses import mean_loss_with_preds_fn
+from repro.train.data_parallel import (
+    build_dp_averaged_train_step, device_put_sharded,
+)
+from repro.train.losses import mean_loss_with_preds_fn, sum_loss_with_hits_fn
 from repro.train.steps import build_averaged_train_step, init_averaged_state
+
+
+# jitted step functions keyed by their semantic parameters (mode,
+# world, model config, mask presence, loss, optimizer, lr, l2) — see
+# fit_streaming.  Each entry's jit cache pins its compiled executables,
+# so the cache is FIFO-capped: a hyperparameter sweep wider than the
+# cap just recompiles (the pre-cache behavior) instead of growing
+# process memory without bound.
+_STEP_CACHE: dict = {}
+_STEP_CACHE_MAX = 8
 
 
 @dataclasses.dataclass
@@ -84,12 +121,27 @@ class StreamFitResult:
         return self.avg_params if self.avg_params is not None else self.params
 
 
-def _shard_order(seed: int, epoch: int, n_shards: int,
-                 shuffle: bool) -> np.ndarray:
-    if not shuffle:
-        return np.arange(n_shards)
-    rng = np.random.default_rng(np.random.SeedSequence((seed, epoch)))
-    return rng.permutation(n_shards)
+def _planned_steps(counts, batch_size: int, *, epochs: int, seed: int,
+                   shuffle: bool, world: int) -> int:
+    """Total train steps the full run will take.
+
+    Per group of ``world`` shards the devices run in lockstep for the
+    LONGEST member, so each group costs max_d ceil(rows_d/B) — and
+    because the grouping follows the per-epoch shard shuffle, each
+    epoch's count depends on that epoch's order.  ``world=1`` (groups
+    of one shard) reduces exactly to the serial Σ_shards ceil(rows/B),
+    computed by the shuffle-independent short-cut.
+    """
+    n_shards = len(counts)
+    ceil = [-(-c // batch_size) for c in counts]
+    if world == 1:
+        return epochs * sum(ceil)
+    total = 0
+    for epoch in range(epochs):
+        order = shard_order(seed, epoch, n_shards, shuffle)
+        for lo in range(0, n_shards, world):
+            total += max(ceil[int(s)] for s in order[lo: lo + world])
+    return total
 
 
 def fit_streaming(
@@ -107,6 +159,8 @@ def fit_streaming(
     avg_start_frac: float = 0.5,
     shuffle_shards: bool = True,
     mmap: bool = True,
+    prefetch: int = 2,
+    data_parallel: Optional[int] = None,
     ckpt_dir: Optional[str] = None,
     ckpt_every_shards: int = 1,
     resume: bool = True,
@@ -114,17 +168,25 @@ def fit_streaming(
 ) -> StreamFitResult:
     """Streams a format-v1/2/3 hashed archive through minibatch SGD.
 
-    ``avg_start_frac`` opens the Polyak tail-averaging window after
-    that fraction of the planned total steps (0.0 = average from the
-    first step; ignored when ``average=False``).  ``stop_after_shards``
-    (requires ``ckpt_dir``) processes at most that many shards IN THIS
-    CALL, checkpoints and returns with ``completed=False`` — the
-    deterministic "kill" used by the resume tests and benchmarks; call
-    again with the same arguments to continue.  Resume requires the
-    same archive and hyperparameters; the checkpoint stores the full
-    averaged train state plus stream position and progressive-
-    validation counters, so the continued run is bit-identical to an
-    uninterrupted one.
+    ``prefetch`` is the async pipeline depth: host-side batch assembly
+    and jax transfer run that many steps ahead of the device in a
+    background thread (0 = inline/serial; results are bit-identical
+    either way).  ``data_parallel=N`` trains over the first N visible
+    devices — disjoint shard groups per step, ``psum_mean`` gradient
+    all-reduce (see ``train.data_parallel``); the checkpoint
+    fingerprint then pins the topology, so a resume on a different
+    device count fails loudly.  ``avg_start_frac`` opens the Polyak
+    tail-averaging window after that fraction of the planned total
+    steps (0.0 = average from the first step; ignored when
+    ``average=False``).  ``stop_after_shards`` (requires ``ckpt_dir``)
+    processes at most that many shards IN THIS CALL (rounded up to a
+    whole group under data parallelism), checkpoints and returns with
+    ``completed=False`` — the deterministic "kill" used by the resume
+    tests and benchmarks; call again with the same arguments to
+    continue.  Resume requires the same archive and hyperparameters;
+    the checkpoint stores the full averaged train state plus stream
+    position and progressive-validation counters, so the continued run
+    is bit-identical to an uninterrupted one.
     """
     meta = _read_meta(root)
     if meta.get("shards", 0) <= 0 or meta.get("n", 0) <= 0:
@@ -139,6 +201,8 @@ def fit_streaming(
     if epochs < 1 or batch_size < 1 or ckpt_every_shards < 1:
         raise ValueError(
             "epochs, batch_size and ckpt_every_shards must be >= 1")
+    if prefetch < 0:
+        raise ValueError(f"prefetch depth must be >= 0, got {prefetch}")
     if cfg.n_classes != 2 and loss != "softmax":
         raise ValueError(
             f"loss={loss!r} is binary-only; multiclass streaming "
@@ -157,8 +221,23 @@ def fit_streaming(
 
     counts = shard_row_counts(root)
     n_shards = len(counts)
-    steps_per_epoch = sum(-(-c // batch_size) for c in counts if c)
-    total_steps = epochs * steps_per_epoch
+    small = [i for i, c in enumerate(counts) if 0 < c < batch_size]
+    if small:
+        raise ValueError(
+            f"batch_size={batch_size} exceeds the {min(counts[i] for i in small)}"
+            f" rows of shard(s) {small[:4]}{'…' if len(small) > 4 else ''}"
+            f" in {root!r} — lower batch_size or re-shard the archive "
+            "with fewer shards")
+
+    dp = data_parallel is not None
+    world = int(data_parallel) if dp else 1
+    if dp:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(world)
+
+    total_steps = _planned_steps(
+        counts, batch_size, epochs=epochs, seed=seed,
+        shuffle=shuffle_shards, world=world)
     avg_start_step = (int(math.floor(avg_start_frac * total_steps))
                       if average else total_steps + 1)
 
@@ -172,32 +251,52 @@ def fit_streaming(
     else:
         has_empty = meta.get("scheme") == "oph_zero"
 
+    # packed bytes straight into the forward — in-register unpack on
+    # the kernel path, a fused in-jit temporary elsewhere; the host
+    # never widens anything.
     def fwd(params, batch):
         if has_empty:
             pk, em = batch
-            codes = unpack_codes_jnp(pk, k, b).astype(jnp.int32)
-            return bbit_logits(params, codes, cfg,
-                               empty=unpack_mask_jnp(em, k))
-        codes = unpack_codes_jnp(batch, k, b).astype(jnp.int32)
-        return bbit_logits(params, codes, cfg)
-
-    # shared minibatch loss + matching decision rule (one definition,
-    # train/losses.py); the pre-update predictions ride the train
-    # step's forward as a has_aux output — progressive validation
-    # costs no second forward per batch.
-    loss_with_preds = mean_loss_with_preds_fn(fwd, loss, l2=l2)
-
-    def loss_and_hits(params, batch, labels):
-        total, pred = loss_with_preds(params, batch, labels)
-        return total, jnp.sum(pred == labels)
+            return bbit_logits_packed(params, pk, cfg, empty_packed=em)
+        return bbit_logits_packed(params, batch, cfg)
 
     opt = make_optimizer(optimizer, lr)
-    step_fn = build_averaged_train_step(loss_and_hits, opt, has_aux=True)
+    # the jitted step (and every compiled shape variant behind it) is
+    # cached process-wide on the semantic step parameters: a fresh
+    # closure per call would give each fit its own jit cache, silently
+    # recompiling every step variant on every fit — measured at ~30×
+    # the warm step cost on repeated bench/test fits.
+    step_key = ("dp" if dp else "serial", world, cfg, has_empty, loss,
+                optimizer, lr, l2)
+    step_fn = _STEP_CACHE.get(step_key)
+    if step_fn is None:
+        if dp:
+            step_fn = build_dp_averaged_train_step(
+                sum_loss_with_hits_fn(fwd, loss), opt, mesh, l2=l2)
+        else:
+            # shared minibatch loss + matching decision rule (one
+            # definition, train/losses.py); the pre-update predictions
+            # ride the train step's forward as a has_aux output —
+            # progressive validation costs no second forward per batch.
+            loss_with_preds = mean_loss_with_preds_fn(fwd, loss, l2=l2)
+
+            def loss_and_hits(params, batch, labels):
+                total, pred = loss_with_preds(params, batch, labels)
+                return total, jnp.sum(pred == labels)
+
+            step_fn = build_averaged_train_step(loss_and_hits, opt,
+                                                has_aux=True)
+        while len(_STEP_CACHE) >= _STEP_CACHE_MAX:
+            _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
+        _STEP_CACHE[step_key] = step_fn
 
     # a structural restore can succeed while the run semantics differ
-    # (same model/optimizer shapes, different archive/batching/seed) —
-    # fingerprint everything replay depends on and refuse a mismatch.
-    fp_src = json.dumps(
+    # (same model/optimizer shapes, different archive/batching/seed/
+    # device topology) — fingerprint everything replay depends on and
+    # refuse a mismatch.  prefetch depth is deliberately EXCLUDED: it
+    # never changes the replayed step sequence, so checkpoints are
+    # interchangeable across depths.
+    fingerprint = ckpt.run_fingerprint(
         {"archive": {"n": meta["n"], "shards": n_shards, "k": k, "b": b,
                      "scheme": meta.get("scheme"),
                      "seed": meta.get("seed")},
@@ -205,10 +304,9 @@ def fit_streaming(
          "loss": loss, "optimizer": optimizer, "lr": lr, "l2": l2,
          "epochs": epochs, "batch_size": batch_size, "seed": seed,
          "average": average, "avg_start_step": avg_start_step,
-         "shuffle_shards": shuffle_shards},
-        sort_keys=True)
-    fingerprint = np.int64(int.from_bytes(
-        hashlib.sha256(fp_src.encode()).digest()[:8], "big") >> 1)
+         "shuffle_shards": shuffle_shards,
+         "world": world,
+         "shard_assignment": ("contiguous_groups" if dp else "serial")})
 
     astate = init_averaged_state(
         init_bbit_linear(cfg, jax.random.key(seed)), opt)
@@ -239,9 +337,10 @@ def fit_streaming(
         if int(tree["fingerprint"]) != int(fingerprint):
             raise ValueError(
                 f"checkpoint under {ckpt_dir!r} is incompatible: it was "
-                "written by a run with different hyperparameters or a "
-                "different archive (fingerprint mismatch) — resume "
-                "requires identical settings")
+                "written by a run with different hyperparameters, a "
+                "different archive, or a different data-parallel "
+                "topology (fingerprint mismatch) — resume requires "
+                "identical settings")
         astate = tree["astate"]
         epoch0 = int(tree["epoch"])
         pos0 = int(tree["pos"])
@@ -256,55 +355,73 @@ def fit_streaming(
                 "fingerprint": fingerprint}
         ckpt.save(ckpt_dir, shards_done, tree)
 
+    # ---- event stream: serial or grouped, inline or prefetched ------
+    if dp:
+        def transfer(codes, empty, labels, valid):
+            put = lambda x: device_put_sharded(x, mesh)  # noqa: E731
+            batch = ((put(codes), put(empty)) if has_empty
+                     else put(codes))
+            return (batch, put(labels), put(valid))
+
+        stream = group_batch_stream(
+            root, batch_size, seed=seed, epochs=epochs,
+            n_shards=n_shards, counts=counts, world=world,
+            shuffle=shuffle_shards, start_epoch=epoch0, start_pos=pos0,
+            has_empty=has_empty, packed_width=packed_width(k, b),
+            mask_width=packed_mask_width(k), transfer=transfer,
+            mmap=mmap)
+    else:
+        def transfer(bp, bem, bl):
+            batch = ((jnp.asarray(bp), jnp.asarray(bem)) if has_empty
+                     else jnp.asarray(bp))
+            return (batch, jnp.asarray(bl))
+
+        stream = serial_batch_stream(
+            root, batch_size, seed=seed, epochs=epochs,
+            n_shards=n_shards, shuffle=shuffle_shards,
+            start_epoch=epoch0, start_pos=pos0, has_empty=has_empty,
+            transfer=transfer, mmap=mmap)
+
+    events = ThreadedPrefetcher(stream, prefetch) if prefetch else stream
+
     global_step = int(astate.state.step)
     processed_here = 0
     stopped = False
+    pending_hits = []
     t0 = time.perf_counter()
-    for epoch in range(epoch0, epochs):
-        order = _shard_order(seed, epoch, n_shards, shuffle_shards)
-        for pos in range(pos0 if epoch == epoch0 else 0, n_shards):
-            s = int(order[pos])
-            shard_hits = []
-            # (seed, epoch) + shard id seeds the within-shard
-            # permutation — identical on replay, fresh every epoch
-            for bp, bl, _rid, bem in iter_hashed_batches(
-                    root, batch_size, shard_ids=[s],
-                    perm_seed=(seed, epoch), mmap=mmap):
-                if (bem is None) == has_empty:
-                    raise ValueError(
-                        f"shard {s} of {root!r} "
-                        f"{'lacks' if bem is None else 'carries'} an "
-                        "empty bitmask while shard 0 "
-                        f"{'has one' if has_empty else 'does not'} — "
-                        "archive written with desynced empty masks?")
-                batch = ((jnp.asarray(bp), jnp.asarray(bem))
-                         if has_empty else jnp.asarray(bp))
+    try:
+        for ev in events:
+            if isinstance(ev, StreamBatch):
                 active = np.float32(global_step >= avg_start_step)
-                astate, (_, h) = step_fn(astate, active, batch,
-                                         jnp.asarray(bl))
+                astate, (_, h) = step_fn(astate, active, *ev.args)
                 # device scalars, drained once per shard: no per-step
                 # host sync to break async dispatch overlap
-                shard_hits.append(h)
-                seen += len(bl)
+                pending_hits.append(h)
+                seen += ev.n_rows
                 global_step += 1
-            if shard_hits:
-                hits += int(np.sum(jax.device_get(shard_hits)))
-            shards_done += 1
-            processed_here += 1
-            next_epoch, next_pos = ((epoch, pos + 1)
-                                    if pos + 1 < n_shards
-                                    else (epoch + 1, 0))
+                continue
+            assert isinstance(ev, Boundary)
+            if pending_hits:
+                hits += int(np.sum(jax.device_get(pending_hits)))
+                pending_hits = []
+            prev_done = shards_done
+            shards_done += ev.shards_consumed
+            processed_here += ev.shards_consumed
             at_stop = (stop_after_shards is not None
                        and processed_here >= stop_after_shards)
-            done = next_epoch >= epochs
-            if ckpt_dir and (shards_done % ckpt_every_shards == 0
-                             or at_stop or done):
-                save_boundary(next_epoch, next_pos)
+            done = ev.next_epoch >= epochs
+            crossed = (shards_done // ckpt_every_shards
+                       > prev_done // ckpt_every_shards)
+            if ckpt_dir and (crossed or at_stop or done):
+                save_boundary(ev.next_epoch, ev.next_pos)
             if at_stop and not done:
                 stopped = True
                 break
-        if stopped:
-            break
+    finally:
+        # ThreadedPrefetcher.close() joins the producer; a plain
+        # generator's close() runs its cleanup NOW (dropping the open
+        # mmap'd shard iterators) instead of waiting on GC
+        events.close()
     dt = time.perf_counter() - t0
 
     assert stopped or global_step > 0, "streaming run performed no steps"

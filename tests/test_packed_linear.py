@@ -1,0 +1,138 @@
+"""Packed-input fused logits: the Pallas kernels (interpret mode) and
+the XLA fallback must agree with the widened reference across b, ragged
+``oph_zero`` masks, and non-lane-multiple k.
+
+Exactness contract: the packed kernels are BIT-exact vs the widened
+kernels (identical contraction order, only the input format differs);
+vs the gather reference — a mathematically equal but differently
+associated sum — they are allclose, matching the tolerance the widened
+kernels themselves are validated to in test_kernels.py."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bbit import pack_codes, unpack_codes_jnp
+from repro.kernels import ops, ref
+from repro.kernels.bbit_linear import (
+    bbit_linear_bwd_dw_pallas,
+    bbit_linear_fwd_pallas,
+    bbit_linear_packed_bwd_dw_pallas,
+    bbit_linear_packed_fwd_pallas,
+)
+from repro.models.linear import (
+    BBitLinearConfig, bbit_logits, bbit_logits_packed, init_bbit_linear,
+)
+
+
+def _case(b, k, n=17, c=3, seed=None, empty_frac=0.0):
+    rng = np.random.default_rng(b * 1031 + k if seed is None else seed)
+    v = 1 << b
+    codes = rng.integers(0, v, size=(n, k)).astype(np.uint16)
+    packed = jnp.asarray(pack_codes(codes, b))
+    weights = jnp.asarray(rng.normal(size=(k, v, c)).astype(np.float32))
+    empty = None
+    if empty_frac:
+        # ragged: wildly different empty counts per row, incl. all-empty
+        mask = rng.random((n, k)) < empty_frac
+        mask[0] = True
+        mask[1] = False
+        empty = jnp.asarray(np.packbits(mask, axis=1))
+    dout = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+    return codes, packed, weights, empty, dout
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8])
+@pytest.mark.parametrize("k", [1, 8, 37, 63, 64])
+def test_packed_kernel_bit_exact_vs_widened_kernel(b, k):
+    codes, packed, weights, _, dout = _case(b, k)
+    v = 1 << b
+    want = bbit_linear_fwd_pallas(jnp.asarray(codes.astype(np.int32)),
+                                  weights, interpret=True)
+    got = bbit_linear_packed_fwd_pallas(packed, weights, k=k, bits=b,
+                                        interpret=True)
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+    dwant = bbit_linear_bwd_dw_pallas(jnp.asarray(codes.astype(np.int32)),
+                                      dout, v, interpret=True)
+    dgot = bbit_linear_packed_bwd_dw_pallas(packed, dout, v, k=k, bits=b,
+                                            interpret=True)
+    assert np.array_equal(np.asarray(dwant), np.asarray(dgot))
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8])
+@pytest.mark.parametrize("k", [8, 37, 64])
+@pytest.mark.parametrize("empty_frac", [0.3, 0.9])
+def test_packed_kernel_masked_matches_reference(b, k, empty_frac):
+    _, packed, weights, empty, dout = _case(b, k, empty_frac=empty_frac)
+    v = 1 << b
+    want = ref.bbit_linear_packed_fwd(packed, weights, k, b, empty=empty)
+    got = bbit_linear_packed_fwd_pallas(packed, weights, k=k, bits=b,
+                                        empty=empty, interpret=True)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=1e-5, atol=1e-5)
+    dwant = ref.bbit_linear_packed_bwd_dw(packed, dout, v, k, b,
+                                          empty=empty)
+    dgot = bbit_linear_packed_bwd_dw_pallas(packed, dout, v, k=k, bits=b,
+                                            empty=empty, interpret=True)
+    np.testing.assert_allclose(np.asarray(dwant), np.asarray(dgot),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("masked", [False, True])
+def test_packed_custom_vjp_grads_match_reference(masked):
+    k, b = 16, 4
+    _, packed, weights, empty, _ = _case(b, k,
+                                         empty_frac=0.4 if masked else 0.0)
+
+    def loss_kernel(w):
+        return jnp.sum(ops.bbit_linear_packed(packed, w, k, b,
+                                              empty=empty) ** 2)
+
+    def loss_ref(w):
+        return jnp.sum(ref.bbit_linear_packed_fwd(packed, w, k, b,
+                                                  empty=empty) ** 2)
+
+    g = jax.grad(loss_kernel)(weights)
+    gref = jax.grad(loss_ref)(weights)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_packed_fallback_used_for_non_byte_aligned_b():
+    # b=3 codes straddle bytes — dispatch must fall to the XLA path and
+    # still match the widened gather exactly
+    k, b, v = 16, 3, 8
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, v, size=(9, k)).astype(np.uint16)
+    packed = jnp.asarray(pack_codes(codes, b))
+    weights = jnp.asarray(rng.normal(size=(k, v, 2)).astype(np.float32))
+    got = ops.bbit_linear_packed(packed, weights, k, b)
+    want = ref.bbit_linear_fwd(jnp.asarray(codes.astype(np.int32)),
+                               weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", ["never", "always"])
+@pytest.mark.parametrize("masked", [False, True])
+def test_bbit_logits_packed_matches_widened_logits(use_kernel, masked):
+    """Model-level parity on BOTH dispatch paths (fallback and
+    interpret-mode kernel), with bias + normalize applied."""
+    k, b = 24, 4
+    codes, packed, _, empty, _ = _case(b, k,
+                                       empty_frac=0.5 if masked else 0.0)
+    cfg = BBitLinearConfig(k=k, b=b, use_kernel=use_kernel,
+                           normalize=True)
+    params = init_bbit_linear(cfg, jax.random.key(3))
+    from repro.core.bbit import unpack_mask_jnp
+    wide = bbit_logits(
+        params, unpack_codes_jnp(packed, k, b).astype(jnp.int32), cfg,
+        empty=None if empty is None else unpack_mask_jnp(empty, k))
+    got = bbit_logits_packed(params, packed, cfg, empty_packed=empty)
+    np.testing.assert_allclose(np.asarray(wide), np.asarray(got),
+                               rtol=1e-5, atol=1e-5)
+    if use_kernel == "never" and not masked:
+        # the streaming trainer's CPU path: bit-identical to the old
+        # explicit unpack + gather two-step
+        assert np.array_equal(np.asarray(wide), np.asarray(got))

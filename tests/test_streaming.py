@@ -1,6 +1,7 @@
 """Streaming trainer over packed shards: device unpack parity, packed
 batch iteration, one-pass accuracy vs the in-memory SGD path, Polyak
-averaging, and kill/resume bitwise determinism."""
+averaging, kill/resume bitwise determinism, and the async-prefetch
+determinism contract (prefetch depth never changes results)."""
 import numpy as np
 import pytest
 
@@ -12,8 +13,9 @@ from repro.core.bbit import (
     unpack_codes_jnp, unpack_mask_jnp,
 )
 from repro.data import (
-    SynthRcv1Config, generate_arrays, iter_hashed_batches, load_hashed,
-    preprocess_and_save, preprocess_rows, shard_row_counts,
+    SynthRcv1Config, ThreadedPrefetcher, generate_arrays,
+    iter_hashed_batches, load_hashed, preprocess_and_save,
+    preprocess_rows, shard_row_counts,
 )
 from repro.models.linear import BBitLinearConfig, predict_classes
 from repro.train import fit_streaming, train_bbit_sgd
@@ -202,6 +204,89 @@ def test_fit_streaming_rejects_mismatched_config_and_empty_archive(
                       loss="logistic")
     with pytest.raises(ValueError, match="stop_after_shards"):
         fit_streaming(d, BBitLinearConfig(k=64, b=8), stop_after_shards=2)
+
+
+# ----------------------------------------------------- async prefetch -----
+from repro.train.metrics import trees_bitwise_equal as _leaves_equal  # noqa: E402
+
+
+def test_fit_streaming_prefetch_is_bit_identical_to_inline(archive):
+    """The determinism contract: the producer→queue→device pipeline
+    changes when host work happens, never what is produced."""
+    d, _, _ = archive
+    lcfg = BBitLinearConfig(k=64, b=8)
+    kw = dict(epochs=2, batch_size=64, lr=5e-3, seed=7)
+    inline = fit_streaming(d, lcfg, prefetch=0, **kw)
+    for depth in (1, 3):
+        pf = fit_streaming(d, lcfg, prefetch=depth, **kw)
+        assert _leaves_equal(inline.params, pf.params), depth
+        assert _leaves_equal(inline.avg_params, pf.avg_params), depth
+        assert pf.n_steps == inline.n_steps
+        assert pf.examples_seen == inline.examples_seen
+        assert abs(pf.progressive_acc - inline.progressive_acc) < 1e-12
+
+
+def test_fit_streaming_prefetch_checkpoints_interchange(archive, tmp_path):
+    """A run killed under one prefetch depth resumes under another —
+    depth is excluded from the run fingerprint by design."""
+    d, _, _ = archive
+    lcfg = BBitLinearConfig(k=64, b=8)
+    kw = dict(epochs=2, batch_size=64, lr=5e-3, seed=5)
+    straight = fit_streaming(d, lcfg, prefetch=0, **kw)
+    ck = str(tmp_path / "ck")
+    part = fit_streaming(d, lcfg, ckpt_dir=ck, stop_after_shards=3,
+                         prefetch=0, **kw)
+    assert not part.completed
+    resumed = fit_streaming(d, lcfg, ckpt_dir=ck, prefetch=3, **kw)
+    assert resumed.completed
+    assert _leaves_equal(straight.params, resumed.params)
+    assert _leaves_equal(straight.avg_params, resumed.avg_params)
+
+
+def test_threaded_prefetcher_propagates_errors_and_closes():
+    def boom():
+        yield 1
+        yield 2
+        raise RuntimeError("producer exploded")
+
+    pf = ThreadedPrefetcher(boom(), depth=2)
+    assert next(pf) == 1 and next(pf) == 2
+    with pytest.raises(RuntimeError, match="producer exploded"):
+        next(pf)
+    pf.close()                       # idempotent after error
+
+    # early close unblocks a producer stuck on a full queue
+    def endless():
+        i = 0
+        while True:
+            yield i
+            i += 1
+
+    pf = ThreadedPrefetcher(endless(), depth=1)
+    assert next(pf) == 0
+    pf.close()
+    assert not pf._thread.is_alive()
+    # next() after close must terminate, not block on the drained queue
+    with pytest.raises(StopIteration):
+        next(pf)
+
+    with pytest.raises(ValueError, match="depth"):
+        ThreadedPrefetcher(iter([]), depth=0)
+
+
+# ------------------------------------------------- oversized batches ------
+def test_iter_hashed_batches_rejects_batch_larger_than_shard(archive):
+    """Regression: batch_size > shard rows used to silently yield one
+    short batch per shard instead of the requested minibatch size."""
+    d, _, _ = archive                          # 5 shards × 80 rows
+    with pytest.raises(ValueError, match="exceeds shard"):
+        next(iter(iter_hashed_batches(d, 81)))
+    # the trainer surfaces it up front, before any step runs
+    with pytest.raises(ValueError, match="lower batch_size"):
+        fit_streaming(d, BBitLinearConfig(k=64, b=8), batch_size=81)
+    # boundary: batch_size == smallest shard is fine
+    batches = list(iter_hashed_batches(d, 80))
+    assert len(batches) == 5 and all(len(b[1]) == 80 for b in batches)
 
 
 # ------------------------------------------------------ averaging hook ----
