@@ -11,11 +11,12 @@ any bit mismatch fails the run.  Smoke mode never writes trajectory
 JSON files.
 
 OPH suites write ``BENCH_oph.json``, the preprocess suite writes
-``BENCH_preprocess.json`` and the streaming-trainer suite writes
-``BENCH_streaming.json`` (override paths with ``BENCH_OPH_JSON`` /
-``BENCH_PREPROCESS_JSON`` / ``BENCH_STREAMING_JSON``) so the
-preprocessing- and training-throughput trajectories are
-machine-readable across commits.
+``BENCH_preprocess.json``, the streaming-trainer suite writes
+``BENCH_streaming.json`` and the serving suite writes
+``BENCH_serving.json`` (override paths with ``BENCH_OPH_JSON`` /
+``BENCH_PREPROCESS_JSON`` / ``BENCH_STREAMING_JSON`` /
+``BENCH_SERVING_JSON``) so the preprocessing-, training- and
+serving-throughput trajectories are machine-readable across commits.
 """
 import json
 import os
@@ -26,8 +27,9 @@ import traceback
 OPH_SUITES = ("kernels_oph", "oph_curve")
 PREPROCESS_SUITES = ("preprocess",)
 STREAMING_SUITES = ("streaming",)
+SERVING_SUITES = ("serving",)
 
-SMOKE_DEFAULT = ["kernels_fused", "preprocess", "streaming"]
+SMOKE_DEFAULT = ["kernels_fused", "preprocess", "streaming", "serving"]
 
 
 def _write_json(path_env: str, default: str, bench: str, records) -> None:
@@ -52,7 +54,8 @@ def main() -> None:
         os.environ["BENCH_SMOKE"] = "1"   # before benchmarks.* imports
 
     from benchmarks import (kernel_bench, paper_figures, preprocess_bench,
-                            roofline_report, streaming_bench)
+                            roofline_report, serving_bench,
+                            streaming_bench)
 
     suites = {
         "fig1": paper_figures.fig1_fig2_svm,
@@ -72,6 +75,7 @@ def main() -> None:
         "roofline": roofline_report.roofline_rows,
         "preprocess": preprocess_bench.preprocess_bench,
         "streaming": streaming_bench.streaming_bench,
+        "serving": serving_bench.serving_bench,
     }
     if argv:
         selected = argv
@@ -85,6 +89,7 @@ def main() -> None:
         "oph": [OPH_SUITES, [], False],
         "preprocess": [PREPROCESS_SUITES, [], False],
         "streaming": [STREAMING_SUITES, [], False],
+        "serving": [SERVING_SUITES, [], False],
     }
     for name in selected:
         try:
@@ -110,6 +115,10 @@ def main() -> None:
                 and not trajectories["streaming"][2]):
             _write_json("BENCH_STREAMING_JSON", "BENCH_streaming.json",
                         "streaming", trajectories["streaming"][1])
+        if (trajectories["serving"][1]
+                and not trajectories["serving"][2]):
+            _write_json("BENCH_SERVING_JSON", "BENCH_serving.json",
+                        "serving", trajectories["serving"][1])
     for key, (group_suites, records, failed) in trajectories.items():
         if failed:
             # never clobber a complete trajectory file with partials

@@ -1,0 +1,354 @@
+"""Serving-engine benchmarks: fused hot path, micro-batching, replicas.
+
+The paper's inference-cost claim (tiny b-bit codes → tiny per-request
+compute) measured as a service.  Closed- and open-loop load generators
+drive ``HashedClassifierEngine`` and record p50/p95/p99 request latency
+plus steady-state rows/s for:
+
+  * ``legacy_closed``   — the PR-1-era path reconstructed: a single-
+    queue ``DynamicBatcher`` (one lane: every batch pads to its widest
+    document) feeding the unfused ``encode_jnp`` → ``bbit_logits``
+    scorer that materializes the (B, k) int32 code matrix;
+  * ``fused_closed``    — the rebuilt hot path: per-nnz-bucket lanes,
+    precompiled shapes, dispatch/resolve overlap, and ONE jitted
+    ``encode_packed_jit`` → ``bbit_scores_packed`` device pass;
+  * ``fused_nobatch``   — the same fused scorer called per request
+    (batch size 1), isolating what micro-batching itself buys;
+  * ``fused_open``      — open-loop (submit as fast as possible),
+    the saturation throughput + tail-latency view;
+  * ``replicas1/2``     — 1 vs 2 engine replicas over fake CPU
+    devices, open-loop (throughput scaling without collectives).
+
+Measurement structure (the only one that survives this shared box's
+noise, same as streaming_bench): the legacy/fused/nobatch/open variants
+alternate back-to-back INSIDE one subprocess round and the round with
+the smallest combined wall time is reported, so both sides of every
+ratio see the same load window.  The replica pair needs two processes
+(device count is process-global) and uses paired rounds instead.
+Every worker asserts fused scores equal the reference scorer's
+BITWISE at identical batch shapes, and that the steady state hit only
+precompiled shapes (``compile_misses == 0``) — a recompile fails the
+bench.
+
+Honest caveats baked into the records: this is a 2-core shared CPU box
+— closed-loop clients, the batcher threads and the "device" all
+compete for the same cores (GIL included), and 2 fake devices share
+the 2 cores, so replica "scaling" mostly measures contention (≈1× is
+expected here; the feature targets real multi-accelerator hosts).
+
+``--smoke`` (CI) asserts the parity contracts on tiny shapes: fused ≡
+reference bitwise across schemes × b, batched ≡ direct, empty-doc
+semantics, and close() leaves no future unresolved.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, SMOKE, corpus, emit
+
+K = 64
+B = 8
+MAX_BATCH = 32
+MAX_WAIT_MS = 2.0
+CLIENTS = 8
+N_DOCS = 24 if SMOKE else (300 if QUICK else 600)
+N_REQ = 400 if QUICK else 1200
+ROUNDS = 3
+NNZ_BUCKETS = (512, 2048, 8192)
+ROW_BUCKETS = (1, 8, MAX_BATCH)
+
+
+def _pcts(lat_s) -> dict:
+    ms = np.asarray(lat_s) * 1e3
+    return {"p50_ms": float(np.percentile(ms, 50)),
+            "p95_ms": float(np.percentile(ms, 95)),
+            "p99_ms": float(np.percentile(ms, 99))}
+
+
+def _closed_loop(submit_wait, docs, n_req, clients) -> dict:
+    """``clients`` threads each submit-and-wait over their share of the
+    request stream; per-request latency is submit→result."""
+    lats = [[] for _ in range(clients)]
+    errs = []
+
+    def client(c):
+        try:
+            for i in range(c, n_req, clients):
+                t0 = time.perf_counter()
+                submit_wait(docs[i % len(docs)])
+                lats[c].append(time.perf_counter() - t0)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    flat = [x for l in lats for x in l]
+    return {"wall_s": wall, "rows_per_s": n_req / wall, **_pcts(flat)}
+
+
+def _open_loop(engine, docs, n_req) -> dict:
+    """Submit everything as fast as the queue accepts, resolve off the
+    completion callbacks — saturation throughput + tail latency."""
+    done = [0.0] * n_req
+    futs = []
+    t0 = time.perf_counter()
+    for i in range(n_req):
+        t_sub = time.perf_counter()
+
+        def cb(f, i=i, t_sub=t_sub):
+            done[i] = time.perf_counter() - t_sub
+
+        fut = engine.submit(docs[i % len(docs)])
+        fut.add_done_callback(cb)
+        futs.append(fut)
+    for f in futs:
+        f.result(timeout=600)
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "rows_per_s": n_req / wall, **_pcts(done)}
+
+
+def _make_docs(n_docs):
+    rows, _ = corpus(n_docs)
+    return rows
+
+
+def _make_engines(docs, *, replicas=1, legacy=True):
+    import jax
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    from repro.serving import DynamicBatcher, HashedClassifierEngine
+
+    lcfg = BBitLinearConfig(k=K, b=B)
+    params = init_bbit_linear(lcfg, jax.random.key(0))
+    kw = dict(seed=1, max_batch=MAX_BATCH, max_wait_ms=MAX_WAIT_MS,
+              nnz_buckets=NNZ_BUCKETS, row_buckets=ROW_BUCKETS,
+              replicas=replicas)
+    t0 = time.perf_counter()
+    fused = HashedClassifierEngine(params, lcfg, fused=True, **kw)
+    cold_fused = time.perf_counter() - t0
+    out = {"fused": fused, "cold_fused_s": cold_fused}
+    if legacy:
+        t0 = time.perf_counter()
+        ref = HashedClassifierEngine(params, lcfg, fused=False, **kw)
+        out["ref"] = ref
+        out["cold_legacy_s"] = time.perf_counter() - t0
+        # the PR-1-era serving front half: ONE queue, every batch padded
+        # to its widest member, scored through the unfused path
+        out["legacy_batcher"] = DynamicBatcher(
+            lambda batch: list(ref.score_docs(batch)),
+            max_batch=MAX_BATCH, max_wait_ms=MAX_WAIT_MS)
+    # bitwise parity canary on every bench run (identical batch shape)
+    sample = docs[:16]
+    a = fused.score_docs(sample)
+    if legacy:
+        r = out["ref"].score_docs(sample)
+        assert np.array_equal(a, r), "fused scores drifted from reference"
+    return out
+
+
+# ------------------------------------------------------ worker side -------
+def _worker(cfg: dict) -> None:
+    docs = _make_docs(cfg["n_docs"])
+    n_req = cfg["n_req"]
+
+    if cfg["mode"] == "replicas":
+        eng = _make_engines(docs, replicas=cfg["replicas"],
+                            legacy=False)
+        fused = eng["fused"]
+        _open_loop(fused, docs, n_req)            # warmup
+        best = None
+        for _ in range(ROUNDS):
+            r = _open_loop(fused, docs, n_req)
+            if best is None or r["wall_s"] < best["wall_s"]:
+                best = r
+        assert fused.compile_misses == 0, "steady state recompiled"
+        assert min(fused.device_batches) >= 1
+        fused.close()
+        print(json.dumps({"open": best, "devices": len(fused.devices),
+                          "cold_s": eng["cold_fused_s"]}))
+        return
+
+    eng = _make_engines(docs)
+    fused, legacy = eng["fused"], eng["legacy_batcher"]
+
+    def run_legacy():
+        return _closed_loop(
+            lambda d: legacy.submit(d).result(timeout=600),
+            docs, n_req, cfg["clients"])
+
+    def run_fused():
+        return _closed_loop(
+            lambda d: fused.submit(d).result(timeout=600),
+            docs, n_req, cfg["clients"])
+
+    def run_nobatch():
+        return _closed_loop(lambda d: fused.score_docs([d]),
+                            docs, n_req, cfg["clients"])
+
+    # warmup, then alternate all variants inside each round so every
+    # ratio compares adjacent load windows
+    run_legacy(), run_fused(), run_nobatch(), _open_loop(fused, docs,
+                                                         n_req)
+    best = None
+    for _ in range(ROUNDS):
+        r = {"legacy": run_legacy(), "fused": run_fused(),
+             "nobatch": run_nobatch(),
+             "open": _open_loop(fused, docs, n_req)}
+        combined = r["legacy"]["wall_s"] + r["fused"]["wall_s"]
+        if best is None or combined < best[0]:
+            best = (combined, r)
+    out = best[1]
+    assert fused.compile_misses == 0, "steady state recompiled"
+    fused.close()
+    legacy.close()
+    eng["ref"].close()
+    out.update(cold_fused_s=eng["cold_fused_s"],
+               cold_legacy_s=eng["cold_legacy_s"],
+               fused_batches=fused.batcher.batches_run)
+    print(json.dumps(out))
+
+
+def _run_worker(mode: str, *, devices: int, replicas: int = 1) -> dict:
+    cfg = dict(mode=mode, n_docs=N_DOCS, n_req=N_REQ, clients=CLIENTS,
+               replicas=replicas)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "src"), here,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_bench",
+         "--worker", json.dumps(cfg)],
+        capture_output=True, text=True, timeout=1800, env=env, cwd=here)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"serving bench worker failed\nSTDOUT:\n{proc.stdout[-2000:]}\n"
+            f"STDERR:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _paired(run_a, run_b, rounds=2):
+    """Smallest-combined-wall round of a cross-process pair (see
+    streaming_bench: independent best-ofs routinely pair one lucky and
+    one contended window)."""
+    best = None
+    for _ in range(rounds):
+        a, b = run_a(), run_b()
+        combined = a["open"]["wall_s"] + b["open"]["wall_s"]
+        if best is None or combined < best[0]:
+            best = (combined, a, b)
+    return best[1], best[2]
+
+
+# ------------------------------------------------------- smoke tier -------
+def _smoke() -> list:
+    import jax
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    from repro.serving import HashedClassifierEngine
+
+    rng = np.random.default_rng(0)
+    docs = [np.unique(rng.integers(0, 1 << 24,
+                                   size=int(rng.integers(1, 80))))
+            for _ in range(12)]
+    checked = 0
+    for scheme in ("minwise", "oph", "oph_zero"):
+        for b in (2, 8):
+            cfg = BBitLinearConfig(k=16, b=b)
+            params = init_bbit_linear(cfg, jax.random.key(b))
+            kw = dict(seed=3, scheme=scheme, precompile=False,
+                      nnz_buckets=(128,), row_buckets=(16,))
+            fused = HashedClassifierEngine(params, cfg, fused=True, **kw)
+            ref = HashedClassifierEngine(params, cfg, fused=False, **kw)
+            a, r = fused.score_docs(docs), ref.score_docs(docs)
+            assert np.array_equal(a, r), \
+                f"fused != reference bitwise ({scheme}, b={b})"
+            fused.close(), ref.close()
+            checked += 1
+
+    # batched-vs-direct + steady-state no-recompile + clean close
+    cfg = BBitLinearConfig(k=16, b=8)
+    params = init_bbit_linear(cfg, jax.random.key(0))
+    eng = HashedClassifierEngine(params, cfg, seed=3, max_batch=4,
+                                 max_wait_ms=2, nnz_buckets=(128,),
+                                 row_buckets=(1, 2, 4))
+    oracle = [float(eng.score_docs([d])[0]) for d in docs]
+    futs = [eng.submit(d) for d in docs]
+    got = [float(f.result(timeout=120)) for f in futs]
+    np.testing.assert_allclose(got, oracle, atol=1e-5)
+    assert eng.compile_misses == 0, "smoke traffic recompiled"
+    tail = eng.submit(docs[0])
+    eng.close()
+    assert tail.done(), "close left a future unresolved"
+    return emit([
+        ("serving/smoke_fused_parity_k16", 0.0,
+         f"pairs_bitwise_identical={checked};batched_matches_direct=1;"
+         "close_flushes=1;compile_misses=0"),
+    ])
+
+
+# -------------------------------------------------------- full tier -------
+def serving_bench() -> list:
+    if SMOKE:
+        return _smoke()
+    ab = _run_worker("serve", devices=1)
+    rep1, rep2 = _paired(
+        lambda: _run_worker("replicas", devices=1, replicas=1),
+        lambda: _run_worker("replicas", devices=2, replicas=2))
+    leg, fus, nob, opn = (ab["legacy"], ab["fused"], ab["nobatch"],
+                          ab["open"])
+    fused_vs_legacy = fus["rows_per_s"] / max(leg["rows_per_s"], 1e-9)
+    batch_vs_nobatch = fus["rows_per_s"] / max(nob["rows_per_s"], 1e-9)
+    scaling = (rep2["open"]["rows_per_s"]
+               / max(rep1["open"]["rows_per_s"], 1e-9))
+
+    def lat(v):
+        return (f"p50_ms={v['p50_ms']:.2f};p95_ms={v['p95_ms']:.2f};"
+                f"p99_ms={v['p99_ms']:.2f};rows_per_s={v['rows_per_s']:.0f}")
+
+    return emit([
+        (f"serving/legacy_closed_k{K}_b{B}", leg["wall_s"] * 1e6,
+         f"{lat(leg)};clients={CLIENTS};"
+         f"cold_s={ab['cold_legacy_s']:.2f};"
+         "note=single_lane_widest_doc_padding_unfused_scorer"),
+        (f"serving/fused_closed_k{K}_b{B}", fus["wall_s"] * 1e6,
+         f"{lat(fus)};fused_vs_legacy={fused_vs_legacy:.2f}x;"
+         f"cold_s={ab['cold_fused_s']:.2f};"
+         f"batches={ab['fused_batches']};compile_misses=0;"
+         "note=shared_2core_box_clients_and_device_contend"),
+        (f"serving/fused_nobatch_closed_k{K}_b{B}",
+         nob["wall_s"] * 1e6,
+         f"{lat(nob)};batch_vs_nobatch={batch_vs_nobatch:.2f}x"),
+        (f"serving/fused_open_k{K}_b{B}", opn["wall_s"] * 1e6,
+         f"{lat(opn)};note=open_loop_saturation"),
+        (f"serving/replicas1_open_k{K}_b{B}",
+         rep1["open"]["wall_s"] * 1e6,
+         f"{lat(rep1['open'])};devices={rep1['devices']}"),
+        (f"serving/replicas2_open_k{K}_b{B}",
+         rep2["open"]["wall_s"] * 1e6,
+         f"{lat(rep2['open'])};devices={rep2['devices']};"
+         f"scaling_1to2dev={scaling:.2f}x;"
+         "note=2_fake_devices_share_2_cores_scaling_measures_contention"),
+    ])
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--worker":
+        _worker(json.loads(sys.argv[2]))
+    else:
+        serving_bench()

@@ -55,7 +55,9 @@ def main() -> None:
 
     print("serving the OPH model (scheme-aware engine)…")
     eng = HashedClassifierEngine(results["oph"].params, lcfg, seed=1,
-                                 scheme="oph")
+                                 scheme="oph",
+                                 nnz_buckets=(2048, 8192),
+                                 row_buckets=(1, 32))
     futs = [eng.submit(r) for r in rows[n_tr:n_tr + 32]]
     scores = np.array([f.result(timeout=60) for f in futs])
     acc = float(np.mean((scores > 0).astype(int) == labels[n_tr:n_tr + 32]))

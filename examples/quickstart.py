@@ -41,8 +41,12 @@ def main() -> None:
     print(f"   test accuracy = {res.test_acc:.3f} "
           f"({res.n_iter} TRON iterations, {res.train_seconds:.1f}s)")
 
-    print("4) serving the trained model (hash → score, batched)…")
-    eng = HashedClassifierEngine(res.params, lcfg, seed=1)
+    print("4) serving the trained model (fused hash → score, batched)…")
+    # buckets sized to this demo corpus so the startup precompile
+    # stays snappy (defaults target production-scale nnz ranges)
+    eng = HashedClassifierEngine(res.params, lcfg, seed=1,
+                                 nnz_buckets=(2048, 8192),
+                                 row_buckets=(1, 32))
     futs = [eng.submit(r) for r in rows[n_tr:n_tr + 32]]
     scores = np.array([f.result(timeout=60) for f in futs])
     pred = (scores > 0).astype(int)

@@ -50,6 +50,14 @@ class OPHPaperConfig:
     # shard groups over N devices with psum_mean gradient all-reduce)
     stream_prefetch: int = 2
     stream_data_parallel: Optional[int] = None
+    # serving hot path (PR 5): fused encode→score engine — per-bucket
+    # micro-batching lanes (nnz pad widths), replica count over a 1-D
+    # mesh, and the batcher's dispatch/resolve overlap depth
+    serve_max_batch: int = 64
+    serve_max_wait_ms: float = 2.0
+    serve_replicas: int = 1
+    serve_nnz_buckets: tuple = (128, 512, 2048, 8192, 32768)
+    serve_pipeline_depth: int = 2
 
     def linear_config(self) -> BBitLinearConfig:
         return BBitLinearConfig(k=self.k, b=self.b,
@@ -65,6 +73,18 @@ class OPHPaperConfig:
                   ckpt_every_shards=self.ckpt_every_shards,
                   prefetch=self.stream_prefetch,
                   data_parallel=self.stream_data_parallel)
+        kw.update(overrides)
+        return kw
+
+    def serve_kwargs(self, **overrides) -> dict:
+        """Keyword arguments for ``serving.HashedClassifierEngine`` at
+        this config's scale; examples/benches override buckets and
+        batch size for scaled-down corpora."""
+        kw = dict(scheme=self.scheme, max_batch=self.serve_max_batch,
+                  max_wait_ms=self.serve_max_wait_ms,
+                  replicas=self.serve_replicas,
+                  nnz_buckets=self.serve_nnz_buckets,
+                  pipeline_depth=self.serve_pipeline_depth)
         kw.update(overrides)
         return kw
 

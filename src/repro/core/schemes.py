@@ -23,6 +23,10 @@ preprocessor can keep several chunks in flight (double buffering);
 ``encode_packed*`` is the device-resident hot path — hash, b-bit mask
 and byte packing fused on the accelerator (Pallas kernel on TPU, XLA
 elsewhere), so only ``n·ceil(k·b/8)`` bytes cross to the host.
+``encode_packed_jit`` is the same fused recipe as a traceable function
+(no host-side tile loop): the serving engine composes it with
+``bbit_logits_packed`` into ONE jitted raw-docs→scores dispatch per
+shape bucket, byte-identical to the offline writers.
 """
 from __future__ import annotations
 
@@ -187,6 +191,22 @@ class HashingScheme:
         """
         raise NotImplementedError
 
+    def encode_packed_jit(
+        self, indices: jax.Array, nnz: jax.Array, b: int,
+    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """Traceable fused encode→pack — the serving hot path's front
+        half → (packed uint8 (n, ceil(k·b/8)), packed empty | None).
+
+        Unlike ``encode_packed_device`` (a host-side driver that streams
+        fixed-width tiles through its own jitted steps) this composes
+        INSIDE a caller's jit, so an engine can fuse raw padded docs →
+        packed codes → ``bbit_logits_packed`` scores into one device
+        dispatch.  Dispatch mirrors ``ops.fused_encode_on_device``: the
+        Pallas fused kernel on TPU, pure-XLA hash+pack elsewhere.
+        Output bytes are bit-identical to ``encode_packed_device``'s.
+        """
+        raise NotImplementedError
+
     def encode_padded(
         self, indices: np.ndarray, nnz: np.ndarray, b: int,
         *, use_kernel: bool = True,
@@ -242,16 +262,24 @@ class MinwiseScheme(HashingScheme):
         return codes, None
 
     def encode_packed_device(self, indices, nnz, b, *, use_kernel=True):
-        if use_kernel and jax.default_backend() == "tpu":
-            from repro.kernels import ops
-            if ops.fused_pack_supported(b):
-                return ops.minhash_packed(jnp.asarray(indices),
-                                          jnp.asarray(nnz),
-                                          self._a, self._b, b), None
+        from repro.kernels import ops
+        if use_kernel and ops.fused_encode_on_device(b):
+            return ops.minhash_packed(jnp.asarray(indices),
+                                      jnp.asarray(nnz),
+                                      self._a, self._b, b), None
         z = _stream_tiles(
             indices, nnz, self.k,
             lambda v, t, nz, c0: _minwise_tile_step(v, t, nz, c0,
                                                     self._a, self._b))
+        return _minwise_finish_packed(z, b), None
+
+    def encode_packed_jit(self, indices, nnz, b):
+        from repro.kernels import ops
+        if ops.fused_encode_on_device(b):
+            return ops.minhash_packed(indices, nnz,
+                                      self._a, self._b, b), None
+        z = minhash_jnp(indices, _prefix_mask(indices, nnz),
+                        self._a, self._b)
         return _minwise_finish_packed(z, b), None
 
 
@@ -297,20 +325,33 @@ class OPHScheme(HashingScheme):
         return self.encode_jnp(indices, _prefix_mask(indices, nnz), b)
 
     def encode_packed_device(self, indices, nnz, b, *, use_kernel=True):
+        from repro.kernels import ops
         if not self.densify and b > 15:
             raise ValueError("oph_zero reserves 0xFFFF: b must be <= 15")
-        if use_kernel and jax.default_backend() == "tpu":
-            from repro.kernels import ops
-            if ops.fused_pack_supported(b):
-                packed, empty = ops.oph_packed(
-                    jnp.asarray(indices), jnp.asarray(nnz),
-                    self._a, self._b, self.k, b,
-                    densify=self.densify)
-                return packed, (None if self.densify else empty)
+        if use_kernel and ops.fused_encode_on_device(b):
+            packed, empty = ops.oph_packed(
+                jnp.asarray(indices), jnp.asarray(nnz),
+                self._a, self._b, self.k, b,
+                densify=self.densify)
+            return packed, (None if self.densify else empty)
         vals = _stream_tiles(
             indices, nnz, self.k,
             lambda v, t, nz, c0: _oph_tile_step(v, t, nz, c0, self._a,
                                                 self._b, self.k))
+        packed, empty = _oph_finish_packed(vals, b, self.densify)
+        return packed, (None if self.densify else empty)
+
+    def encode_packed_jit(self, indices, nnz, b):
+        from repro.kernels import ops
+        if not self.densify and b > 15:
+            raise ValueError("oph_zero reserves 0xFFFF: b must be <= 15")
+        if ops.fused_encode_on_device(b):
+            packed, empty = ops.oph_packed(indices, nnz, self._a,
+                                           self._b, self.k, b,
+                                           densify=self.densify)
+            return packed, (None if self.densify else empty)
+        vals, _ = oph_bin_minima_jnp(
+            indices, _prefix_mask(indices, nnz), self._a, self._b, self.k)
         packed, empty = _oph_finish_packed(vals, b, self.densify)
         return packed, (None if self.densify else empty)
 

@@ -82,6 +82,16 @@ def fused_pack_supported(bits: int) -> bool:
     return bits in PACK_BITS
 
 
+def fused_encode_on_device(bits: int) -> bool:
+    """THE dispatch predicate for the fused encode kernels: TPU backend
+    AND byte-aligned b.  ``schemes.encode_packed_device`` (offline
+    preprocessing) and ``schemes.encode_packed_jit`` (the serving
+    engine's jitted encode→score pass) both branch on it, so the
+    serving hot path can never diverge from the preprocessing dispatch
+    policy (interpret-mode Pallas on CPU would crawl; XLA covers it)."""
+    return jax.default_backend() == "tpu" and fused_pack_supported(bits)
+
+
 def minhash_packed(indices, nnz, a, b, bits: int,
                    *, interpret: Optional[bool] = None):
     """Fused min-hash + b-bit + pack → uint8 (n, ceil(k·bits/8)).

@@ -35,25 +35,37 @@ def make_test_mesh(data: int = 4, model: int = 2) -> Mesh:
     return _make_mesh((data, model), ("data", "model"))
 
 
-def make_data_mesh(n_devices=None) -> Mesh:
-    """1-D ``("data",)`` mesh over the first ``n_devices`` visible
-    devices (all of them by default) — the data-parallel streaming
-    topology (``train.data_parallel``): batches shard over the axis,
-    parameters replicate, gradients all-reduce with ``psum_mean``.
-
-    Unlike ``jax.make_mesh`` this accepts a device count below the
-    total, so a 2-way run works on an 8-fake-device test process.
-    """
+def _make_1d_mesh(axis: str, n_devices=None) -> Mesh:
+    """1-D mesh over the first ``n_devices`` visible devices (all by
+    default).  Unlike ``jax.make_mesh`` this accepts a device count
+    below the total, so a 2-way run works on an 8-fake-device test
+    process."""
     import numpy as np
 
     avail = jax.devices()
     n = len(avail) if n_devices is None else int(n_devices)
     if not 1 <= n <= len(avail):
         raise ValueError(
-            f"data mesh needs 1 <= n_devices <= {len(avail)} visible "
+            f"{axis} mesh needs 1 <= n_devices <= {len(avail)} visible "
             f"devices, got {n} (set XLA_FLAGS="
             "--xla_force_host_platform_device_count=N for fake devices)")
     devs = np.asarray(avail[:n])
     if AxisType is not None:
-        return Mesh(devs, ("data",), axis_types=(AxisType.Auto,))
-    return Mesh(devs, ("data",))
+        return Mesh(devs, (axis,), axis_types=(AxisType.Auto,))
+    return Mesh(devs, (axis,))
+
+
+def make_data_mesh(n_devices=None) -> Mesh:
+    """1-D ``("data",)`` mesh — the data-parallel streaming topology
+    (``train.data_parallel``): batches shard over the axis, parameters
+    replicate, gradients all-reduce with ``psum_mean``."""
+    return _make_1d_mesh("data", n_devices)
+
+
+def make_replica_mesh(n_replicas=None) -> Mesh:
+    """1-D ``("replica",)`` mesh — the serving replica topology
+    (``serving.engine.HashedClassifierEngine(replicas=N)``): the model
+    is device_put ONCE per replica and bucket lanes round-robin their
+    micro-batches across the axis; no collectives, throughput scales
+    with independent devices."""
+    return _make_1d_mesh("replica", n_replicas)

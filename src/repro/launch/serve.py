@@ -36,8 +36,10 @@ def serve_classifier(args) -> None:
                                loss="logistic", C=1.0, max_iter=25)
     print(f"model ready: test acc {res.test_acc:.3f}")
     eng = HashedClassifierEngine(res.params, lcfg, seed=1,
-                                 max_batch=args.max_batch)
-    eng.submit(rows[0]).result(timeout=300)   # warmup compile
+                                 max_batch=args.max_batch,
+                                 nnz_buckets=(2048, 8192),
+                                 row_buckets=(1, args.max_batch))
+    eng.submit(rows[0]).result(timeout=300)   # first-request sanity
     t0 = time.perf_counter()
     futs = [eng.submit(rows[n_tr + i % (args.n_docs - n_tr)])
             for i in range(args.requests)]

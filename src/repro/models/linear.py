@@ -108,6 +108,24 @@ def bbit_logits_packed(params, packed: jax.Array, cfg: BBitLinearConfig,
     return bbit_logits(params, codes, cfg, empty=empty)
 
 
+def bbit_scores(params, codes: jax.Array, cfg: BBitLinearConfig,
+                empty: Optional[jax.Array] = None) -> jax.Array:
+    """Serving-shaped scores: binary → (n,) margin, multiclass →
+    (n, C) logits — the value a classifier service returns per row."""
+    logits = bbit_logits(params, codes, cfg, empty=empty)
+    return logits[:, 0] if cfg.n_classes == 2 else logits
+
+
+def bbit_scores_packed(params, packed: jax.Array, cfg: BBitLinearConfig,
+                       empty_packed: Optional[jax.Array] = None
+                       ) -> jax.Array:
+    """``bbit_scores`` straight off packed uint8 rows (see
+    ``bbit_logits_packed``) — the fused serving hot path's back half."""
+    logits = bbit_logits_packed(params, packed, cfg,
+                                empty_packed=empty_packed)
+    return logits[:, 0] if cfg.n_classes == 2 else logits
+
+
 def predict_classes(params, codes, cfg: BBitLinearConfig) -> jax.Array:
     logits = bbit_logits(params, codes, cfg)
     if cfg.n_classes == 2:

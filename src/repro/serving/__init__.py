@@ -1,5 +1,7 @@
-"""Serving: dynamic batching + hashed-classifier / LM decode engines."""
-from repro.serving.batcher import DynamicBatcher
+"""Serving: bucketed dynamic batching + fused hashed-classifier / LM
+decode engines."""
+from repro.serving.batcher import BucketBatcher, DynamicBatcher
 from repro.serving.engine import HashedClassifierEngine, greedy_generate
 
-__all__ = ["DynamicBatcher", "HashedClassifierEngine", "greedy_generate"]
+__all__ = ["BucketBatcher", "DynamicBatcher", "HashedClassifierEngine",
+           "greedy_generate"]

@@ -1,20 +1,55 @@
 """Serving engines.
 
-``HashedClassifierEngine`` — the paper's inference path as a service:
-raw sparse documents → hashing scheme (k-way min-hash, or OPH at 1/k
-the hash cost — any scheme from ``repro.core.schemes``) → b-bit codes
-→ linear scores.  Batched via DynamicBatcher; hashing and scoring
-jit-compiled once per padded shape bucket (shape-bucketed padding
-avoids recompiles).  The engine's ``scheme``/``seed`` must match the
-ones the training-side preprocessing used.
+``HashedClassifierEngine`` — the paper's inference path as a service.
+The headline claim (30 hashed values/point matching VW at 2^14,
+arXiv:1108.3072) is ultimately an inference-cost argument: tiny codes
+mean tiny per-request compute, IF the serving path doesn't squander it
+on host round-trips and padding.  This engine serves raw sparse
+documents through ONE fused device dispatch per micro-batch:
+
+  raw idx/nnz ─▶ scheme.encode_packed_jit (hash → b-bit → pack; Pallas
+  kernel on TPU, XLA elsewhere — ``ops.fused_encode_on_device``)
+  ─▶ bbit_scores_packed (packed-input logits kernels) ─▶ scores
+
+so on the kernel path no ``(B, k)`` int32 code matrix ever
+materializes — codes travel packed (ceil(k·b/8) bytes/row) and unpack
+in-register, exactly like the PR-4 training step.  Scores are
+bit-identical to the reference ``encode_jnp`` + ``bbit_logits``
+two-step (``fused=False`` keeps that path selectable for A/B benches).
+
+Batching architecture (see ``serving.batcher.BucketBatcher``):
+
+  * LANE ROUTING — ``submit`` validates the doc and routes it to an
+    ``nnz``-bucket lane (pow-2-ish widths, growing past the largest
+    bucket), so one giant document never inflates a whole batch's
+    padding; drained batches pad rows to a pow-2 row bucket.
+  * PRECOMPILE — every (row_bucket × nnz_bucket × replica) score
+    function is compiled at engine startup, so steady-state serving
+    never hits a first-request compile spike (``compile_misses`` counts
+    any stray shape that does recompile, e.g. an over-bucket giant doc
+    or a direct ``score_docs`` batch larger than ``max_batch``).
+  * OVERLAP — the drain thread pads batch N+1 while the device runs
+    batch N (async dispatch); a resolver thread owns the blocking
+    device→host sync and future resolution.
+  * REPLICAS — ``replicas=N`` device_puts the params once per device
+    of a 1-D ``launch.mesh.make_replica_mesh`` mesh and round-robins
+    micro-batches across them (no collectives; independent throughput
+    scaling).
+
+Input contract: docs are 1-D non-negative integer id arrays.  Empty
+docs (nnz=0) are scheme-dependent: zero-coded OPH (``oph_zero``) scores
+them through its all-empty-bins path (score = bias); schemes without
+empty semantics (``minwise``, densified ``oph``) reject them at
+``submit`` — their hash of an empty set is undefined sentinel garbage.
 
 ``greedy_generate`` — reference LM decode loop over any ModelAPI
 (prefill + KV-cache decode), used by the serving example and tests.
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -23,15 +58,19 @@ import jax.numpy as jnp
 
 from repro.core.schemes import make_scheme
 from repro.data.packing import bucket_width, pad_rows
-from repro.models.linear import BBitLinearConfig, bbit_logits
-from repro.serving.batcher import DynamicBatcher
+from repro.launch.mesh import make_replica_mesh
+from repro.models.linear import (BBitLinearConfig, bbit_scores,
+                                 bbit_scores_packed)
+from repro.serving.batcher import BucketBatcher
+
+DEFAULT_NNZ_BUCKETS = (128, 512, 2048, 8192, 32768)
 
 
-def _bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
+def _grow_bucket(n: int, buckets: Sequence[int]) -> int:
     """Pad width for an nnz of ``n``: the smallest fixed bucket that
     fits, growing by powers of two past the largest one.  Clamping to
-    ``buckets[-1]`` instead would hand ``_score`` an ``idx`` wider than
-    its ``mask`` and crash the batcher thread on giant documents."""
+    ``buckets[-1]`` instead would hand the scorer an ``idx`` wider than
+    its ``nnz`` mask and corrupt giant-document scores."""
     for b in buckets:
         if n <= b:
             return b
@@ -41,37 +80,176 @@ def _bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
 class HashedClassifierEngine:
     def __init__(self, params, cfg: BBitLinearConfig, seed: int = 0,
                  max_batch: int = 64, max_wait_ms: float = 2.0,
-                 scheme: str = "minwise"):
-        self.params = params
+                 scheme: str = "minwise", *,
+                 fused: bool = True,
+                 replicas: int = 1,
+                 nnz_buckets: Sequence[int] = DEFAULT_NNZ_BUCKETS,
+                 row_buckets: Optional[Sequence[int]] = None,
+                 precompile: bool = True,
+                 pipeline_depth: int = 2):
         self.cfg = cfg
         self.scheme = make_scheme(scheme, cfg.k, seed)
         self.family = getattr(self.scheme, "family", None)
+        self.fused = fused
+        # zero-coded schemes give an empty doc exact semantics (every
+        # bin empty → contributions masked out → score == bias)
+        self._allows_empty = getattr(self.scheme, "densify", True) is False
+        self.nnz_buckets = tuple(sorted(int(b) for b in nnz_buckets))
+        if not self.nnz_buckets:
+            raise ValueError("need at least one nnz bucket")
+        if row_buckets is None:
+            top = bucket_width(max_batch, floor=1)
+            row_buckets = tuple(1 << i for i in range(top.bit_length()))
+        self.row_buckets = tuple(sorted(int(r) for r in row_buckets))
+
+        self.mesh = make_replica_mesh(replicas)
+        self.devices = list(self.mesh.devices.flat)
+        # params replicated ONCE — each micro-batch reuses its
+        # replica's resident copy, no per-request weight traffic
+        self._params = [jax.device_put(params, d) for d in self.devices]
+        self.params = self._params[0]
+        self._rr = 0
+        self._rr_lock = threading.Lock()
+        self.device_batches = [0] * len(self.devices)
+
+        scheme_obj, lcfg = self.scheme, cfg
 
         @jax.jit
-        def _score(idx, mask, params):
-            codes, empty = self.scheme.encode_jnp(idx, mask, cfg.b)
-            logits = bbit_logits(params, codes, cfg, empty=empty)
-            return logits[:, 0] if cfg.n_classes == 2 else logits
+        def _score_fused(idx, nnz, params):
+            packed, empty = scheme_obj.encode_packed_jit(idx, nnz, lcfg.b)
+            return bbit_scores_packed(params, packed, lcfg,
+                                      empty_packed=empty)
 
-        self._score = _score
-        self.batcher = DynamicBatcher(self._run, max_batch=max_batch,
-                                      max_wait_ms=max_wait_ms)
+        @jax.jit
+        def _score_reference(idx, nnz, params):
+            mask = (jnp.arange(idx.shape[1], dtype=jnp.int32)[None, :]
+                    < nnz[:, None])
+            codes, empty = scheme_obj.encode_jnp(idx, mask, lcfg.b)
+            return bbit_scores(params, codes, lcfg, empty=empty)
 
-    def _run(self, docs: List[np.ndarray]) -> List[np.ndarray]:
-        idx, nnz = pad_rows(docs, pad_to_multiple=1)
-        m = _bucket(idx.shape[1])
-        if idx.shape[1] < m:
-            idx = np.pad(idx, ((0, 0), (0, m - idx.shape[1])))
-        mask = np.arange(m)[None, :] < nnz[:, None]
-        scores = self._score(jnp.asarray(idx), jnp.asarray(mask),
-                             self.params)
-        return list(np.asarray(scores))
+        self._score_fused = _score_fused
+        self._score_reference = _score_reference
+        self._score_fn = _score_fused if fused else _score_reference
 
+        self._compiled: set = set()
+        self.compile_misses = 0
+        self.precompile_seconds = 0.0
+        if precompile:
+            self._precompile()
+
+        self.batcher = BucketBatcher(
+            self._dispatch_batch, self._resolve_batch,
+            route=lambda doc: self._nnz_bucket(len(doc)),
+            max_batch=max_batch, max_wait_ms=max_wait_ms,
+            depth=pipeline_depth)
+
+    # ---------------------------------------------------------- buckets --
+    def _nnz_bucket(self, n: int) -> int:
+        return _grow_bucket(n, self.nnz_buckets)
+
+    def _row_bucket(self, n: int) -> int:
+        for r in self.row_buckets:
+            if n <= r:
+                return r
+        return bucket_width(n, floor=self.row_buckets[-1])
+
+    def _precompile(self) -> None:
+        """Compile every (row_bucket, nnz_bucket, replica) lane shape up
+        front — steady-state traffic then never pays a compile spike."""
+        t0 = time.perf_counter()
+        for d, dev in enumerate(self.devices):
+            for m in self.nnz_buckets:
+                idx = jax.device_put(np.zeros((1, m), np.int32), dev)
+                nnz = jax.device_put(np.ones((1,), np.int32), dev)
+                for r in self.row_buckets:
+                    ib = jnp.broadcast_to(idx, (r, m))
+                    zb = jnp.broadcast_to(nnz, (r,))
+                    self._score_fn(ib, zb, self._params[d]) \
+                        .block_until_ready()
+                    self._compiled.add((r, m, d))
+        self.precompile_seconds = time.perf_counter() - t0
+
+    # ----------------------------------------------------------- scoring --
+    def _validate(self, doc) -> np.ndarray:
+        arr = np.asarray(doc)
+        if arr.ndim != 1 or not np.issubdtype(arr.dtype, np.integer):
+            raise TypeError(
+                f"doc must be a 1-D integer id array, got shape "
+                f"{arr.shape} dtype {arr.dtype}")
+        if arr.size and int(arr.min()) < 0:
+            raise ValueError("doc has negative feature indices")
+        if arr.size == 0 and not self._allows_empty:
+            raise ValueError(
+                f"empty document: scheme {self.scheme.name!r} has no "
+                "empty semantics (its min over zero hashes is sentinel "
+                "garbage) — reject upstream or serve with the "
+                "zero-coded 'oph_zero' scheme, whose all-empty-bins "
+                "path scores it as the bias")
+        return arr.astype(np.int64, copy=False)
+
+    def _next_device(self) -> int:
+        with self._rr_lock:
+            d = self._rr % len(self.devices)
+            self._rr += 1
+        return d
+
+    def _dispatch_batch(self, key: int, docs: List[np.ndarray],
+                        device_index: Optional[int] = None) -> Tuple:
+        """Pad ``docs`` to the (row_bucket, key) lane shape and issue
+        the fused scorer asynchronously (runs on the drain thread; the
+        blocking sync happens in ``_resolve_batch``)."""
+        n = len(docs)
+        rows = self._row_bucket(n)
+        # pad_rows owns the id-folding policy (indices ≥ 2^31 fold to
+        # [0, 2^31), same as training-side preprocessing) — only the
+        # row/width padding to the lane's bucket shape happens here
+        packed_idx, packed_nnz = pad_rows(docs, pad_to_multiple=1)
+        idx = np.zeros((rows, key), np.int32)
+        nnz = np.zeros((rows,), np.int32)
+        idx[:n, :packed_idx.shape[1]] = packed_idx
+        nnz[:n] = packed_nnz
+        d = self._next_device() if device_index is None else device_index
+        dev = self.devices[d]
+        self.device_batches[d] += 1
+        scores = self._score_fn(jax.device_put(idx, dev),
+                                jax.device_put(nnz, dev),
+                                self._params[d])
+        shape_key = (rows, key, d)
+        if shape_key not in self._compiled:
+            self.compile_misses += 1
+            self._compiled.add(shape_key)
+        return scores, n
+
+    def _resolve_batch(self, handle: Tuple) -> List:
+        scores, n = handle
+        return list(np.asarray(scores)[:n])
+
+    # ------------------------------------------------------------- API ----
     def submit(self, doc: Sequence[int]):
-        return self.batcher.submit(np.asarray(doc, dtype=np.int64))
+        """Validate + route one doc; returns a Future of its score."""
+        return self.batcher.submit(self._validate(doc))
+
+    def score_docs(self, docs: Sequence[Sequence[int]],
+                   device_index: Optional[int] = None) -> np.ndarray:
+        """Synchronous batch scoring, bypassing the batcher (the
+        batcher-off baseline; also what tests use as the oracle).
+        Thread-safe.  Batches wider than the configured buckets compile
+        on first use (counted in ``compile_misses``)."""
+        items = [self._validate(d) for d in docs]
+        key = self._nnz_bucket(max((len(d) for d in items), default=1))
+        handle = self._dispatch_batch(key, items,
+                                      device_index=device_index)
+        return np.asarray(self._resolve_batch(handle))
 
     def close(self):
         self.batcher.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 def greedy_generate(api, params, prompt: np.ndarray, max_new: int,
@@ -79,6 +257,8 @@ def greedy_generate(api, params, prompt: np.ndarray, max_new: int,
                     extras: Optional[dict] = None) -> np.ndarray:
     """Greedy decode via prefill + cached steps; prompt (B, S0) int32."""
     b, s0 = prompt.shape
+    if max_new <= 0:
+        return np.asarray(prompt, dtype=np.int32).copy()
     max_len = max_len or (s0 + max_new)
     batch = {"tokens": jnp.asarray(prompt)}
     if extras:
@@ -98,17 +278,18 @@ def greedy_generate(api, params, prompt: np.ndarray, max_new: int,
             full_leaf, pre_leaf.astype(full_leaf.dtype), 0, axis=ax)
 
     cache = jax.tree.map(grow, full, cache)
-    out = [int(np.argmax(np.asarray(logits)[i])) for i in range(b)]
-    tokens = [list(row) + [out[i]] for i, row in enumerate(prompt)]
-    cur = jnp.asarray([[t[-1]] for t in tokens], jnp.int32)
+    # token bookkeeping is one preallocated buffer + vectorized numpy
+    # argmax/assignment per step — not O(B) Python int()/appends
+    out = np.empty((b, s0 + max_new), dtype=np.int32)
+    out[:, :s0] = prompt
+    nxt = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+    out[:, s0] = nxt
     cache_len = s0
-    for _ in range(max_new - 1):
+    for t in range(1, max_new):
         logits, cache = api.decode_step(
-            params, {"token": cur}, cache,
+            params, {"token": jnp.asarray(nxt[:, None])}, cache,
             jnp.asarray(cache_len, jnp.int32))
-        nxt = np.argmax(np.asarray(logits), axis=-1)
-        for i in range(b):
-            tokens[i].append(int(nxt[i]))
-        cur = jnp.asarray(nxt[:, None].astype(np.int32))
+        nxt = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        out[:, s0 + t] = nxt
         cache_len += 1
-    return np.asarray(tokens, dtype=np.int32)
+    return out

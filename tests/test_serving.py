@@ -1,14 +1,17 @@
-"""Serving: dynamic batcher semantics + hashed-classifier engine parity
-+ greedy LM generation."""
+"""Serving: batcher semantics (incl. deterministic close), hashed-
+classifier engine parity, input validation + empty-doc semantics, and
+greedy LM generation."""
+import threading
 import time
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
 
-from repro.serving import DynamicBatcher, HashedClassifierEngine, \
-    greedy_generate
+from repro.serving import BucketBatcher, DynamicBatcher, \
+    HashedClassifierEngine, greedy_generate
 
 
 def test_dynamic_batcher_batches_and_resolves():
@@ -27,6 +30,151 @@ def test_dynamic_batcher_batches_and_resolves():
     b.close()
 
 
+def test_dynamic_batcher_close_flushes_pending_with_racing_submitter():
+    """Regression: ``close()`` used to just flip a flag — requests
+    submitted just before close hung on unresolved futures forever.
+    Now close flushes (or fails) every accepted future and joins the
+    worker; submits that lose the race raise instead of hanging."""
+    def slow_run(xs):
+        time.sleep(0.005)
+        return [x + 1 for x in xs]
+
+    b = DynamicBatcher(slow_run, max_batch=4, max_wait_ms=1)
+    accepted, rejected = [], []
+
+    def submitter():
+        for i in range(200):
+            try:
+                accepted.append((i, b.submit(i)))
+            except RuntimeError:
+                rejected.append(i)
+                return
+            time.sleep(0.0005)
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    time.sleep(0.02)               # let a backlog build up
+    b.close()
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert rejected or len(accepted) == 200
+    # every accepted future is DONE after close() returns — none hang
+    for i, f in accepted:
+        assert f.done()
+        assert f.result(timeout=0) == i + 1
+    assert not b._worker.is_alive()
+    with pytest.raises(RuntimeError):
+        b.submit(0)
+
+
+def test_dynamic_batcher_close_is_idempotent_and_fails_cleanly():
+    def boom(xs):
+        raise ValueError("kaput")
+
+    b = DynamicBatcher(boom, max_batch=4, max_wait_ms=1)
+    fut = b.submit(1)
+    b.close()
+    b.close()
+    with pytest.raises(ValueError, match="kaput"):
+        fut.result(timeout=0)
+
+
+def test_bucket_batcher_lane_isolation_and_close():
+    """Items batch only with same-lane peers; close flushes all lanes."""
+    seen = []
+
+    def dispatch(key, items):
+        seen.append((key, list(items)))
+        return [i * 10 for i in items]
+
+    b = BucketBatcher(dispatch, lambda h: h, route=lambda x: x % 2,
+                      max_batch=8, max_wait_ms=50, depth=2)
+    futs = [b.submit(i) for i in range(12)]
+    got = [f.result(timeout=5) for f in futs]
+    assert got == [i * 10 for i in range(12)]
+    for key, items in seen:
+        assert all(i % 2 == key for i in items)   # no cross-lane mixing
+    assert b.requests_served == 12
+    b.close()
+    with pytest.raises(RuntimeError):
+        b.submit(1)
+
+
+def test_batchers_survive_client_cancelled_futures():
+    """A client that cancel()s a pending future must not kill the
+    worker threads or poison its batch-mates' results (set_result /
+    set_exception on a cancelled future raises InvalidStateError)."""
+    gate = threading.Event()
+
+    def slow_dispatch(key, items):
+        gate.wait(timeout=10)
+        if key == "boom":
+            raise RuntimeError("boom")
+        return items
+
+    b = BucketBatcher(slow_dispatch, lambda h: h,
+                      route=lambda x: "boom" if x == "boom" else "ok",
+                      max_batch=8, max_wait_ms=1)
+    victim = b.submit("a")
+    mates = [b.submit(x) for x in ("b", "c")]
+    err_victim = b.submit("boom")
+    assert victim.cancel() and err_victim.cancel()
+    gate.set()
+    assert [f.result(timeout=10) for f in mates] == ["b", "c"]
+    # the drain thread survived the cancelled-future error batch too
+    assert b.submit("d").result(timeout=10) == "d"
+    b.close()
+
+    d = DynamicBatcher(lambda xs: [x * 2 for x in xs],
+                       max_batch=8, max_wait_ms=20)
+    fut = d.submit(1)
+    fut.cancel()
+    ok = d.submit(2)
+    assert ok.result(timeout=10) == 4
+    d.close()
+
+
+def test_bucket_batcher_full_lane_beats_unripe_older_head():
+    """A lane hitting max_batch dispatches immediately even while a
+    different lane's older-but-not-ripe head is still waiting."""
+    b = BucketBatcher(lambda key, items: (key, list(items)),
+                      lambda h: [h[0]] * len(h[1]),
+                      route=lambda x: x[0],
+                      max_batch=4, max_wait_ms=3000)
+    slow = b.submit(("slow", 0))       # older head, lane never fills
+    fast = [b.submit(("fast", i)) for i in range(4)]   # fills its lane
+    t0 = time.perf_counter()
+    for f in fast:
+        assert f.result(timeout=10) == "fast"
+    assert time.perf_counter() - t0 < 1.0, \
+        "full lane waited behind another lane's max_wait"
+    assert not slow.done()             # its max_wait hasn't elapsed
+    b.close()
+    assert slow.result(timeout=0) == "slow"
+
+
+def test_bucket_batcher_dispatch_error_fails_only_that_batch():
+    def dispatch(key, items):
+        if key == 1:
+            raise RuntimeError("lane down")
+        return items
+
+    b = BucketBatcher(dispatch, lambda h: h, route=lambda x: x % 2,
+                      max_batch=4, max_wait_ms=1)
+    ok = b.submit(2)
+    bad = b.submit(3)
+    assert ok.result(timeout=5) == 2
+    with pytest.raises(RuntimeError, match="lane down"):
+        bad.result(timeout=5)
+    b.close()
+
+
+def _small_engine(params, cfg, **kw):
+    kw.setdefault("nnz_buckets", (64, 128))
+    kw.setdefault("row_buckets", (1, 2, 4, 8, 16))
+    return HashedClassifierEngine(params, cfg, **kw)
+
+
 def test_engine_scores_match_direct_path():
     from repro.core.minhash import minhash_jnp
     from repro.core.universal_hash import MultiplyShiftHash
@@ -34,8 +182,7 @@ def test_engine_scores_match_direct_path():
                                      bbit_logits)
     cfg = BBitLinearConfig(k=16, b=6)
     params = init_bbit_linear(cfg, jax.random.key(0))
-    eng = HashedClassifierEngine(params, cfg, seed=4, max_batch=16,
-                                 max_wait_ms=10)
+    eng = _small_engine(params, cfg, seed=4, max_batch=16, max_wait_ms=10)
     rng = np.random.default_rng(0)
     docs = [np.unique(rng.integers(0, 1 << 20, size=rng.integers(5, 60)))
             for _ in range(24)]
@@ -54,19 +201,22 @@ def test_engine_scores_match_direct_path():
         codes = (np.asarray(z) & 63).astype(np.int32)
         want.append(float(bbit_logits(params, jnp.asarray(codes), cfg)[0, 0]))
     np.testing.assert_allclose(got, np.array(want), atol=1e-5)
+    assert eng.compile_misses == 0     # precompiled lanes covered all
     eng.close()
 
 
 def test_engine_survives_nnz_over_largest_bucket():
-    """Regression: a document with nnz > the largest pad bucket (32768)
-    used to get an ``idx`` wider than its ``mask``, crashing the
-    batcher thread inside the jitted ``_score``.  The bucket now grows
-    to the next power of two and scoring stays consistent."""
+    """Regression: a document with nnz > the largest pad bucket used to
+    get an ``idx`` wider than its mask, crashing the batcher thread
+    inside the jitted scorer.  The bucket now grows to the next power
+    of two and scoring stays consistent."""
     from repro.models.linear import BBitLinearConfig, init_bbit_linear
     cfg = BBitLinearConfig(k=8, b=4)
     params = init_bbit_linear(cfg, jax.random.key(1))
     eng = HashedClassifierEngine(params, cfg, seed=3, max_batch=4,
-                                 max_wait_ms=5)
+                                 max_wait_ms=5, precompile=False,
+                                 nnz_buckets=(128, 32768),
+                                 row_buckets=(1, 2, 4))
     rng = np.random.default_rng(0)
     big = np.unique(rng.integers(0, 1 << 28, size=40000))
     assert len(big) > 32768
@@ -76,6 +226,59 @@ def test_engine_survives_nnz_over_largest_bucket():
     assert all(np.isfinite(v) for v in vals)
     # identical docs must score identically regardless of batch mates
     assert vals[0] == vals[2]
+    eng.close()
+
+
+def test_engine_validates_submissions():
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    cfg = BBitLinearConfig(k=8, b=4)
+    params = init_bbit_linear(cfg, jax.random.key(0))
+    eng = HashedClassifierEngine(params, cfg, precompile=False,
+                                 nnz_buckets=(32,), row_buckets=(1,))
+    with pytest.raises(TypeError, match="integer"):
+        eng.submit(np.array([0.5, 1.5]))
+    with pytest.raises(TypeError, match="1-D"):
+        eng.submit(np.arange(4).reshape(2, 2))
+    with pytest.raises(ValueError, match="negative"):
+        eng.submit(np.array([3, -1]))
+    # minwise has no empty-doc semantics → rejected at submit
+    with pytest.raises(ValueError, match="empty document"):
+        eng.submit(np.array([], dtype=np.int64))
+    eng.close()
+
+
+def test_empty_doc_semantics_by_scheme():
+    """nnz=0 used to reach the scorer and produce scheme-dependent
+    garbage.  Now: zero-coded OPH serves it through the all-empty-bins
+    path (score == bias exactly); minwise and densified OPH reject."""
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    cfg = BBitLinearConfig(k=16, b=4)
+    params = init_bbit_linear(cfg, jax.random.key(2))
+    params = {"table": params["table"],
+              "bias": jnp.asarray([0.375], jnp.float32)}
+    empty = np.array([], dtype=np.int64)
+
+    for scheme in ("minwise", "oph"):
+        eng = HashedClassifierEngine(params, cfg, scheme=scheme,
+                                     precompile=False,
+                                     nnz_buckets=(32,), row_buckets=(1,))
+        with pytest.raises(ValueError, match="empty document"):
+            eng.submit(empty)
+        eng.close()
+
+    eng = HashedClassifierEngine(params, cfg, scheme="oph_zero",
+                                 precompile=False,
+                                 nnz_buckets=(32,), row_buckets=(1, 2))
+    got = eng.submit(empty).result(timeout=60)
+    bias = float(np.asarray(params["bias"])[0])
+    assert float(got) == bias
+    # and an empty doc next to a real one doesn't perturb either
+    real = np.arange(1, 9, dtype=np.int64)
+    alone = eng.score_docs([real])[0]
+    futs = [eng.submit(real), eng.submit(empty)]
+    pair = [f.result(timeout=60) for f in futs]
+    np.testing.assert_allclose(float(pair[0]), float(alone), atol=1e-5)
+    assert float(pair[1]) == bias
     eng.close()
 
 

@@ -1,0 +1,171 @@
+"""Fused serving hot path: fused-vs-reference bitwise parity sweeps,
+steady-state no-recompile contract, multi-threaded stress, and replica
+parallelism (subprocess on 2 fake devices + in-process CI-tier
+variants, same convention as test_dp_streaming)."""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import run_in_subprocess
+
+from repro.models.linear import BBitLinearConfig, init_bbit_linear
+from repro.serving import HashedClassifierEngine
+
+
+def _ragged_docs(rng, n, lo=1, hi=200):
+    return [np.unique(rng.integers(0, 1 << 24,
+                                   size=int(rng.integers(lo, hi))))
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("scheme", ["minwise", "oph", "oph_zero"])
+@pytest.mark.parametrize("b", [1, 2, 4, 8])
+def test_fused_scores_bit_identical_to_reference(scheme, b):
+    """The tentpole parity contract: one fused encode_packed_jit →
+    bbit_scores_packed dispatch produces BITWISE the same scores as
+    the encode_jnp → bbit_logits two-step, over ragged nnz."""
+    cfg = BBitLinearConfig(k=16, b=b)
+    params = init_bbit_linear(cfg, jax.random.key(b))
+    docs = _ragged_docs(np.random.default_rng(b), 9, hi=150)
+    kw = dict(seed=7, scheme=scheme, precompile=False,
+              nnz_buckets=(256,), row_buckets=(16,))
+    fused = HashedClassifierEngine(params, cfg, fused=True, **kw)
+    ref = HashedClassifierEngine(params, cfg, fused=False, **kw)
+    a = fused.score_docs(docs)
+    r = ref.score_docs(docs)
+    assert a.dtype == r.dtype and a.shape == r.shape
+    assert np.array_equal(a, r), f"fused drifted: {np.abs(a - r).max()}"
+    fused.close()
+    ref.close()
+
+
+def test_fused_parity_non_byte_aligned_b():
+    """b=6 exercises the general (non-byte-aligned) pack/unpack path."""
+    cfg = BBitLinearConfig(k=16, b=6)
+    params = init_bbit_linear(cfg, jax.random.key(0))
+    docs = _ragged_docs(np.random.default_rng(3), 6, hi=100)
+    kw = dict(seed=2, precompile=False, nnz_buckets=(128,),
+              row_buckets=(8,))
+    fused = HashedClassifierEngine(params, cfg, fused=True, **kw)
+    ref = HashedClassifierEngine(params, cfg, fused=False, **kw)
+    assert np.array_equal(fused.score_docs(docs), ref.score_docs(docs))
+    fused.close()
+    ref.close()
+
+
+def test_steady_state_never_recompiles():
+    """Precompiled lanes cover every (row, nnz) bucket combination:
+    traffic inside the configured buckets must hit compiled code only."""
+    cfg = BBitLinearConfig(k=16, b=8)
+    params = init_bbit_linear(cfg, jax.random.key(1))
+    eng = HashedClassifierEngine(params, cfg, seed=5, max_batch=4,
+                                 max_wait_ms=1,
+                                 nnz_buckets=(32, 128),
+                                 row_buckets=(1, 2, 4))
+    assert eng.precompile_seconds > 0
+    rng = np.random.default_rng(0)
+    futs = [eng.submit(np.unique(rng.integers(0, 1 << 20, size=s)))
+            for s in (3, 30, 100, 5, 90, 17, 128, 1)]
+    for f in futs:
+        f.result(timeout=60)
+    assert eng.compile_misses == 0
+    assert eng.batcher.batches_run >= 2
+    eng.close()
+
+
+def test_concurrent_submitters_all_resolve_and_match_oracle():
+    """Many threads × mixed doc sizes: every future resolves, and each
+    score matches the single-request oracle regardless of batch mates
+    or lane routing."""
+    cfg = BBitLinearConfig(k=16, b=8)
+    params = init_bbit_linear(cfg, jax.random.key(2))
+    eng = HashedClassifierEngine(params, cfg, seed=9, max_batch=8,
+                                 max_wait_ms=2,
+                                 nnz_buckets=(32, 128, 512),
+                                 row_buckets=(1, 2, 4, 8))
+    rng = np.random.default_rng(42)
+    docs = _ragged_docs(rng, 36, lo=1, hi=400)
+    oracle = np.array([float(eng.score_docs([d])[0]) for d in docs])
+
+    results = [None] * len(docs)
+    errors = []
+
+    def client(ids):
+        try:
+            futs = [(i, eng.submit(docs[i])) for i in ids]
+            for i, f in futs:
+                results[i] = float(f.result(timeout=120))
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client,
+                                args=(range(t, len(docs), 6),))
+               for t in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180)
+        assert not t.is_alive()
+    assert not errors
+    assert all(r is not None for r in results)
+    np.testing.assert_allclose(np.array(results), oracle, atol=1e-5)
+    eng.close()
+
+
+def test_replicas_round_robin_subprocess():
+    """2 replicas on 2 fake devices: params device_put once per
+    replica, batches round-robin across both, scores match the
+    device-0 oracle."""
+    run_in_subprocess("""
+        import numpy as np, jax
+        from repro.models.linear import BBitLinearConfig, init_bbit_linear
+        from repro.serving import HashedClassifierEngine
+
+        cfg = BBitLinearConfig(k=16, b=8)
+        params = init_bbit_linear(cfg, jax.random.key(0))
+        rng = np.random.default_rng(1)
+        docs = [np.unique(rng.integers(0, 1 << 20,
+                                       size=int(rng.integers(4, 60))))
+                for _ in range(40)]
+        eng = HashedClassifierEngine(
+            params, cfg, seed=1, max_batch=4, max_wait_ms=2, replicas=2,
+            nnz_buckets=(64,), row_buckets=(1, 2, 4))
+        assert len(eng.devices) == 2
+        futs = [eng.submit(d) for d in docs]
+        got = np.array([float(f.result(timeout=120)) for f in futs])
+        want = np.array([float(eng.score_docs([d], device_index=0)[0])
+                         for d in docs])
+        np.testing.assert_allclose(got, want, atol=1e-5)
+        assert min(eng.device_batches) >= 1, eng.device_batches
+        assert eng.compile_misses == 0
+        eng.close()
+    """, devices=2)
+
+
+# ------------------------------------------------ in-process (CI tier) ----
+needs_two = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >= 2 devices (CI multi-device job sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+
+
+@needs_two
+def test_replicas_in_process():
+    cfg = BBitLinearConfig(k=8, b=4)
+    params = init_bbit_linear(cfg, jax.random.key(4))
+    eng = HashedClassifierEngine(params, cfg, seed=3, max_batch=2,
+                                 max_wait_ms=1, replicas=2,
+                                 nnz_buckets=(32,), row_buckets=(1, 2))
+    rng = np.random.default_rng(5)
+    docs = [np.unique(rng.integers(0, 1 << 20, size=12))
+            for _ in range(12)]
+    futs = [eng.submit(d) for d in docs]
+    got = np.array([float(f.result(timeout=120)) for f in futs])
+    want = np.array([float(eng.score_docs([d], device_index=1)[0])
+                     for d in docs])
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    assert min(eng.device_batches) >= 1
+    eng.close()
