@@ -17,7 +17,12 @@ plus steady-state rows/s for:
   * ``fused_open``      — open-loop (submit as fast as possible),
     the saturation throughput + tail-latency view;
   * ``replicas1/2``     — 1 vs 2 engine replicas over fake CPU
-    devices, open-loop (throughput scaling without collectives).
+    devices, open-loop (throughput scaling without collectives);
+  * ``http_open_loop``  — the same fused engine behind the stdlib
+    asyncio HTTP tier (``serving.server.ScoreServer``): concurrent
+    keep-alive clients hammering batch ``POST /score``, measuring the
+    full network path (parse → admission → batcher → device → JSON),
+    ending in a graceful drain.
 
 Measurement structure (the only one that survives this shared box's
 noise, same as streaming_bench): the legacy/fused/nobatch/open variants
@@ -38,7 +43,14 @@ expected here; the feature targets real multi-accelerator hosts).
 
 ``--smoke`` (CI) asserts the parity contracts on tiny shapes: fused ≡
 reference bitwise across schemes × b, batched ≡ direct, empty-doc
-semantics, and close() leaves no future unresolved.
+semantics, and close() leaves no future unresolved — plus the e2e
+network contract: a SUBPROCESS server (deterministic params from
+``init_bbit_linear(cfg, jax.random.key(n))``, reconstructible in the
+parent) is driven over real HTTP and must show bitwise score parity
+vs the parent's same-shape oracle, a deterministic 429 on an
+oversized request, an exact mid-traffic ``/reload`` (every response
+one version, bitwise vs that version's oracle), ``compile_misses ==
+0``, and a clean SIGTERM drain (exit 0, nothing dropped).
 """
 from __future__ import annotations
 
@@ -161,9 +173,101 @@ def _make_engines(docs, *, replicas=1, legacy=True):
 
 
 # ------------------------------------------------------ worker side -------
+def _http_load(port: int, docs, n_req: int, clients: int,
+               per: int) -> dict:
+    """Concurrent keep-alive HTTP clients each firing ``per``-doc batch
+    ``POST /score`` requests as fast as responses come back; latency is
+    the full network round-trip."""
+    from repro.serving import ScoreClient
+
+    reqs = max(clients, n_req // per)
+    lats = [[] for _ in range(clients)]
+    errs = []
+
+    def client(c):
+        cl = ScoreClient("127.0.0.1", port, timeout=600)
+        try:
+            for i in range(c, reqs, clients):
+                batch = [docs[(i * per + j) % len(docs)]
+                         for j in range(per)]
+                t0 = time.perf_counter()
+                cl.score(batch)
+                lats[c].append(time.perf_counter() - t0)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+        finally:
+            cl.close()
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    flat = [x for l in lats for x in l]
+    return {"wall_s": wall, "rows_per_s": len(flat) * per / wall,
+            "requests": len(flat), **_pcts(flat)}
+
+
+def _http_server_worker(cfg: dict) -> None:
+    """Deterministic tiny engine behind ``ScoreServer``; prints one
+    ``LISTENING <host> <port>`` line, serves until SIGTERM, then prints
+    ``DRAINED <0|1>``.  Params come from ``jax.random.key(param_key)``
+    so the parent process can rebuild the exact same model as its
+    bitwise oracle."""
+    import jax
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    from repro.serving import HashedClassifierEngine, ScoreServer
+
+    lcfg = BBitLinearConfig(k=16, b=4)
+    params = init_bbit_linear(lcfg, jax.random.key(cfg["param_key"]))
+    eng = HashedClassifierEngine(params, lcfg, seed=3, scheme="oph",
+                                 max_batch=8, max_wait_ms=20.0,
+                                 nnz_buckets=(64,), version="v0")
+    srv = ScoreServer(
+        eng, port=0,
+        on_started=lambda s: print(f"LISTENING {s.host} {s.port}",
+                                   flush=True))
+    srv.run()                      # SIGTERM → graceful drain → returns
+    print(f"DRAINED {int(bool(srv.drained_clean))}", flush=True)
+
+
 def _worker(cfg: dict) -> None:
+    if cfg["mode"] == "http_server":
+        _http_server_worker(cfg)
+        return
+
     docs = _make_docs(cfg["n_docs"])
     n_req = cfg["n_req"]
+
+    if cfg["mode"] == "http":
+        from repro.serving import ScoreServer
+        eng = _make_engines(docs, legacy=False)
+        fused = eng["fused"]
+        srv = ScoreServer(fused, port=0)
+        srv.start_in_thread()
+        per = 8
+        _http_load(srv.port, docs, n_req, cfg["clients"], per)  # warmup
+        best = None
+        for _ in range(ROUNDS):
+            r = _http_load(srv.port, docs, n_req, cfg["clients"], per)
+            if best is None or r["wall_s"] < best["wall_s"]:
+                best = r
+        assert fused.compile_misses == 0, "steady state recompiled"
+        snap = fused.stats()
+        srv.request_drain()
+        assert srv.wait_finished(timeout=120), "drain hung"
+        print(json.dumps({
+            "open": best, "cold_s": eng["cold_fused_s"],
+            "docs_per_request": per,
+            "drained_clean": bool(srv.drained_clean),
+            "rejected_rows": srv.admission.rejected,
+            "engine_p50_ms": snap["p50_ms"]}))
+        return
 
     if cfg["mode"] == "replicas":
         eng = _make_engines(docs, replicas=cfg["replicas"],
@@ -222,9 +326,7 @@ def _worker(cfg: dict) -> None:
     print(json.dumps(out))
 
 
-def _run_worker(mode: str, *, devices: int, replicas: int = 1) -> dict:
-    cfg = dict(mode=mode, n_docs=N_DOCS, n_req=N_REQ, clients=CLIENTS,
-               replicas=replicas)
+def _worker_env(devices: int) -> tuple:
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + f" --xla_force_host_platform_device_count={devices}")
@@ -232,6 +334,13 @@ def _run_worker(mode: str, *, devices: int, replicas: int = 1) -> dict:
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(here, "src"), here,
          env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    return env, here
+
+
+def _run_worker(mode: str, *, devices: int, replicas: int = 1) -> dict:
+    cfg = dict(mode=mode, n_docs=N_DOCS, n_req=N_REQ, clients=CLIENTS,
+               replicas=replicas)
+    env, here = _worker_env(devices)
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.serving_bench",
          "--worker", json.dumps(cfg)],
@@ -299,7 +408,114 @@ def _smoke() -> list:
         ("serving/smoke_fused_parity_k16", 0.0,
          f"pairs_bitwise_identical={checked};batched_matches_direct=1;"
          "close_flushes=1;compile_misses=0"),
+        _smoke_http_e2e(),
     ])
+
+
+def _smoke_http_e2e() -> tuple:
+    """End-to-end network contract against a real server SUBPROCESS:
+    bitwise parity, deterministic 429, exact mid-traffic hot-reload,
+    compile_misses == 0, clean SIGTERM drain."""
+    import re
+    import signal
+    import tempfile
+
+    import jax
+    from repro.ckpt import checkpoint as ckpt
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    from repro.serving import (HashedClassifierEngine, HTTPStatusError,
+                               ScoreClient)
+    from repro.serving.reload import WeightSet
+
+    param_key = 5
+    lcfg = BBitLinearConfig(k=16, b=4)
+    rng = np.random.default_rng(123)
+    docs = [np.sort(rng.choice(100000, size=int(rng.integers(5, 50)),
+                               replace=False)) for _ in range(8)]
+
+    # the parent rebuilds the server's exact deterministic model and
+    # computes both single-version oracles at the server's batch shape
+    # (8-doc full batches — bitwise parity is shape-for-shape)
+    params = init_bbit_linear(lcfg, jax.random.key(param_key))
+    new_params = init_bbit_linear(lcfg, jax.random.key(param_key + 1))
+    oracle = HashedClassifierEngine(params, lcfg, seed=3, scheme="oph",
+                                    max_batch=8, max_wait_ms=20.0,
+                                    nnz_buckets=(64,))
+    want_v0 = np.asarray(oracle.score_docs(docs), np.float64).ravel()
+    w_new = WeightSet(version="staged", params=tuple(
+        jax.device_put(new_params, d) for d in oracle.devices))
+    want_v1 = np.asarray(oracle.score_docs(docs, weights=w_new),
+                         np.float64).ravel()
+    oracle.close()
+    assert not np.array_equal(want_v0, want_v1)
+
+    env, here = _worker_env(devices=1)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "benchmarks.serving_bench", "--worker",
+         json.dumps({"mode": "http_server", "param_key": param_key})],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=here)
+    try:
+        port = None
+        deadline = time.time() + 300
+        while time.time() < deadline:
+            line = proc.stdout.readline()
+            if not line:
+                break
+            m = re.match(r"LISTENING (\S+) (\d+)", line)
+            if m:
+                port = int(m.group(2))
+                break
+        assert port, "server subprocess never reported LISTENING"
+        client = ScoreClient("127.0.0.1", port, timeout=120)
+
+        # bitwise parity across the process + network boundary
+        r = client.score(docs)
+        assert r["version"] == "v0"
+        got = np.asarray(r["scores"], np.float64).ravel()
+        assert np.array_equal(got, want_v0), "HTTP scores != oracle"
+
+        # deterministic 429: one request larger than the whole budget
+        limit = client.status()["admission"]["limit"]
+        try:
+            client.score([[1, 2, 3]] * (limit + 1))
+            raise AssertionError("oversized request was not rejected")
+        except HTTPStatusError as e:
+            assert e.status == 429 and e.retry_after_s > 0
+
+        # mid-traffic hot-reload: responses before/after are each one
+        # exact version, bitwise against that version's oracle
+        tmp = tempfile.mkdtemp(prefix="smoke_http_ckpt_")
+        ckpt.publish_params(tmp, 7, new_params)
+        for _ in range(3):
+            client.score(docs)
+        info = client.reload(tmp)
+        assert info["version"] == "ckpt-7" and info["previous"] == "v0"
+        for _ in range(3):
+            r = client.score(docs)
+            assert r["version"] == "ckpt-7"
+            got = np.asarray(r["scores"], np.float64).ravel()
+            assert np.array_equal(got, want_v1), \
+                "post-reload scores != new oracle"
+
+        st = client.status()
+        assert st["health"] == "ok"
+        assert st["engine"]["compile_misses"] == 0
+        assert st["engine"]["reloads"] == 1
+        client.close()
+
+        # SIGTERM → graceful drain → exit 0 with a clean-drain report
+        proc.send_signal(signal.SIGTERM)
+        out, _ = proc.communicate(timeout=120)
+        assert proc.returncode == 0, f"server exited {proc.returncode}"
+        assert "DRAINED 1" in out, f"drain not clean: {out[-500:]}"
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate(timeout=30)
+    return ("serving/smoke_http_e2e_k16", 0.0,
+            "bitwise_parity=1;deterministic_429=1;hot_reload_exact=1;"
+            "compile_misses=0;sigterm_drain_clean=1")
 
 
 # -------------------------------------------------------- full tier -------
@@ -307,6 +523,7 @@ def serving_bench() -> list:
     if SMOKE:
         return _smoke()
     ab = _run_worker("serve", devices=1)
+    http = _run_worker("http", devices=1)
     rep1, rep2 = _paired(
         lambda: _run_worker("replicas", devices=1, replicas=1),
         lambda: _run_worker("replicas", devices=2, replicas=2))
@@ -336,6 +553,14 @@ def serving_bench() -> list:
          f"{lat(nob)};batch_vs_nobatch={batch_vs_nobatch:.2f}x"),
         (f"serving/fused_open_k{K}_b{B}", opn["wall_s"] * 1e6,
          f"{lat(opn)};note=open_loop_saturation"),
+        (f"serving/http_open_loop_k{K}_b{B}",
+         http["open"]["wall_s"] * 1e6,
+         f"{lat(http['open'])};clients={CLIENTS};"
+         f"docs_per_request={http['docs_per_request']};"
+         f"requests={http['open']['requests']};"
+         f"drained_clean={int(http['drained_clean'])};"
+         f"rejected_rows={http['rejected_rows']};"
+         "note=stdlib_asyncio_http_tier_full_network_path"),
         (f"serving/replicas1_open_k{K}_b{B}",
          rep1["open"]["wall_s"] * 1e6,
          f"{lat(rep1['open'])};devices={rep1['devices']}"),

@@ -2,7 +2,25 @@
 
   synthetic expanded-rcv1 docs → k×b-bit minwise hashing (one-time)
   → LIBLINEAR-style TRON training (Eq. 9) → test accuracy
-  → same hashed model served with dynamic batching.
+  → same hashed model served with dynamic batching
+  → the same engine behind the network front end (HTTP).
+
+Serve over HTTP (step 5 here, full tour in
+examples/serve_classifier.py):
+
+    srv = ScoreServer(eng, port=0)        # 0 → ephemeral port
+    srv.start_in_thread()
+    client = ScoreClient(srv.host, srv.port)
+    client.score([[12, 99, 1024], ...])   # {"scores", "version", ...}
+    client.status()                       # p50/p95/p99, rows/s, lanes
+    client.reload(ckpt_dir)               # versioned weight hot-swap
+    srv.request_drain()                   # SIGTERM path: finish, then stop
+
+or from the command line:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --mode classifier --http --port 8077
+    curl -s localhost:8077/status | python -m json.tool
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +31,7 @@ import jax
 from repro.data import SynthRcv1Config, generate_arrays, preprocess_rows
 from repro.models.linear import BBitLinearConfig
 from repro.train import train_bbit_liblinear
-from repro.serving import HashedClassifierEngine
+from repro.serving import HashedClassifierEngine, ScoreClient, ScoreServer
 
 
 def main() -> None:
@@ -53,7 +71,18 @@ def main() -> None:
     acc = float(np.mean(pred == labels[n_tr:n_tr + 32]))
     print(f"   served 32 requests in {eng.batcher.batches_run} batch(es); "
           f"accuracy {acc:.3f}")
-    eng.close()
+
+    print("5) same engine over HTTP (batch scores + live /status)…")
+    srv = ScoreServer(eng, port=0)
+    srv.start_in_thread()
+    client = ScoreClient(srv.host, srv.port)
+    resp = client.score(rows[n_tr:n_tr + 8])
+    st = client.status()
+    print(f"   POST /score → 8 scores tagged {resp['version']!r}; "
+          f"GET /status → health={st['health']} "
+          f"p50={st['engine']['p50_ms']:.1f}ms")
+    srv.request_drain()               # drains the engine too
+    srv.wait_finished(timeout=30)
     assert res.test_acc > 0.85
 
 

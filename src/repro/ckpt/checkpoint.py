@@ -130,3 +130,33 @@ def restore_if_exists(root: str, template: Any):
         return restore(root, template)
     except (FileNotFoundError, ValueError):
         return None
+
+
+# --------------------------------------------------- serving handoff ----
+# A training checkpoint is the FULL state (params + optimizer + stream
+# position) restored against the trainer's own template; a serving
+# process has none of that structure.  ``publish_params`` writes a
+# params-only snapshot under <root>/serve with the same atomic-rename +
+# manifest discipline, so the server side can restore it against
+# nothing but its live param tree (``serving.reload``) — the handoff
+# that lets a mid-run fit_streaming checkpoint go live with no restart.
+
+SERVE_SUBDIR = "serve"
+
+
+def publish_params(root: str, step: int, params: Any,
+                   keep_last: int = 3) -> str:
+    """Publish a serving-consumable params-only snapshot under
+    ``<root>/serve``; returns the step dir."""
+    return save(os.path.join(root, SERVE_SUBDIR), step, params,
+                keep_last=keep_last)
+
+
+def latest_published(root: str) -> Optional[int]:
+    return latest_step(os.path.join(root, SERVE_SUBDIR))
+
+
+def restore_published(root: str, template: Any,
+                      step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore the latest (or given-step) published params snapshot."""
+    return restore(os.path.join(root, SERVE_SUBDIR), template, step)

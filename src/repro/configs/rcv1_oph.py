@@ -58,6 +58,17 @@ class OPHPaperConfig:
     serve_replicas: int = 1
     serve_nnz_buckets: tuple = (128, 512, 2048, 8192, 32768)
     serve_pipeline_depth: int = 2
+    # network serving tier (PR 6): the asyncio HTTP front end over the
+    # engine — bind address, graceful-drain budget, rolling stats
+    # window, adaptive-bucket cadence (0 = static lane grid), and the
+    # in-flight row budget (None = derive from the engine's real
+    # pipeline concurrency, AdmissionController.for_engine)
+    serve_host: str = "127.0.0.1"
+    serve_port: int = 8077
+    serve_drain_timeout_s: float = 30.0
+    serve_stats_window: int = 4096
+    serve_adapt_every: int = 0
+    serve_inflight_limit: Optional[int] = None
 
     def linear_config(self) -> BBitLinearConfig:
         return BBitLinearConfig(k=self.k, b=self.b,
@@ -84,7 +95,17 @@ class OPHPaperConfig:
                   max_wait_ms=self.serve_max_wait_ms,
                   replicas=self.serve_replicas,
                   nnz_buckets=self.serve_nnz_buckets,
-                  pipeline_depth=self.serve_pipeline_depth)
+                  pipeline_depth=self.serve_pipeline_depth,
+                  stats_window=self.serve_stats_window,
+                  adapt_every=self.serve_adapt_every)
+        kw.update(overrides)
+        return kw
+
+    def http_kwargs(self, **overrides) -> dict:
+        """Keyword arguments for ``serving.ScoreServer`` — the HTTP
+        front end around an engine built with ``serve_kwargs``."""
+        kw = dict(host=self.serve_host, port=self.serve_port,
+                  drain_timeout_s=self.serve_drain_timeout_s)
         kw.update(overrides)
         return kw
 

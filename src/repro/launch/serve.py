@@ -1,11 +1,23 @@
 """Serving launcher.
 
   --mode classifier : train a small hashed classifier, stand up the
-                      dynamically-batched engine, replay a request
-                      stream, report throughput/latency/accuracy.
+                      dynamically-batched engine, then either replay a
+                      request stream in-process (default; reports
+                      throughput/latency/accuracy) or — with --http —
+                      serve it over the network front end
+                      (``serving.server.ScoreServer``: POST /score,
+                      GET /status, POST /reload, graceful drain on
+                      SIGTERM) until terminated.
   --mode lm         : greedy-generate from a reduced LM-zoo arch via
                       prefill + KV-cache decode (the serve_step the
                       decode dry-run cells lower at full scale).
+
+HTTP flags (classifier mode): ``--http --host H --port P`` (port 0
+picks an ephemeral port), ``--drain-timeout-s`` bounds how long SIGTERM
+waits for in-flight requests, ``--adapt-every N`` re-derives the nnz
+lane grid from live traffic every N requests.  The process prints one
+``LISTENING <host> <port>`` line once the socket is bound (machine-
+readable; the e2e smoke and examples wait on it).
 """
 from __future__ import annotations
 
@@ -15,8 +27,8 @@ import time
 import numpy as np
 
 
-def serve_classifier(args) -> None:
-    import jax
+def _build_classifier_engine(args):
+    import jax  # noqa: F401 — device runtime init before training
     from repro.data import (SynthRcv1Config, generate_arrays,
                             preprocess_rows)
     from repro.models.linear import BBitLinearConfig
@@ -35,10 +47,28 @@ def serve_classifier(args) -> None:
                                codes[n_tr:], labels[n_tr:], lcfg,
                                loss="logistic", C=1.0, max_iter=25)
     print(f"model ready: test acc {res.test_acc:.3f}")
-    eng = HashedClassifierEngine(res.params, lcfg, seed=1,
-                                 max_batch=args.max_batch,
-                                 nnz_buckets=(2048, 8192),
-                                 row_buckets=(1, args.max_batch))
+    eng = HashedClassifierEngine(
+        res.params, lcfg, seed=1, max_batch=args.max_batch,
+        nnz_buckets=(2048, 8192), row_buckets=(1, args.max_batch),
+        adapt_every=args.adapt_every)
+    return eng, rows, labels, n_tr
+
+
+def serve_classifier(args) -> None:
+    eng, rows, labels, n_tr = _build_classifier_engine(args)
+    if args.http:
+        from repro.serving import ScoreServer
+        srv = ScoreServer(
+            eng, host=args.host, port=args.port,
+            drain_timeout_s=args.drain_timeout_s,
+            on_started=lambda s: (
+                print(f"LISTENING {s.host} {s.port}", flush=True)))
+        try:
+            srv.run()                # blocks until SIGTERM/SIGINT
+        finally:
+            print(f"drained clean={srv.drained_clean} after "
+                  f"{srv.http_requests} requests", flush=True)
+        return
     eng.submit(rows[0]).result(timeout=300)   # first-request sanity
     t0 = time.perf_counter()
     futs = [eng.submit(rows[n_tr + i % (args.n_docs - n_tr)])
@@ -95,6 +125,16 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP instead of replaying a "
+                         "request stream in-process")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8077,
+                    help="0 picks an ephemeral port")
+    ap.add_argument("--drain-timeout-s", type=float, default=30.0)
+    ap.add_argument("--adapt-every", type=int, default=0,
+                    help="re-derive nnz lane grid from live traffic "
+                         "every N requests (0 = static grid)")
     args = ap.parse_args()
     if args.mode == "classifier":
         serve_classifier(args)

@@ -1,7 +1,20 @@
 """Serving: bucketed dynamic batching + fused hashed-classifier / LM
-decode engines."""
+decode engines, and the stdlib-only HTTP tier on top (admission
+control, live stats, graceful drain, versioned hot-reload)."""
+from repro.serving.admission import (AdmissionController, Draining,
+                                     Overloaded)
 from repro.serving.batcher import BucketBatcher, DynamicBatcher
-from repro.serving.engine import HashedClassifierEngine, greedy_generate
+from repro.serving.engine import (HashedClassifierEngine, VersionedScore,
+                                  VersionedVector, greedy_generate)
+from repro.serving.reload import (ReloadManager, WeightSet,
+                                  load_serving_params)
+from repro.serving.server import (HTTPStatusError, ScoreClient,
+                                  ScoreServer)
+from repro.serving.stats import NnzHistogram, StatsWindow
 
-__all__ = ["BucketBatcher", "DynamicBatcher", "HashedClassifierEngine",
-           "greedy_generate"]
+__all__ = ["AdmissionController", "BucketBatcher", "Draining",
+           "DynamicBatcher", "HTTPStatusError", "HashedClassifierEngine",
+           "NnzHistogram", "Overloaded", "ReloadManager", "ScoreClient",
+           "ScoreServer", "StatsWindow", "VersionedScore",
+           "VersionedVector", "WeightSet", "greedy_generate",
+           "load_serving_params"]

@@ -26,6 +26,17 @@ serving analogue of ``data.prefetch``):
   * DETERMINISTIC CLOSE — ``close()`` refuses new submits, flushes
     every pending request (or fails its future if the dispatch fn
     raises) and joins both threads; no future ever hangs.
+  * OBSERVABILITY — ``depths()`` snapshots per-lane occupancy and the
+    in-flight dispatch queue; a ``ft.watchdog.StepWatchdog`` over
+    per-batch dispatch+resolve latency backs ``health()``: a drain or
+    resolve call stuck past ``stall_after_s`` (or far past the rolling
+    median) reports ``degraded`` so a front end can fail its health
+    check instead of letting clients hang on silent futures.
+  * ADAPTIVE BUCKETS — ``submit`` records each item's size (``size``
+    hook, default ``len``) into a pow-2 histogram;
+    ``suggest_buckets()`` re-derives a lane grid from that observed
+    traffic (see ``serving.stats.NnzHistogram``) so a skewed workload
+    converges to tighter padding than the static config grid.
 
 Both batchers guarantee on ``close()``: every future returned by a
 successful ``submit`` is done (result or exception) before ``close``
@@ -39,7 +50,11 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Callable, Hashable, List, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, \
+    Tuple
+
+from repro.ft.watchdog import StepWatchdog
+from repro.serving.stats import NnzHistogram
 
 _CLOSE = object()          # queue sentinel: enqueued once, after the
                            # last accepted submit (submits after close
@@ -171,20 +186,35 @@ class BucketBatcher:
                  resolve: Callable[[object], Sequence],
                  route: Callable[[object], Hashable],
                  max_batch: int = 64, max_wait_ms: float = 2.0,
-                 depth: int = 2):
+                 depth: int = 2,
+                 size: Callable[[object], int] = len,
+                 watchdog: Optional[StepWatchdog] = None,
+                 stall_after_s: float = 10.0):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self._dispatch = dispatch
         self._resolve = resolve
         self._route = route
+        self._size = size
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
+        self.depth = depth
         self._cond = threading.Condition()
         self._lanes: dict = {}     # key -> deque[(item, fut, t_enq)]
         self._closed = False
         self._resq: "queue.Queue" = queue.Queue(maxsize=depth)
         self.batches_run = 0
         self.requests_served = 0
+        self.size_hist = NnzHistogram()
+        # per-batch dispatch+resolve latency window; a batch far past
+        # the rolling median flags slow, and a dispatch/resolve call
+        # that never returns shows up as a live stall in ``health()``
+        self.watchdog = watchdog or StepWatchdog(threshold=4.0,
+                                                 window=64,
+                                                 escalate_after=3)
+        self.stall_after_s = stall_after_s
+        self._dispatch_started: Optional[float] = None
+        self._resolve_started: Optional[float] = None
         self._drainer = threading.Thread(target=self._drain_loop,
                                          daemon=True, name="serve-drain")
         self._resolver = threading.Thread(target=self._resolve_loop,
@@ -196,13 +226,58 @@ class BucketBatcher:
     def submit(self, item) -> Future:
         fut: Future = Future()
         key = self._route(item)
+        try:
+            n = int(self._size(item))
+        except TypeError:
+            n = 0
         with self._cond:
             if self._closed:
                 raise RuntimeError("BucketBatcher is closed")
             self._lanes.setdefault(key, collections.deque()).append(
                 (item, fut, time.perf_counter()))
             self._cond.notify()
+        self.size_hist.record(n)
         return fut
+
+    # ------------------------------------------------- observability --
+    def depths(self) -> Dict:
+        """Queue-depth snapshot: per-lane occupancy + dispatched-but-
+        unresolved batches (the bounded overlap queue)."""
+        with self._cond:
+            lanes = {key: len(lane) for key, lane in self._lanes.items()
+                     if lane}
+        return {"lanes": lanes, "queued": sum(lanes.values()),
+                "inflight_batches": self._resq.qsize(),
+                "depth": self.depth}
+
+    def suggest_buckets(self, max_buckets: int = 6,
+                        coverage: float = 0.995,
+                        min_samples: int = 64):
+        """Lane grid re-derived from the observed item-size histogram
+        (``None`` until ``min_samples`` items have been seen)."""
+        return self.size_hist.suggest_buckets(
+            max_buckets=max_buckets, coverage=coverage,
+            min_samples=min_samples)
+
+    def health(self) -> Dict:
+        """→ {"state": "ok"|"degraded", ...}.  Degraded when the drain
+        (dispatch) or resolver thread has been inside one call longer
+        than ``stall_after_s`` — the precursor to every client future
+        hanging — or when the watchdog escalated a persistent-straggler
+        verdict on recent batches."""
+        now = time.perf_counter()
+        stalled, stalled_s = None, 0.0
+        for name, t0 in (("dispatch", self._dispatch_started),
+                         ("resolve", self._resolve_started)):
+            if t0 is not None and now - t0 > self.stall_after_s:
+                if now - t0 > stalled_s:
+                    stalled, stalled_s = name, now - t0
+        state = "degraded" if (stalled or self.watchdog.escalations) \
+            else "ok"
+        return {"state": state, "stalled_thread": stalled,
+                "stalled_s": round(stalled_s, 3),
+                "slow_batches": len(self.watchdog.flagged_steps),
+                "escalations": len(self.watchdog.escalations)}
 
     def _pick_locked(self):
         """→ (key, head_enq_time, full) or None.  A FULL lane (≥
@@ -244,21 +319,26 @@ class BucketBatcher:
                 self._resq.put(_CLOSE)
                 return
             futs = [f for _, f, _ in batch]
+            t_disp = time.perf_counter()
+            self._dispatch_started = t_disp
             try:
                 handle = self._dispatch(key, [x for x, _, _ in batch])
             except Exception as e:  # noqa: BLE001
+                self._dispatch_started = None
                 for f in futs:
                     _set_exception(f, e)
                 continue
+            self._dispatch_started = None
             self.batches_run += 1
-            self._resq.put((handle, futs))   # bounded → backpressure
+            self._resq.put((handle, futs, t_disp))  # bounded → backpressure
 
     def _resolve_loop(self) -> None:
         while True:
             entry = self._resq.get()
             if entry is _CLOSE:
                 return
-            handle, futs = entry
+            handle, futs, t_disp = entry
+            self._resolve_started = time.perf_counter()
             try:
                 outs = self._resolve(handle)
                 for f, out in zip(futs, outs):
@@ -266,7 +346,12 @@ class BucketBatcher:
             except Exception as e:  # noqa: BLE001
                 for f in futs:
                     _set_exception(f, e)
+            self._resolve_started = None
             self.requests_served += len(futs)
+            # one watchdog step per batch: dispatch → futures resolved
+            self.watchdog.end_step(
+                self.batches_run,
+                duration=time.perf_counter() - t_disp)
 
     def close(self) -> None:
         """Flush every lane (or fail futures on dispatch/resolve

@@ -42,6 +42,26 @@ them through its all-empty-bins path (score = bias); schemes without
 empty semantics (``minwise``, densified ``oph``) reject them at
 ``submit`` — their hash of an empty set is undefined sentinel garbage.
 
+Operability (the network tier's substrate — see ``serving.server``):
+
+  * VERSIONED WEIGHTS — the live params are one immutable
+    ``serving.reload.WeightSet`` (version + per-replica device
+    handles); ``swap_weights`` publishes a new set with a single
+    reference swap, and a micro-batch dispatch reads the reference
+    exactly once, so every score is computed against exactly one
+    version — echoed on the result (``result.version``).
+  * STATS — ``submit`` feeds a ``serving.stats.StatsWindow`` (rolling
+    latency/rows/tenant window); ``stats()`` is the thread-safe
+    snapshot behind ``GET /status``: p50/p95/p99, rows/s, per-lane
+    occupancy, ``compile_misses``, per-tenant counts, batcher health.
+  * ADAPTIVE BUCKETS — with ``adapt_every=N``, every N submits the
+    engine re-derives the nnz lane grid from the batcher's observed
+    size histogram (``adapt_buckets()``), precompiles any new shapes
+    on a background thread, then swaps the grid — a skewed workload
+    converges to tighter padding than the static config grid without
+    a restart (traffic during the swap routes on whichever grid it
+    caught; both are precompiled).
+
 ``greedy_generate`` — reference LM decode loop over any ModelAPI
 (prefill + KV-cache decode), used by the serving example and tests.
 """
@@ -62,8 +82,35 @@ from repro.launch.mesh import make_replica_mesh
 from repro.models.linear import (BBitLinearConfig, bbit_scores,
                                  bbit_scores_packed)
 from repro.serving.batcher import BucketBatcher
+from repro.serving.reload import WeightSet
+from repro.serving.stats import StatsWindow
 
 DEFAULT_NNZ_BUCKETS = (128, 512, 2048, 8192, 32768)
+
+
+class VersionedScore(float):
+    """A score that knows which model version produced it — a plain
+    ``float`` everywhere (math, JSON, numpy) plus ``.version``."""
+    __slots__ = ("version",)
+
+    def __new__(cls, value, version: str):
+        obj = super().__new__(cls, value)
+        obj.version = version
+        return obj
+
+
+class VersionedVector(np.ndarray):
+    """Multiclass twin of ``VersionedScore``: an ndarray row of scores
+    carrying ``.version``."""
+
+    def __new__(cls, arr, version: str):
+        obj = np.asarray(arr).view(cls)
+        obj.version = version
+        return obj
+
+    def __array_finalize__(self, obj):
+        if obj is not None:
+            self.version = getattr(obj, "version", None)
 
 
 def _grow_bucket(n: int, buckets: Sequence[int]) -> int:
@@ -86,7 +133,10 @@ class HashedClassifierEngine:
                  nnz_buckets: Sequence[int] = DEFAULT_NNZ_BUCKETS,
                  row_buckets: Optional[Sequence[int]] = None,
                  precompile: bool = True,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2,
+                 stats_window: int = 2048,
+                 adapt_every: int = 0,
+                 version: str = "v0"):
         self.cfg = cfg
         self.scheme = make_scheme(scheme, cfg.k, seed)
         self.family = getattr(self.scheme, "family", None)
@@ -104,13 +154,25 @@ class HashedClassifierEngine:
 
         self.mesh = make_replica_mesh(replicas)
         self.devices = list(self.mesh.devices.flat)
-        # params replicated ONCE — each micro-batch reuses its
-        # replica's resident copy, no per-request weight traffic
-        self._params = [jax.device_put(params, d) for d in self.devices]
-        self.params = self._params[0]
+        # params replicated ONCE per version — each micro-batch reuses
+        # its replica's resident copy, no per-request weight traffic;
+        # the WeightSet is swapped atomically by ``swap_weights``
+        self._weights = WeightSet(
+            version=version,
+            params=tuple(jax.device_put(params, d)
+                         for d in self.devices),
+            created_at=time.time())
+        self.reloads = 0
+        self._swap_lock = threading.Lock()
         self._rr = 0
         self._rr_lock = threading.Lock()
         self.device_batches = [0] * len(self.devices)
+        self.stats_window = StatsWindow(stats_window)
+        self.adapt_every = int(adapt_every)
+        self.rebuckets = 0
+        self._submits = 0
+        self._adapting = threading.Event()
+        self._started_at = time.time()
 
         scheme_obj, lcfg = self.scheme, cfg
 
@@ -157,17 +219,26 @@ class HashedClassifierEngine:
         """Compile every (row_bucket, nnz_bucket, replica) lane shape up
         front — steady-state traffic then never pays a compile spike."""
         t0 = time.perf_counter()
+        self._precompile_grid(self.nnz_buckets, self.row_buckets)
+        self.precompile_seconds = time.perf_counter() - t0
+
+    def _precompile_grid(self, nnz_buckets: Sequence[int],
+                         row_buckets: Sequence[int]) -> None:
+        """Compile any not-yet-seen shapes of a lane grid (jit caches
+        by shape, so a weight swap never re-pays this)."""
+        w = self._weights
         for d, dev in enumerate(self.devices):
-            for m in self.nnz_buckets:
+            for m in nnz_buckets:
                 idx = jax.device_put(np.zeros((1, m), np.int32), dev)
                 nnz = jax.device_put(np.ones((1,), np.int32), dev)
-                for r in self.row_buckets:
+                for r in row_buckets:
+                    if (r, m, d) in self._compiled:
+                        continue
                     ib = jnp.broadcast_to(idx, (r, m))
                     zb = jnp.broadcast_to(nnz, (r,))
-                    self._score_fn(ib, zb, self._params[d]) \
+                    self._score_fn(ib, zb, w.params[d]) \
                         .block_until_ready()
                     self._compiled.add((r, m, d))
-        self.precompile_seconds = time.perf_counter() - t0
 
     # ----------------------------------------------------------- scoring --
     def _validate(self, doc) -> np.ndarray:
@@ -194,10 +265,14 @@ class HashedClassifierEngine:
         return d
 
     def _dispatch_batch(self, key: int, docs: List[np.ndarray],
-                        device_index: Optional[int] = None) -> Tuple:
+                        device_index: Optional[int] = None,
+                        weights: Optional[WeightSet] = None) -> Tuple:
         """Pad ``docs`` to the (row_bucket, key) lane shape and issue
         the fused scorer asynchronously (runs on the drain thread; the
-        blocking sync happens in ``_resolve_batch``)."""
+        blocking sync happens in ``_resolve_batch``).  Reads the live
+        ``WeightSet`` reference exactly ONCE, so the whole batch scores
+        against one version even if a reload lands mid-flight."""
+        w = self._weights if weights is None else weights
         n = len(docs)
         rows = self._row_bucket(n)
         # pad_rows owns the id-folding policy (indices ≥ 2^31 fold to
@@ -213,33 +288,175 @@ class HashedClassifierEngine:
         self.device_batches[d] += 1
         scores = self._score_fn(jax.device_put(idx, dev),
                                 jax.device_put(nnz, dev),
-                                self._params[d])
+                                w.on(d))
         shape_key = (rows, key, d)
         if shape_key not in self._compiled:
             self.compile_misses += 1
             self._compiled.add(shape_key)
-        return scores, n
+        return scores, n, w.version
 
     def _resolve_batch(self, handle: Tuple) -> List:
-        scores, n = handle
-        return list(np.asarray(scores)[:n])
+        scores, n, version = handle
+        host = np.asarray(scores)
+        if host.ndim == 1:
+            return [VersionedScore(x, version) for x in host[:n]]
+        return [VersionedVector(row, version) for row in host[:n]]
 
     # ------------------------------------------------------------- API ----
-    def submit(self, doc: Sequence[int]):
-        """Validate + route one doc; returns a Future of its score."""
-        return self.batcher.submit(self._validate(doc))
+    def submit(self, doc: Sequence[int], tenant: Optional[str] = None):
+        """Validate + route one doc; returns a Future of its score (a
+        ``VersionedScore`` — a float carrying ``.version``).  Resolve
+        latency and the optional ``tenant`` feed the stats window."""
+        arr = self._validate(doc)
+        t0 = time.perf_counter()
+        fut = self.batcher.submit(arr)
+
+        def _record(f, t0=t0, tenant=tenant):
+            self.stats_window.record(
+                time.perf_counter() - t0, rows=1, tenant=tenant,
+                error=(not f.cancelled()
+                       and f.exception() is not None))
+
+        fut.add_done_callback(_record)
+        if self.adapt_every:
+            self._submits += 1
+            if self._submits % self.adapt_every == 0:
+                self._adapt_async()
+        return fut
 
     def score_docs(self, docs: Sequence[Sequence[int]],
-                   device_index: Optional[int] = None) -> np.ndarray:
+                   device_index: Optional[int] = None,
+                   weights: Optional[WeightSet] = None) -> np.ndarray:
         """Synchronous batch scoring, bypassing the batcher (the
         batcher-off baseline; also what tests use as the oracle).
-        Thread-safe.  Batches wider than the configured buckets compile
-        on first use (counted in ``compile_misses``)."""
+        Thread-safe.  ``weights`` pins the batch to a specific
+        ``WeightSet`` (version-exact oracles, mixed-version repair in
+        the HTTP tier).  Batches wider than the configured buckets
+        compile on first use (counted in ``compile_misses``)."""
         items = [self._validate(d) for d in docs]
         key = self._nnz_bucket(max((len(d) for d in items), default=1))
         handle = self._dispatch_batch(key, items,
-                                      device_index=device_index)
-        return np.asarray(self._resolve_batch(handle))
+                                      device_index=device_index,
+                                      weights=weights)
+        scores, n, _ = handle
+        return np.asarray(scores)[:n]
+
+    # ------------------------------------------------- versioned weights --
+    @property
+    def params(self):
+        """The replica-0 resident params of the live version (template
+        for checkpoint restores; back-compat accessor)."""
+        return self._weights.params[0]
+
+    @property
+    def version(self) -> str:
+        return self._weights.version
+
+    def current_weights(self) -> WeightSet:
+        """The live immutable WeightSet (pin it to score version-exact
+        across a reload)."""
+        return self._weights
+
+    def swap_weights(self, params, version: Optional[str] = None) -> str:
+        """Atomically publish a new weight version.
+
+        The new set is fully staged off to the side (structure check
+        against the live tree, device_put per replica, blocked until
+        resident) and then swapped in with ONE reference assignment —
+        concurrent batches score against exactly the old or exactly the
+        new version, and in-flight batches keep the set they captured.
+        Returns the new version string.
+        """
+        live = jax.tree.structure(self._weights.params[0])
+        new = jax.tree.structure(params)
+        if live != new:
+            raise ValueError(
+                f"swap_weights: params tree structure {new} does not "
+                f"match the live tree {live} — same model config "
+                "required for a hot swap")
+        for a, b in zip(jax.tree.leaves(self._weights.params[0]),
+                        jax.tree.leaves(params)):
+            if tuple(np.shape(a)) != tuple(np.shape(b)):
+                raise ValueError(
+                    f"swap_weights: leaf shape {np.shape(b)} does not "
+                    f"match the live leaf {np.shape(a)} — a hot swap "
+                    "cannot change k/b/n_classes")
+        with self._swap_lock:
+            version = version or f"v{self.reloads + 1}"
+            staged = tuple(jax.device_put(params, d)
+                           for d in self.devices)
+            for tree in staged:
+                jax.block_until_ready(tree)
+            self._weights = WeightSet(version=version, params=staged,
+                                      created_at=time.time())
+            self.reloads += 1
+        return version
+
+    # ------------------------------------------------- adaptive buckets --
+    def _adapt_async(self) -> None:
+        """Kick one background re-derivation (submit must never block
+        on precompiles; overlapping triggers collapse into one)."""
+        if self._adapting.is_set():
+            return
+        self._adapting.set()
+
+        def run():
+            try:
+                self.adapt_buckets()
+            finally:
+                self._adapting.clear()
+
+        threading.Thread(target=run, daemon=True,
+                         name="serve-adapt").start()
+
+    def adapt_buckets(self, max_buckets: Optional[int] = None,
+                      coverage: float = 0.995) -> Tuple[int, ...]:
+        """Re-derive the nnz lane grid from observed traffic.
+
+        Precompiles any new (row × nnz × replica) shapes FIRST, then
+        swaps the grid, so post-swap traffic still never pays a
+        serve-time compile.  No-op (returns the current grid) until the
+        batcher has seen enough samples or when the suggestion matches
+        the live grid.  Requests racing the swap route on whichever
+        grid they caught — both grids' shapes are compiled.
+        """
+        suggestion = self.batcher.suggest_buckets(
+            max_buckets=max_buckets or len(self.nnz_buckets),
+            coverage=coverage)
+        if not suggestion or tuple(suggestion) == self.nnz_buckets:
+            return self.nnz_buckets
+        self._precompile_grid(suggestion, self.row_buckets)
+        self.nnz_buckets = tuple(suggestion)   # route() reads this live
+        self.rebuckets += 1
+        return self.nnz_buckets
+
+    # -------------------------------------------------------- stats -------
+    def stats(self) -> dict:
+        """Thread-safe operability snapshot (the ``GET /status`` body):
+        rolling latency percentiles + rows/s + per-tenant counts from
+        the stats window, queue depths and per-lane occupancy, compile
+        and reload counters, and the batcher's watchdog health."""
+        snap = self.stats_window.snapshot()
+        depths = self.batcher.depths()
+        snap.update(
+            version=self._weights.version,
+            reloads=self.reloads,
+            uptime_s=time.time() - self._started_at,
+            compile_misses=self.compile_misses,
+            precompile_seconds=self.precompile_seconds,
+            batches_run=self.batcher.batches_run,
+            requests_served=self.batcher.requests_served,
+            device_batches=list(self.device_batches),
+            lanes={str(k): v for k, v in depths["lanes"].items()},
+            queued=depths["queued"],
+            inflight_batches=depths["inflight_batches"],
+            pipeline_depth=depths["depth"],
+            nnz_buckets=list(self.nnz_buckets),
+            row_buckets=list(self.row_buckets),
+            rebuckets=self.rebuckets,
+            health=self.batcher.health(),
+        )
+        return snap
 
     def close(self):
         self.batcher.close()

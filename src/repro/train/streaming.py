@@ -354,6 +354,14 @@ def fit_streaming(
                 "hits": np.int64(hits), "seen": np.int64(seen),
                 "fingerprint": fingerprint}
         ckpt.save(ckpt_dir, shards_done, tree)
+        # also publish the current EVAL iterate (Polyak average once
+        # the tail window opened, else the raw iterate) as a params-
+        # only snapshot under <ckpt_dir>/serve — what a live server's
+        # /reload (serving.reload) swaps in without a restart
+        serve_now = (astate.avg_params
+                     if float(astate.avg_count) > 0
+                     else astate.state.params)
+        ckpt.publish_params(ckpt_dir, shards_done, serve_now)
 
     # ---- event stream: serial or grouped, inline or prefetched ------
     if dp:

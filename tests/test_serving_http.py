@@ -1,0 +1,448 @@
+"""HTTP serving tier: admission/backpressure, stats correctness,
+graceful drain under load, versioned hot-reload exactness, adaptive
+bucket convergence, and watchdog-backed health."""
+import json
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.ckpt import checkpoint as ckpt
+from repro.models.linear import BBitLinearConfig, init_bbit_linear
+from repro.serving import (AdmissionController, BucketBatcher, Draining,
+                           HashedClassifierEngine, HTTPStatusError,
+                           NnzHistogram, Overloaded, ScoreClient,
+                           ScoreServer, StatsWindow, VersionedScore)
+
+
+def _mk_engine(key=0, version="v0", **kw):
+    cfg = BBitLinearConfig(k=8, b=4)
+    params = init_bbit_linear(cfg, jax.random.key(key))
+    kw.setdefault("scheme", "oph")
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_wait_ms", 20.0)
+    kw.setdefault("nnz_buckets", (16, 64))
+    return HashedClassifierEngine(params, cfg, seed=3, version=version,
+                                  **kw), cfg
+
+
+# Bitwise notes: per-row scores are bit-identical GIVEN the same padded
+# batch shape (PR-5's contract); XLA may differ in the last ulp across
+# row-bucket shapes.  Bitwise tests therefore send exactly ``max_batch``
+# same-lane docs per request — the lane fills and dispatches as ONE
+# deterministic full batch, the same shape ``score_docs`` pads the
+# oracle to.
+
+
+def _docs(n, rng=None, lo=3, hi=14):
+    rng = rng or np.random.default_rng(5)
+    return [np.sort(rng.choice(50000, size=int(rng.integers(lo, hi)),
+                               replace=False)) for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def served():
+    eng, _cfg = _mk_engine()
+    srv = ScoreServer(eng, port=0)
+    srv.start_in_thread()
+    client = ScoreClient("127.0.0.1", srv.port)
+    yield eng, srv, client
+    client.close()
+    srv.request_drain()
+    assert srv.wait_finished(timeout=30)
+
+
+# ------------------------------------------------------------- stats ----
+
+def test_stats_window_percentiles_match_numpy():
+    w = StatsWindow(256)
+    rng = np.random.default_rng(0)
+    lats = rng.gamma(2.0, 0.01, size=200)
+    for x in lats:
+        w.record(float(x), rows=2, tenant="t")
+    s = w.snapshot()
+    assert s["count"] == 200
+    for q, key in ((50, "p50_ms"), (95, "p95_ms"), (99, "p99_ms")):
+        assert s[key] == pytest.approx(
+            float(np.percentile(lats * 1e3, q)), rel=1e-6)
+    assert s["per_tenant_rows"] == {"t": 400}
+
+
+def test_stats_window_wraps_to_most_recent():
+    w = StatsWindow(8)
+    for x in [5.0] * 8 + [1.0] * 8:   # old epoch fully overwritten
+        w.record(x)
+    s = w.snapshot()
+    assert s["count"] == 16           # lifetime count
+    assert s["window"] == 8
+    assert s["p99_ms"] == pytest.approx(1000.0)
+
+
+def test_nnz_histogram_suggests_tight_buckets():
+    h = NnzHistogram()
+    rng = np.random.default_rng(1)
+    for n in rng.integers(3, 30, size=500):
+        h.record(int(n))
+    assert h.suggest_buckets(min_samples=1000) is None  # not enough yet
+    got = h.suggest_buckets(max_buckets=4, min_samples=64)
+    assert got and max(got) <= 32     # pow-2 edges covering nnz<30
+    assert list(got) == sorted(got)
+
+
+# --------------------------------------------------------- admission ----
+
+def test_admission_rejects_fast_and_drains():
+    a = AdmissionController(limit=4, retry_after_s=0.2)
+    a.acquire(3)
+    with pytest.raises(Overloaded) as exc:
+        a.acquire(2)                  # 3+2 > 4
+    assert exc.value.retry_after_s == pytest.approx(0.2)
+    a.acquire(1)                      # exactly at the limit is fine
+    a.begin_drain()
+    with pytest.raises(Draining):
+        a.acquire(1)
+    assert not a.wait_idle(timeout=0.05)   # 4 rows still held
+    a.release(3)
+    a.release(1)
+    assert a.wait_idle(timeout=5)
+    snap = a.snapshot()
+    assert snap == {"inflight": 0, "limit": 4, "draining": True,
+                    "admitted": 4, "rejected": 2, "refused_draining": 1}
+
+
+# -------------------------------------------------------- HTTP basics ----
+
+def test_http_score_bitwise_matches_oracle(served):
+    eng, _srv, client = served
+    docs = _docs(8)                   # exactly max_batch → one full batch
+    resp = client.score(docs, tenant="alpha")
+    want = np.asarray(eng.score_docs(docs), np.float64)
+    assert resp["version"] == "v0"
+    assert np.array_equal(np.asarray(resp["scores"], np.float64).ravel(),
+                          want.ravel())
+
+
+def test_http_ndjson_streams_in_order_with_versions(served):
+    eng, _srv, client = served
+    docs = _docs(8, rng=np.random.default_rng(9))
+    lines = client.score_ndjson(docs)
+    assert [ln["i"] for ln in lines] == list(range(8))
+    assert all(ln["version"] == "v0" for ln in lines)
+    want = np.asarray(eng.score_docs(docs), np.float64)
+    got = np.asarray([ln["score"] for ln in lines], np.float64)
+    assert np.array_equal(got.ravel(), want.ravel())
+
+
+def test_http_rejects_malformed_input(served):
+    _eng, _srv, client = served
+    for bad in ({"docs": []}, {"docs": "nope"}, {"docs": [["a"]]},
+                {"docs": [[-3, 4]]}):
+        with pytest.raises(HTTPStatusError) as exc:
+            client._json_call("POST", "/score", bad)
+        assert exc.value.status == 400
+    with pytest.raises(HTTPStatusError) as exc:
+        client._json_call("GET", "/nope")
+    assert exc.value.status == 404
+    with pytest.raises(HTTPStatusError) as exc:
+        client._json_call("GET", "/score")
+    assert exc.value.status == 405
+
+
+def test_http_429_backpressure_with_retry_after(served):
+    _eng, srv, client = served
+    with pytest.raises(HTTPStatusError) as exc:
+        client.score([[1, 2, 3]] * (srv.admission.limit + 1))
+    assert exc.value.status == 429
+    assert exc.value.retry_after_s and exc.value.retry_after_s > 0
+    assert srv.admission.rejected >= srv.admission.limit + 1
+
+
+def test_http_status_reflects_traffic(served):
+    eng, _srv, client = served
+    before = client.status()["engine"]["count"]
+    lats = []
+    for _ in range(6):
+        t0 = time.perf_counter()
+        client.score(_docs(4), tenant="beta")
+        lats.append(time.perf_counter() - t0)
+    st = client.status()
+    e = st["engine"]
+    assert st["health"] == "ok"
+    assert e["count"] == before + 24
+    assert e["per_tenant_rows"]["beta"] == 24
+    assert 0 < e["p50_ms"] <= e["p95_ms"] <= e["p99_ms"]
+    # engine-side latency is submit→resolve; it must sit below the
+    # client-observed HTTP round-trip for the same traffic
+    assert e["p50_ms"] <= float(np.percentile(np.array(lats) * 1e3, 99))
+    assert e["compile_misses"] == 0
+    assert st["admission"]["inflight"] == 0
+    hz = client.healthz()
+    assert hz["health"] == "ok"
+
+
+# ------------------------------------------------------------ reload ----
+
+def test_hot_reload_versions_are_exact_under_traffic():
+    from repro.serving.reload import WeightSet
+
+    eng, cfg = _mk_engine(key=0, version="old")
+    new_params = init_bbit_linear(cfg, jax.random.key(7))
+    srv = ScoreServer(eng, port=0)
+    srv.start_in_thread()
+    docs = _docs(8, rng=np.random.default_rng(3))  # one full batch
+    # both single-version oracles from the SAME engine, each pinned to
+    # its WeightSet, same (8, nnz_bucket) shape the server batches at
+    want_old = np.asarray(
+        eng.score_docs(docs, weights=eng.current_weights()), np.float64)
+    w_new = WeightSet(version="staged", params=tuple(
+        jax.device_put(new_params, d) for d in eng.devices))
+    want_new = np.asarray(eng.score_docs(docs, weights=w_new),
+                          np.float64)
+    assert not np.array_equal(want_old, want_new)
+
+    tmp = tempfile.mkdtemp()
+    ckpt.publish_params(tmp, 9, new_params)
+
+    stop = threading.Event()
+    failures, seen_versions = [], set()
+
+    def hammer():
+        c = ScoreClient("127.0.0.1", srv.port)
+        while not stop.is_set():
+            r = c.score(docs)
+            got = np.asarray(r["scores"], np.float64).ravel()
+            seen_versions.add(r["version"])
+            if r["version"] == "old":
+                want = want_old
+            elif r["version"] == "ckpt-9":
+                want = want_new
+            else:
+                failures.append(("unknown-version", r["version"]))
+                continue
+            if not np.array_equal(got, want.ravel()):
+                failures.append((r["version"], got.tolist()))
+        c.close()
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    ctl = ScoreClient("127.0.0.1", srv.port)
+    time.sleep(0.15)
+    info = ctl.reload(tmp)           # mid-traffic swap
+    assert info["version"] == "ckpt-9" and info["previous"] == "old"
+    time.sleep(0.15)
+    stop.set()
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert not failures, failures[:2]
+    assert seen_versions == {"old", "ckpt-9"}   # traffic saw both sides
+    ctl.close()
+    srv.request_drain()
+    assert srv.wait_finished(timeout=30)
+
+
+def test_reload_errors_leave_weights_untouched(served):
+    eng, _srv, client = served
+    before = eng.version
+    with pytest.raises(HTTPStatusError) as exc:
+        client.reload(tempfile.mkdtemp())         # nothing there
+    assert exc.value.status == 404
+    wrong = init_bbit_linear(BBitLinearConfig(k=16, b=4),
+                             jax.random.key(1))
+    tmp = tempfile.mkdtemp()
+    ckpt.publish_params(tmp, 1, wrong)            # k mismatch
+    with pytest.raises(HTTPStatusError) as exc:
+        client.reload(tmp)
+    assert exc.value.status == 409
+    assert eng.version == before
+
+
+def test_mixed_version_batch_is_repaired_to_one_version():
+    """If a reload lands between one request's micro-batches, /score
+    re-scores pinned to one WeightSet — the response never mixes."""
+    from repro.serving.reload import WeightSet
+
+    class StubEngine:
+        version = "w2"
+
+        def __init__(self):
+            self.pinned_calls = []
+            self._w = WeightSet(version="w2", params=(None,))
+
+        def submit(self, doc, tenant=None):
+            import concurrent.futures
+            f = concurrent.futures.Future()
+            # deterministically mixed: half old, half new
+            v = "w1" if len(self.pinned_calls) == 0 and doc[0] % 2 else "w2"
+            f.set_result(VersionedScore(float(doc[0]), v))
+            return f
+
+        def current_weights(self):
+            return self._w
+
+        def score_docs(self, docs, weights=None):
+            self.pinned_calls.append(weights)
+            return np.asarray([float(d[0]) * 10 for d in docs],
+                              np.float32)
+
+        def stats(self):
+            return {"version": self.version, "health": {"state": "ok"}}
+
+        def close(self):
+            pass
+
+    eng = StubEngine()
+    srv = ScoreServer(eng, port=0,
+                      admission=AdmissionController(limit=64))
+    srv.start_in_thread()
+    client = ScoreClient("127.0.0.1", srv.port)
+    resp = client.score([[1], [2], [3], [4]])
+    assert resp["version"] == "w2"
+    assert eng.pinned_calls == [eng._w]     # repair used the pinned set
+    assert resp["scores"] == [10.0, 20.0, 30.0, 40.0]
+    client.close()
+    srv.request_drain()
+    assert srv.wait_finished(timeout=10)
+
+
+# ------------------------------------------------------------- drain ----
+
+def test_graceful_drain_under_load_drops_nothing():
+    eng, _cfg = _mk_engine(max_wait_ms=5.0)
+    srv = ScoreServer(eng, port=0)
+    srv.start_in_thread()
+    results, errors = [], []
+    stop = threading.Event()
+
+    def hammer(seed):
+        c = ScoreClient("127.0.0.1", srv.port, timeout=30)
+        docs = _docs(4, rng=np.random.default_rng(seed))
+        while not stop.is_set():
+            try:
+                r = c.score(docs)
+                results.append(len(r["scores"]))
+            except HTTPStatusError as e:
+                if e.status == 503:       # refused during drain — fine
+                    return
+                errors.append(e)
+                return
+            except OSError:               # socket closed post-drain
+                return
+        c.close()
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.3)                       # real load in flight
+    srv.request_drain()
+    assert srv.wait_finished(timeout=30)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive()
+    assert not errors, errors[:2]
+    assert results                         # traffic actually flowed
+    assert all(n == 4 for n in results)    # every 200 was complete
+    assert srv.drained_clean is True
+    assert srv.admission.snapshot()["inflight"] == 0
+
+
+# ------------------------------------------------- adaptive buckets ----
+
+def test_adaptive_buckets_converge_on_skewed_workload():
+    eng, _cfg = _mk_engine(nnz_buckets=(2048, 8192),
+                           max_batch=4)     # grid far too wide
+    before = eng.nnz_buckets
+    docs = _docs(96, rng=np.random.default_rng(2), lo=3, hi=14)
+    for f in [eng.submit(d) for d in docs]:
+        f.result(timeout=60)
+    got = eng.adapt_buckets(max_buckets=3)
+    assert eng.rebuckets == 1
+    assert got != before and max(got) <= 16   # converged to the traffic
+    # post-rebucket traffic scores correctly on the new lanes with no
+    # serve-time compiles (adapt precompiled them first); groups of
+    # exactly max_batch same-lane docs → deterministic full batches,
+    # bitwise-comparable to the same-shape score_docs oracle
+    misses = eng.compile_misses
+    rng = np.random.default_rng(8)
+    for _ in range(3):
+        group = _docs(4, rng=rng, lo=9, hi=14)   # all route to lane 16
+        futs = [eng.submit(d) for d in group]
+        got_scores = np.asarray([float(f.result(timeout=60))
+                                 for f in futs], np.float64)
+        want = np.asarray(eng.score_docs(group), np.float64)
+        assert np.array_equal(got_scores.ravel(), want.ravel())
+    assert eng.compile_misses == misses
+    eng.close()
+
+
+def test_adapt_every_triggers_background_rebucket():
+    eng, _cfg = _mk_engine(nnz_buckets=(2048, 8192), max_batch=4,
+                           adapt_every=80)
+    docs = _docs(200, rng=np.random.default_rng(4), lo=3, hi=14)
+    for f in [eng.submit(d) for d in docs]:
+        f.result(timeout=60)
+    deadline = time.time() + 30
+    while eng.rebuckets == 0 and time.time() < deadline:
+        time.sleep(0.05)
+    assert eng.rebuckets >= 1
+    assert max(eng.nnz_buckets) <= 16
+    eng.close()
+
+
+# ---------------------------------------------------------- watchdog ----
+
+def test_stalled_resolve_flips_health_degraded():
+    gate = threading.Event()
+
+    def dispatch(key, items):
+        return items
+
+    def resolve(handle):
+        gate.wait(5)                   # a wedged device sync
+        return [x * 2 for x in handle]
+
+    b = BucketBatcher(dispatch, resolve, route=lambda x: 1, max_batch=2,
+                      max_wait_ms=1.0, stall_after_s=0.05)
+    assert b.health()["state"] == "ok"
+    fut = b.submit(3)
+    deadline = time.time() + 5
+    while b.health()["state"] == "ok" and time.time() < deadline:
+        time.sleep(0.01)
+    h = b.health()
+    assert h["state"] == "degraded"
+    assert h["stalled_thread"] == "resolve"
+    assert h["stalled_s"] >= 0.05
+    gate.set()
+    assert fut.result(timeout=10) == 6
+    # recovers once unwedged (the resolver clears its live stall stamp
+    # just after resolving futures — poll briefly)
+    deadline = time.time() + 5
+    while b.health()["state"] != "ok" and time.time() < deadline:
+        time.sleep(0.01)
+    assert b.health()["state"] == "ok"
+    b.close()
+
+
+def test_degraded_health_surfaces_in_status_endpoint():
+    eng, _cfg = _mk_engine()
+    srv = ScoreServer(eng, port=0)
+    srv.start_in_thread()
+    client = ScoreClient("127.0.0.1", srv.port)
+    # wedge the batcher's resolve by monkeypatching the live timestamp
+    eng.batcher._resolve_started = time.perf_counter() - 60.0
+    eng.batcher.stall_after_s = 1.0
+    st = client.status()
+    assert st["health"] == "degraded"
+    with pytest.raises(HTTPStatusError) as exc:
+        client.healthz()
+    assert exc.value.status == 503
+    eng.batcher._resolve_started = None
+    assert client.status()["health"] == "ok"
+    client.close()
+    srv.request_drain()
+    assert srv.wait_finished(timeout=30)
