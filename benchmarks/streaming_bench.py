@@ -25,7 +25,12 @@ expanded-rcv1 corpus into a multi-shard format-v3 archive, then train
     reason — which is why the corpus-config ``dp2`` record documents
     accuracy parity, not speed);
   * ``onepass …_stream`` / ``…_in_memory`` — the PR-3 legacy pair:
-    one-pass streaming vs ``load_hashed`` + ``train_bbit_sgd``.
+    one-pass streaming vs ``load_hashed`` + ``train_bbit_sgd``;
+  * ``ckpt_write`` / ``time_to_recover`` — the crash-safety tax and
+    payoff: the durable (tmp+fsync+rename, per-leaf CRC32) checkpoint
+    write/restore cost at this model size, and the wall clock for the
+    supervised restart loop to recover from an injected mid-run crash
+    and finish bit-identical to the uninterrupted run.
 
 Each overlap/scaling variant runs in its OWN subprocess (fresh compile
 cache, own XLA device count) and fits TWICE: the first (cold) call
@@ -36,9 +41,11 @@ fits are bit-identical (a determinism canary on every bench run).
 
 ``--smoke`` (CI) runs a tiny archive instead and asserts the
 determinism contract: prefetch-on equals prefetch-off BITWISE, two
-identical runs produce bit-identical params, and a kill
+identical runs produce bit-identical params, a kill
 (``stop_after_shards``) + resume reproduces the uninterrupted run
-exactly — any drift fails the merge.
+exactly, and an injected-crash round (torn first checkpoint write +
+a mid-shard process crash, ``ft.faults``) self-heals under
+``run_supervised`` back to the same bits — any drift fails the merge.
 """
 from __future__ import annotations
 
@@ -245,9 +252,36 @@ def _smoke() -> list:
             resumed = fit_streaming(root, lcfg, ckpt_dir=ck, **kw)
             assert same(on.params, resumed.params), \
                 "kill/resume drifted from the uninterrupted run"
+        # injected-crash round: tear the first checkpoint write AND
+        # kill a mid-shard step — the supervised restart loop must
+        # quarantine, fall back, replay, and still land bit-identical
+        from repro.ft import BackoffPolicy, FaultEvent, FaultPlan, faults
+        from repro.train import RestartPolicy, run_supervised
+        with tempfile.TemporaryDirectory() as ck:
+            plan = FaultPlan([FaultEvent(site="ckpt_write", times=1),
+                              FaultEvent(site="train_step", step=5,
+                                         times=1)])
+            pol = RestartPolicy(max_restarts=3,
+                                backoff=BackoffPolicy(base_s=0.005,
+                                                      factor=2.0,
+                                                      cap_s=0.02,
+                                                      jitter_frac=0.0))
+            with faults.arm(plan):
+                sup = run_supervised(root, lcfg, policy=pol,
+                                     ckpt_dir=ck, **kw)
+            assert sup.restarts == 2, sup.crashes
+            assert same(on.params, sup.result.params), \
+                "supervised crash-recovery drifted from the " \
+                "uninterrupted run"
+            assert (on.examples_seen == sup.result.examples_seen
+                    and on.progressive_acc
+                    == sup.result.progressive_acc), \
+                "crash recovery broke the progressive counters"
     return emit([("streaming/smoke_determinism_k16_b4", 0.0,
                   f"rows={n_tr};resume_bit_identical=1;"
-                  "prefetch_bit_identical=1")])
+                  "prefetch_bit_identical=1;"
+                  f"supervised_crash_bit_identical=1;"
+                  f"injected_restarts={sup.restarts}")])
 
 
 # -------------------------------------------------------- full tier -------
@@ -303,6 +337,50 @@ def streaming_bench() -> list:
                              lr=LR, seed=0)
         rows_s_mem = (EPOCHS * n_tr) / max(mem.train_seconds, 1e-9)
 
+        # crash-safety records (PR 7): the durable (fsync + CRC)
+        # checkpoint write/restore cost at this model size, and the
+        # wall clock to recover from an injected mid-run crash under
+        # the supervised restart loop (backoff + quarantine-checked
+        # restore + replay to completion of the interrupted pass).
+        import jax
+        from repro.ckpt import checkpoint as ckpt_mod
+        from repro.ft import BackoffPolicy, FaultEvent, FaultPlan, faults
+        from repro.train import (RestartPolicy, run_supervised,
+                                 trees_bitwise_equal)
+        state_tree = {"params": [np.asarray(x)
+                                 for x in jax.tree.leaves(res.params)]}
+        ck_io = os.path.join(root, "ckpt_io_bench")
+        t_saves, t_restores = [], []
+        for i in range(5):
+            t0 = time.perf_counter()
+            ckpt_mod.save(ck_io, i + 1, state_tree)
+            t_saves.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            ckpt_mod.restore(ck_io, state_tree)
+            t_restores.append(time.perf_counter() - t0)
+        t_save = float(np.median(t_saves))
+        t_restore = float(np.median(t_restores))
+
+        ck_rec = os.path.join(root, "ckpt_recover_bench")
+        crash_step = res.n_steps // 2
+        plan = FaultPlan([FaultEvent(site="train_step", step=crash_step,
+                                     times=1)])
+        pol = RestartPolicy(max_restarts=2,
+                            backoff=BackoffPolicy(base_s=0.005,
+                                                  factor=2.0, cap_s=0.02,
+                                                  jitter_frac=0.0))
+        with faults.arm(plan):
+            sup = run_supervised(root, lcfg, policy=pol, ckpt_dir=ck_rec,
+                                 **CONFIG.stream_kwargs(
+                                     epochs=EPOCHS, batch_size=BATCH,
+                                     lr=LR, data_parallel=None), seed=0)
+        assert sup.restarts == 1
+        assert trees_bitwise_equal(res.params, sup.result.params), \
+            "supervised crash-recovery drifted from the plain run"
+        t_recover = sup.crashes[0].recover_s
+        n_saves = max(1, res.shards_processed // CONFIG.ckpt_every_shards)
+        ckpt_overhead = t_save * n_saves / max(t_stream, 1e-9)
+
     return emit([
         (f"streaming/prefetch_off_k{K}_b{B}", off["warm_s"] * 1e6,
          f"rows_per_s={off['rows_per_s']:.0f};"
@@ -332,6 +410,14 @@ def streaming_bench() -> list:
          f"rows_per_s={rows_s_mem:.0f};test_acc={mem.test_acc:.4f};"
          f"load_s={t_load:.3f};"
          f"stream_vs_mem={rows_s_stream / max(rows_s_mem, 1e-9):.2f}x"),
+        (f"streaming/ckpt_write_k{K}_b{B}", t_save * 1e6,
+         f"restore_us={t_restore * 1e6:.0f};fsync=1;crc32=1;"
+         f"leaves={len(state_tree['params'])};ring_keep=3;"
+         f"onepass_overhead={ckpt_overhead:.4f}x"),
+        (f"streaming/time_to_recover_k{K}_b{B}", t_recover * 1e6,
+         f"crash_step={crash_step};restarts={sup.restarts};"
+         f"bit_identical=1;"
+         "note=backoff+validated_restore+replay_to_completion"),
     ])
 
 

@@ -15,7 +15,13 @@ The paper's 200 GB pipeline end to end, in miniature:
      (``prefetch=0``) reproduces the overlapped one bit-for-bit;
   4. a simulated kill (``stop_after_shards``) + resume from the
      shard-boundary checkpoint reproduces the uninterrupted run
-     bit-for-bit.
+     bit-for-bit;
+  5. surviving a crash (PR 7): a deterministic fault plan
+     (``ft.faults``) tears the first checkpoint write and kills a
+     mid-shard train step; ``run_supervised`` quarantines the damaged
+     checkpoint, restores the newest valid one after a capped backoff,
+     replays the stream — and still lands on the same bits as the
+     uninterrupted run.
 
 At no point does the (n, k) training matrix exist in memory.  On a
 multi-device host (``XLA_FLAGS=--xla_force_host_platform_device_count=2``
@@ -33,8 +39,9 @@ from repro.configs.rcv1_oph import CONFIG
 from repro.data import (SynthRcv1Config, generate_arrays,
                         preprocess_and_save, preprocess_rows,
                         shard_row_counts)
+from repro.ft import BackoffPolicy, FaultEvent, FaultPlan, faults
 from repro.models.linear import BBitLinearConfig, predict_classes
-from repro.train import fit_streaming
+from repro.train import RestartPolicy, fit_streaming, run_supervised
 from repro.train.metrics import accuracy, trees_bitwise_equal
 
 
@@ -85,6 +92,32 @@ def main() -> None:
               f"to step {resumed.n_steps}: bit-identical={same}")
         assert same and not part.completed and resumed.completed
         assert acc_avg > 0.9
+
+        # -------- surviving a crash: the supervised restart loop ----
+        # A scripted disaster: the FIRST checkpoint write is torn (the
+        # payload never hits disk though the rename did), the process
+        # dies, and once restarted it dies AGAIN mid-shard at step 40.
+        # run_supervised absorbs both: the torn checkpoint fails its
+        # CRC check, is quarantined under <ckpt_dir>/quarantine/, and
+        # training replays from the newest valid state — bit-identical
+        # to the run that never crashed, because batch replay is a pure
+        # function of (seed, epoch, position).
+        print("surviving a crash: torn checkpoint write + mid-shard "
+              "kill under run_supervised…")
+        plan = FaultPlan([FaultEvent(site="ckpt_write", times=1),
+                          FaultEvent(site="train_step", step=40,
+                                     times=1)])
+        policy = RestartPolicy(
+            max_restarts=3,
+            backoff=BackoffPolicy(base_s=0.05, cap_s=0.5))
+        with faults.arm(plan):
+            sup = run_supervised(root, lcfg, policy=policy,
+                                 ckpt_dir=work + "/ckpt_crash", **kw)
+        healed = trees_bitwise_equal(res.params, sup.result.params)
+        print(f"  {sup.restarts} restarts "
+              f"({[c.error for c in sup.crashes]}), "
+              f"recovered bit-identical={healed}")
+        assert healed and sup.restarts == 2
 
 if __name__ == "__main__":
     main()

@@ -3,9 +3,13 @@
 A job checkpointed on one topology (e.g. 512 chips) restores on another
 (e.g. 256 after losing a pod): checkpoints are topology-free host
 arrays, and ``reshard`` places them under the *new* mesh's shardings.
-The launcher (launch/train.py) wires this together with
-``mesh_from_available_devices`` so a restarted job simply uses whatever
-devices exist — the elastic-scaling story for node failures.
+``train.streaming.fit_streaming(elastic=True)`` wires this together
+with ``mesh_from_available_devices`` + ``physical_data_world`` so a
+restarted job simply uses whatever devices exist: the LOGICAL
+data-parallel world (the shard-group schedule, pinned by the run
+fingerprint) stays fixed while the PHYSICAL realization folds
+``logical // physical`` shard slots onto each live device — the
+elastic-scaling story for node failures.
 """
 from __future__ import annotations
 
@@ -13,6 +17,21 @@ from typing import Any, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def physical_data_world(logical: int,
+                        n_devices: Optional[int] = None) -> int:
+    """The data-mesh size a ``data_parallel=logical`` run uses on this
+    host: the largest divisor of ``logical`` that fits the visible
+    device count, so every device carries the same whole number of
+    shard slots (``fold = logical // physical``)."""
+    if logical < 1:
+        raise ValueError(f"logical world must be >= 1, got {logical}")
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    p = min(logical, max(n, 1))
+    while logical % p:
+        p -= 1
+    return p
 
 
 def reshard(tree: Any, shardings: Any) -> Any:

@@ -69,6 +69,17 @@ class OPHPaperConfig:
     serve_stats_window: int = 4096
     serve_adapt_every: int = 0
     serve_inflight_limit: Optional[int] = None
+    # fault tolerance (PR 7): the supervised restart loop around
+    # fit_streaming — restart budget + capped exponential backoff
+    # between restarts — the checkpoint ring depth (fallback set when
+    # the newest checkpoint is torn/corrupt), and elastic resume
+    # (fold the logical data-parallel world onto however many devices
+    # are alive; power-of-two counts stay bit-identical)
+    ft_max_restarts: int = 3
+    ft_backoff_base_s: float = 1.0
+    ft_backoff_cap_s: float = 60.0
+    ft_ckpt_keep_last: int = 3
+    ft_elastic: bool = True
 
     def linear_config(self) -> BBitLinearConfig:
         return BBitLinearConfig(k=self.k, b=self.b,
@@ -83,9 +94,25 @@ class OPHPaperConfig:
                   lr=self.stream_lr, avg_start_frac=self.avg_start_frac,
                   ckpt_every_shards=self.ckpt_every_shards,
                   prefetch=self.stream_prefetch,
-                  data_parallel=self.stream_data_parallel)
+                  data_parallel=self.stream_data_parallel,
+                  elastic=self.ft_elastic,
+                  ckpt_keep_last=self.ft_ckpt_keep_last)
         kw.update(overrides)
         return kw
+
+    def restart_policy(self):
+        """The ``train.supervisor.RestartPolicy`` for production runs
+        at this config (``launch/train.py --supervise``): a restart
+        budget with capped exponential backoff — long waits, because a
+        real crash usually means the box needs a moment."""
+        from repro.ft.retry import BackoffPolicy
+        from repro.train.supervisor import RestartPolicy
+        return RestartPolicy(
+            max_restarts=self.ft_max_restarts,
+            backoff=BackoffPolicy(base_s=self.ft_backoff_base_s,
+                                  factor=2.0,
+                                  cap_s=self.ft_backoff_cap_s,
+                                  jitter_frac=0.1, seed=self.seed))
 
     def serve_kwargs(self, **overrides) -> dict:
         """Keyword arguments for ``serving.HashedClassifierEngine`` at

@@ -7,11 +7,12 @@ from repro.data.packing import pad_rows, batch_iterator, bucket_width
 from repro.data.hashed_dataset import (
     preprocess_rows, preprocess_rows_packed, save_hashed, load_hashed,
     iter_hashed, iter_packed, iter_hashed_batches, load_packed_shard,
-    shard_row_counts, preprocess_and_save, HashedShardWriter,
+    shard_row_counts, preprocess_and_save, verify_shard,
+    HashedShardWriter, ShardCorruptionError, ShardReadError,
 )
 from repro.data.prefetch import (
-    StreamBatch, Boundary, shard_order, serial_batch_stream,
-    group_batch_stream, ThreadedPrefetcher,
+    StreamBatch, Boundary, ShardStreamError, shard_order,
+    serial_batch_stream, group_batch_stream, ThreadedPrefetcher,
 )
 from repro.data.loader import HashedCodesLoader, SparseRowsLoader
 from repro.data.lm_synth import token_batch, lm_example_stream
@@ -23,9 +24,10 @@ __all__ = [
     "preprocess_rows", "preprocess_rows_packed", "save_hashed",
     "load_hashed", "iter_hashed", "iter_packed", "iter_hashed_batches",
     "load_packed_shard", "shard_row_counts", "preprocess_and_save",
-    "HashedShardWriter",
-    "StreamBatch", "Boundary", "shard_order", "serial_batch_stream",
-    "group_batch_stream", "ThreadedPrefetcher",
+    "verify_shard", "HashedShardWriter", "ShardCorruptionError",
+    "ShardReadError",
+    "StreamBatch", "Boundary", "ShardStreamError", "shard_order",
+    "serial_batch_stream", "group_batch_stream", "ThreadedPrefetcher",
     "HashedCodesLoader", "SparseRowsLoader",
     "token_batch", "lm_example_stream",
 ]

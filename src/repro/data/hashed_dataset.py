@@ -19,12 +19,14 @@ resident and streaming**:
     ``HashedShardWriter`` — the full (n, k) code matrix is never
     materialized.
 
-Shard format (format_version 3, written by ``preprocess_and_save``):
+Shard format (format_version 4, written by ``preprocess_and_save``;
+v3 archives — same file layout minus checksums — read unchanged):
 
   <root>/meta.json                   {format_version, scheme, k, b,
                                       family, seed, n, shards,
-                                      packed_width, seconds_hashing,
-                                      mnnz_per_s, total_nnz}
+                                      packed_width, shard_checksums,
+                                      seconds_hashing, mnnz_per_s,
+                                      total_nnz}
   <root>/hashed_00000.codes.npy      packed uint8 (rows, ceil(kb/8))
   <root>/hashed_00000.labels.npy     int32 (rows,)
   <root>/hashed_00000.rows.npy       int64 (rows,) original row ids
@@ -38,6 +40,19 @@ restores the original row order and ``iter_hashed`` streams shard-sized
 pieces with ``np.load(mmap_mode=...)`` — no all-shards concatenation.
 Plain ``.npy`` members (not ``.npz``) are what makes the mmap path
 possible.
+
+Durability contract (PR 7): ``HashedShardWriter`` records a CRC32 per
+shard file in ``meta.json`` (``shard_checksums`` — the v3→v4 bump; v3
+archives simply have none recorded); ``verify_shard`` recomputes and
+compares on demand — an offline fsck, not a per-read tax on the mmap
+hot path.  ``load_packed_shard`` retries transient ``OSError``s with
+bounded deterministic backoff (``repro.ft.retry.BackoffPolicy``);
+persistent failures raise ``ShardReadError`` with full (root, shard,
+attempts) context after recording the shard in the module-level
+``quarantined_shards`` registry — loud accounting, never a silent
+skip.  When a ``repro.ft.faults.FaultPlan`` is armed, its
+``shard_read`` events fire *inside* the retry scope, so a transient
+injected ``IOError`` is absorbed exactly like a real one.
 
 Training consumes the archive without EVER widening a full shard
 (PR 3, the train-from-shards path):
@@ -66,9 +81,11 @@ from __future__ import annotations
 
 import collections
 import json
+import logging
 import os
 import time
-from typing import Iterator, Optional, Sequence, Tuple
+import zlib
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -78,8 +95,37 @@ from repro.core.oph import OPH_EMPTY_CODE
 from repro.core.schemes import make_scheme
 from repro.core.universal_hash import make_hash_family
 from repro.data.packing import pad_rows
+from repro.ft import faults
+from repro.ft.retry import BackoffPolicy
 
-FORMAT_VERSION = 3
+FORMAT_VERSION = 4
+
+log = logging.getLogger("repro.data")
+
+# transient-read policy: small, capped, jitter-free (deterministic)
+READ_RETRIES = 2
+READ_BACKOFF = BackoffPolicy(base_s=0.01, factor=2.0, cap_s=0.25,
+                             jitter_frac=0.0)
+
+# loud accounting for shards whose reads exhausted their retries —
+# keyed by archive root, values are shard ids; reset per process.
+quarantined_shards: Dict[str, List[int]] = {}
+
+
+class ShardReadError(RuntimeError):
+    """A shard read kept failing after bounded retries (persistent
+    corruption / dead disk, as opposed to a transient hiccup)."""
+
+    def __init__(self, msg: str, *, root: str, shard: int,
+                 attempts: int):
+        super().__init__(msg)
+        self.root = root
+        self.shard = shard
+        self.attempts = attempts
+
+
+class ShardCorruptionError(RuntimeError):
+    """``verify_shard`` found bytes that contradict the recorded CRCs."""
 
 # Chunks kept in flight on the device before the oldest is synced —
 # depth 2 = classic double buffering (enqueue i+1 while i computes).
@@ -227,6 +273,10 @@ def preprocess_rows_packed(
     return out, emp
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
 class HashedShardWriter:
     """Streaming format-v3 shard writer: append packed chunks as they
     arrive, flush ``rows_per_shard``-row shards incrementally.
@@ -259,6 +309,7 @@ class HashedShardWriter:
         self._buffered = 0
         self._shard = 0
         self._closed = False
+        self._checksums: List[dict] = []
         # None until the first append decides; every later append must
         # agree — an oph_zero stream that mixes empty=None and non-None
         # chunks would otherwise silently desync the per-shard
@@ -330,9 +381,13 @@ class HashedShardWriter:
         np.save(base + ".codes.npy", codes)
         np.save(base + ".labels.npy", labels)
         np.save(base + ".rows.npy", rows)
+        crcs = {"codes": _crc(codes), "labels": _crc(labels),
+                "rows": _crc(rows)}
         if self._has_empty:
             empty, self._empty = self._take(self._empty, count)
             np.save(base + ".empty.npy", empty)
+            crcs["empty"] = _crc(empty)
+        self._checksums.append(crcs)
         self._buffered -= count
         self._shard += 1
 
@@ -345,7 +400,8 @@ class HashedShardWriter:
         meta = dict(format_version=FORMAT_VERSION, scheme=self.scheme,
                     k=self.k, b=self.b, family=self.family, seed=self.seed,
                     n=self.n_total, shards=self._shard,
-                    packed_width=packed_width(self.k, self.b))
+                    packed_width=packed_width(self.k, self.b),
+                    shard_checksums=self._checksums)
         if stats:
             meta.update(stats)
         with open(os.path.join(self.root, "meta.json"), "w") as f:
@@ -459,18 +515,81 @@ def load_packed_shard(
     meta = _read_meta(root) if meta is None else meta
     if meta["format_version"] >= 3:
         mode = "r" if mmap else None
-        base = os.path.join(root, f"hashed_{s:05d}")
-        packed = np.load(base + ".codes.npy", mmap_mode=mode)
-        labels = np.asarray(np.load(base + ".labels.npy", mmap_mode=mode))
-        rows = np.asarray(np.load(base + ".rows.npy", mmap_mode=mode))
-        epath = base + ".empty.npy"
-        empty = (np.load(epath, mmap_mode=mode)
-                 if os.path.exists(epath) else None)
-        return packed, labels, rows, empty
+
+        def _open():
+            if faults._ACTIVE is not None:
+                faults.on_shard_read(root, s)
+            base = os.path.join(root, f"hashed_{s:05d}")
+            packed = np.load(base + ".codes.npy", mmap_mode=mode)
+            labels = np.asarray(np.load(base + ".labels.npy",
+                                        mmap_mode=mode))
+            rows = np.asarray(np.load(base + ".rows.npy",
+                                      mmap_mode=mode))
+            epath = base + ".empty.npy"
+            empty = (np.load(epath, mmap_mode=mode)
+                     if os.path.exists(epath) else None)
+            return packed, labels, rows, empty
+
+        # bounded retry-with-backoff on transient I/O errors; a read
+        # that keeps failing is recorded in ``quarantined_shards`` and
+        # surfaces as ShardReadError with full context — never a
+        # silent skip, never an unbounded hang.
+        attempts = READ_RETRIES + 1
+        for attempt in range(attempts):
+            try:
+                return _open()
+            except FileNotFoundError:
+                raise            # a missing shard file is not transient
+            except OSError as e:
+                last = e
+                if attempt + 1 < attempts:
+                    log.warning(
+                        "transient error reading shard %d of %r "
+                        "(attempt %d/%d): %s — retrying",
+                        s, root, attempt + 1, attempts, e)
+                    time.sleep(READ_BACKOFF.delay_s(attempt))
+        quarantined_shards.setdefault(root, []).append(int(s))
+        log.error(
+            "shard %d of %r failed all %d read attempts — quarantined "
+            "(run verify_shard to check recorded CRCs): %s",
+            s, root, attempts, last)
+        raise ShardReadError(
+            f"shard {s} of {root!r} failed all {attempts} read "
+            f"attempts: {last}", root=root, shard=int(s),
+            attempts=attempts) from last
     z = np.load(os.path.join(root, f"hashed_{s:05d}.npz"))
     rows = np.arange(s, meta["n"], meta["shards"], dtype=np.int64)
     return (z["codes"], z["labels"], rows,
             z["empty"] if "empty" in z else None)
+
+
+def verify_shard(root: str, s: int,
+                 meta: Optional[dict] = None) -> Optional[dict]:
+    """Recomputes shard ``s``'s file CRC32s against the ``meta.json``
+    record (format v4+).  Returns the recomputed dict on success, None
+    when the archive predates checksums (v3 and older), and raises
+    ``ShardCorruptionError`` naming every mismatching file otherwise —
+    the offline fsck behind the loud-quarantine story."""
+    meta = _read_meta(root) if meta is None else meta
+    recorded = meta.get("shard_checksums")
+    if not recorded or s >= len(recorded):
+        return None
+    packed, labels, rows, empty = load_packed_shard(
+        root, s, meta=meta, mmap=False)
+    got = {"codes": _crc(packed), "labels": _crc(labels),
+           "rows": _crc(rows)}
+    if empty is not None:
+        got["empty"] = _crc(empty)
+    bad = [name for name, want in recorded[s].items()
+           if got.get(name) != int(want)]
+    if bad:
+        quarantined_shards.setdefault(root, []).append(int(s))
+        log.error("shard %d of %r is corrupt: CRC mismatch on %s",
+                  s, root, bad)
+        raise ShardCorruptionError(
+            f"shard {s} of {root!r} is corrupt: CRC mismatch on "
+            f"{bad} (recorded {recorded[s]}, recomputed {got})")
+    return got
 
 
 def iter_packed(

@@ -41,7 +41,13 @@ checkpoints with prefetch on or off (tested), and a run checkpointed
 under one depth resumes under any other.
 
 Exceptions raised by the producer surface in the consumer at the point
-of the failed event; ``close()`` (also called when the consumer loop
+of the failed event WITH the producer thread's original traceback; a
+failure inside a shard's read/slice path is wrapped in
+``ShardStreamError`` carrying (shard, epoch, position) context, so the
+consumer learns exactly where the stream died.  Should the producer
+thread die without managing to post its error sentinel, the consumer's
+``next()`` detects the dead thread and raises instead of hanging on
+the queue forever.  ``close()`` (also called when the consumer loop
 exits early, e.g. ``stop_after_shards``) unblocks and joins the thread.
 """
 from __future__ import annotations
@@ -56,9 +62,27 @@ import numpy as np
 from repro.data.hashed_dataset import iter_hashed_batches
 
 __all__ = [
-    "StreamBatch", "Boundary", "shard_order", "serial_batch_stream",
-    "group_batch_stream", "ThreadedPrefetcher",
+    "StreamBatch", "Boundary", "ShardStreamError", "shard_order",
+    "serial_batch_stream", "group_batch_stream", "ThreadedPrefetcher",
 ]
+
+
+class ShardStreamError(RuntimeError):
+    """A shard's read/slice path failed inside a batch stream.
+
+    Carries the (shard, epoch, position) the stream died at; the
+    original failure is chained as ``__cause__`` with its full
+    traceback (the batch streams raise via ``raise ... from``), so a
+    consumer on the other side of a ``ThreadedPrefetcher`` sees both
+    the where and the why.
+    """
+
+    def __init__(self, msg: str, *, shard: int, epoch: int,
+                 position: int):
+        super().__init__(msg)
+        self.shard = shard
+        self.epoch = epoch
+        self.position = position
 
 
 @dataclasses.dataclass
@@ -132,12 +156,20 @@ def serial_batch_stream(
         first = start_pos if epoch == start_epoch else 0
         for pos in range(first, n_shards):
             s = int(order[pos])
-            for bp, bl, _rid, bem in iter_hashed_batches(
-                    root, batch_size, shard_ids=[s],
-                    perm_seed=(seed, epoch), mmap=mmap):
-                _mask_consistent(bem, has_empty, s, root)
-                yield StreamBatch(args=transfer(bp, bem, bl),
-                                  n_rows=len(bl))
+            try:
+                for bp, bl, _rid, bem in iter_hashed_batches(
+                        root, batch_size, shard_ids=[s],
+                        perm_seed=(seed, epoch), mmap=mmap):
+                    _mask_consistent(bem, has_empty, s, root)
+                    yield StreamBatch(args=transfer(bp, bem, bl),
+                                      n_rows=len(bl))
+            except Exception as e:
+                # GeneratorExit (consumer close) is BaseException —
+                # deliberately not caught here
+                raise ShardStreamError(
+                    f"shard {s} failed at epoch {epoch} position {pos} "
+                    f"of {root!r}: {e}", shard=s, epoch=epoch,
+                    position=pos) from e
             next_epoch, next_pos = ((epoch, pos + 1)
                                     if pos + 1 < n_shards
                                     else (epoch + 1, 0))
@@ -204,8 +236,19 @@ def group_batch_stream(
                 for d, it in enumerate(iters):
                     if t >= n_batches[d]:
                         continue
-                    bp, bl, _rid, bem = next(it)
-                    _mask_consistent(bem, has_empty, group[d], root)
+                    try:
+                        bp, bl, _rid, bem = next(it)
+                        _mask_consistent(bem, has_empty, group[d], root)
+                    except StopIteration as e:
+                        raise RuntimeError(
+                            f"shard {group[d]} yielded fewer batches "
+                            f"than its row count promised") from e
+                    except Exception as e:
+                        raise ShardStreamError(
+                            f"shard {group[d]} (device slot {d}) failed "
+                            f"at epoch {epoch} position {lo + d} of "
+                            f"{root!r}: {e}", shard=group[d],
+                            epoch=epoch, position=lo + d) from e
                     m = len(bl)
                     codes[d, :m] = bp
                     labels[d, :m] = bl
@@ -272,11 +315,28 @@ class ThreadedPrefetcher:
     def __next__(self):
         if self._done:
             raise StopIteration
-        kind, val = self._q.get()
+        while True:
+            try:
+                kind, val = self._q.get(timeout=0.25)
+                break
+            except queue.Empty:
+                # the sentinel protocol means a live producer ALWAYS
+                # eventually posts; a dead thread with an empty queue
+                # means it was killed before its error/done sentinel
+                # could land (e.g. interpreter teardown) — surface
+                # that instead of blocking forever
+                if not self._thread.is_alive():
+                    self._done = True
+                    raise RuntimeError(
+                        "prefetch producer thread died without "
+                        "delivering an event or error sentinel — "
+                        "the stream is lost") from None
         if kind == "item":
             return val
         self._done = True
         if kind == "error":
+            # re-raise the producer's exception with its original
+            # traceback (it travelled on the exception object)
             raise val
         raise StopIteration
 

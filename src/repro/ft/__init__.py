@@ -1,0 +1,22 @@
+"""Fault-tolerance substrate: deterministic fault injection
+(``faults``), capped-exponential retry backoff (``retry``), and
+straggler/step-latency accounting (``watchdog``).
+
+Training-side consumers: ``train.streaming`` (hook sites + watchdog
+wiring), ``train.supervisor`` (restart loop), ``ckpt.checkpoint``
+(torn-write injection), ``data.hashed_dataset`` (transient shard-read
+faults + bounded retry).  Serving reuses ``BackoffPolicy`` for the
+ScoreClient's opt-in 429/503 retry.
+"""
+from repro.ft.faults import (
+    FaultEvent, FaultPlan, InjectedCrash, active, arm, arm_plan, disarm,
+)
+from repro.ft.retry import BackoffPolicy
+from repro.ft.watchdog import FailureInjector, StepWatchdog
+
+__all__ = [
+    "FaultEvent", "FaultPlan", "InjectedCrash", "active", "arm",
+    "arm_plan", "disarm",
+    "BackoffPolicy",
+    "FailureInjector", "StepWatchdog",
+]

@@ -1,0 +1,178 @@
+"""Deterministic, seeded fault injection for the streaming trainer.
+
+The crash-equivalence tests (tests/test_fault_tolerance.py) and the
+supervised-restart benchmark need *reproducible* production failures:
+a process crash at train step N, a transient ``IOError`` on a shard
+read, a torn (partially-persisted) checkpoint write, an injected slow
+step for the straggler watchdog.  This module is the single switch for
+all of them:
+
+  * a ``FaultPlan`` is an ordered list of ``FaultEvent``s, each naming
+    a hook site and a trigger (step / shard / checkpoint step) plus how
+    many times it fires (``times=None`` = persistent — the model for a
+    genuinely corrupt disk block, as opposed to a transient hiccup);
+  * ``arm(plan)`` installs the plan process-wide; hook points in
+    ``train.streaming.fit_streaming``, ``data.hashed_dataset
+    .load_packed_shard`` and ``ckpt.checkpoint.save`` consult it.
+    Every call site guards on the module global first::
+
+        if faults._ACTIVE is not None:
+            faults.on_train_step(step)
+
+    so the unarmed cost is one global load + identity check — zero
+    overhead on the hot path when no plan is armed (the default);
+  * firing counts live ON the plan (``FaultEvent.fired``), so one plan
+    armed across a supervised restart loop injects its crash exactly
+    ``times`` times and then lets the retries succeed — which is what
+    makes the crash-equivalence property testable in-process.
+
+Injected failures are ordinary exceptions: ``InjectedCrash`` (a
+``RuntimeError`` — the supervisor treats it like any worker death) and
+a plain ``IOError`` for shard reads (so the reader's bounded
+retry-with-backoff path handles it exactly like a real transient I/O
+error).  The torn-checkpoint event is special: the hook *returns a
+directive* and ``ckpt.checkpoint.save`` implements the tear itself
+(write, truncate the payload, complete the rename + manifest update,
+then crash) — simulating the real-world failure where the rename is
+durable but the data pages never hit disk.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import List, Optional
+
+__all__ = [
+    "FaultEvent", "FaultPlan", "InjectedCrash", "arm", "arm_plan",
+    "disarm", "active", "on_train_step", "on_shard_read",
+    "on_ckpt_write",
+]
+
+
+class InjectedCrash(RuntimeError):
+    """A planned process-crash stand-in: raised out of a hook site and
+    (in the supervised loop) handled exactly like a worker death."""
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One planned failure.
+
+    ``site`` selects the hook:
+
+      * ``"train_step"`` — raise ``InjectedCrash`` when the trainer's
+        global step equals ``step``;
+      * ``"slow_step"``  — sleep ``delay_s`` before that step runs (the
+        straggler the ``StepWatchdog`` should flag);
+      * ``"shard_read"`` — raise ``IOError`` from the packed-shard
+        reader when it opens shard ``shard`` (``None`` = any shard);
+      * ``"ckpt_write"`` — tear the checkpoint written at checkpoint
+        step ``at_save`` (``None`` = the next save): the payload is
+        truncated *after* the atomic rename completes, then
+        ``InjectedCrash`` is raised.
+
+    ``times`` bounds how often the event fires (``None`` = every match,
+    the persistent-corruption model); ``fired`` counts firings.
+    """
+    site: str
+    step: Optional[int] = None
+    shard: Optional[int] = None
+    at_save: Optional[int] = None
+    times: Optional[int] = 1
+    delay_s: float = 0.0
+    mode: str = "torn"
+    fired: int = 0
+
+    def _take(self) -> bool:
+        if self.times is not None and self.fired >= self.times:
+            return False
+        self.fired += 1
+        return True
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """An ordered set of planned failures, armed process-wide via
+    ``arm``/``arm_plan``.  The plan is stateful: each event remembers
+    how often it fired, so the same plan object armed across a
+    supervised restart sequence injects each failure exactly as
+    scripted."""
+    events: List[FaultEvent]
+    seed: int = 0
+
+    def matching(self, site: str):
+        return [e for e in self.events if e.site == site]
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def arm_plan(plan: Optional[FaultPlan]) -> None:
+    """Installs ``plan`` process-wide (``None`` disarms)."""
+    global _ACTIVE
+    _ACTIVE = plan
+
+
+def disarm() -> None:
+    arm_plan(None)
+
+
+def active() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def arm(plan: FaultPlan):
+    """Context manager: arm ``plan`` for the enclosed block only."""
+    prev = _ACTIVE
+    arm_plan(plan)
+    try:
+        yield plan
+    finally:
+        arm_plan(prev)
+
+
+# ------------------------------------------------------- hook sites ----
+
+def on_train_step(step: int) -> None:
+    """Called by the trainer before dispatching global step ``step``."""
+    plan = _ACTIVE
+    if plan is None:
+        return
+    for ev in plan.matching("slow_step"):
+        if ev.step == step and ev._take():
+            time.sleep(ev.delay_s)
+    for ev in plan.matching("train_step"):
+        if ev.step == step and ev._take():
+            raise InjectedCrash(f"injected crash at train step {step}")
+
+
+def on_shard_read(root: str, shard: int) -> None:
+    """Called by the packed-shard reader before touching shard files —
+    inside its retry loop, so a transient event (small ``times``) is
+    absorbed by the retries while a persistent one (``times=None``)
+    exhausts them."""
+    plan = _ACTIVE
+    if plan is None:
+        return
+    for ev in plan.matching("shard_read"):
+        if (ev.shard is None or ev.shard == shard) and ev._take():
+            raise IOError(
+                f"injected transient IOError reading shard {shard} "
+                f"of {root!r} (firing {ev.fired}"
+                f"{'' if ev.times is None else f'/{ev.times}'})")
+
+
+def on_ckpt_write(step: int) -> Optional[str]:
+    """Called by ``ckpt.checkpoint.save``; returns a directive
+    (``"torn"``) when this save should be sabotaged, else ``None``.
+    The saver implements the directive and raises ``InjectedCrash``
+    after registering the damaged checkpoint."""
+    plan = _ACTIVE
+    if plan is None:
+        return None
+    for ev in plan.matching("ckpt_write"):
+        if (ev.at_save is None or ev.at_save == step) and ev._take():
+            return ev.mode
+    return None

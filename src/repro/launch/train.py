@@ -1,19 +1,27 @@
 """Training launcher — the paper's end-to-end pipeline, production-shaped.
 
-Two entry modes:
+Three entry modes:
 
   * ``--mode linear`` (default; the paper's workload): synthetic
     expanded-rcv1 → one-time b-bit minwise hashing (cached on disk, the
     §6 economics) → distributed LR/SVM training with checkpoint/resume,
     failure injection, straggler watchdog, and optional b-bit gradient
     compression.
+  * ``--mode stream``: the production path — ``fit_streaming`` over a
+    sharded packed archive UNDER the supervised restart loop
+    (``train.supervisor.run_supervised``): crashes restore from the
+    newest valid checkpoint (torn/corrupt ones are quarantined) after a
+    capped backoff, ``elastic`` folds the logical data-parallel world
+    onto whatever devices are alive, and ``--fail-at`` injects a
+    deterministic crash to watch it self-heal.
   * ``--mode lm``: trains a (reduced) LM-zoo arch on synthetic tokens
     through the same TrainState/checkpoint machinery (smoke-scale on
     CPU; the full configs are exercised by the dry-run).
 
 Restart contract: the loader replays batches as a pure function of the
-global step, so kill → relaunch produces bitwise-identical parameters
-(tested in tests/test_checkpoint.py).
+global step (streaming: of ``(seed, epoch, position)``), so kill →
+relaunch produces bitwise-identical parameters (tested in
+tests/test_checkpoint.py and tests/test_fault_tolerance.py).
 """
 from __future__ import annotations
 
@@ -101,6 +109,56 @@ def run_linear(args) -> dict:
                 steps=int(min(total_steps, step + 1)))
 
 
+def run_stream(args) -> dict:
+    """Supervised streaming training over a sharded packed archive:
+    crash-safe checkpoints, quarantine-checked restore, elastic device
+    folding, straggler watchdog — the single-host production loop."""
+    from repro.configs.rcv1_oph import CONFIG
+    from repro.data import (SynthRcv1Config, generate_arrays,
+                            preprocess_and_save, shard_row_counts)
+    from repro.ft import FaultEvent, FaultPlan, StepWatchdog, faults
+    from repro.models.linear import BBitLinearConfig
+    from repro.train import run_supervised
+
+    hashed_dir = os.path.join(args.workdir, "shards")
+    if not os.path.exists(os.path.join(hashed_dir, "meta.json")):
+        rows, labels = generate_arrays(
+            args.n_docs, SynthRcv1Config(
+                seed=args.seed, topic_tokens=150, background_frac=0.35,
+                max_pairs_per_doc=8000, max_triples_per_doc=4000))
+        stats = preprocess_and_save(hashed_dir, rows, labels,
+                                    k=args.k, b=args.b, seed=args.seed,
+                                    n_shards=4)
+        print(f"preprocessed {stats['n']} docs into 4 shards in "
+              f"{stats['seconds_hashing']:.1f}s (one-time cost)")
+
+    if args.fail_at is not None:
+        faults.arm_plan(FaultPlan([
+            FaultEvent(site="train_step", step=args.fail_at, times=1)]))
+    watchdog = StepWatchdog()
+    sup = run_supervised(
+        hashed_dir, BBitLinearConfig(k=args.k, b=args.b),
+        policy=CONFIG.restart_policy(), watchdog=watchdog,
+        ckpt_dir=os.path.join(args.workdir, "ckpt_stream"),
+        seed=args.seed,
+        **CONFIG.stream_kwargs(epochs=args.epochs,
+                               batch_size=args.batch_size, lr=args.lr,
+                               ckpt_every_shards=1,
+                               data_parallel=args.data_parallel))
+    faults.disarm()
+    res = sup.result
+    n_rows = sum(shard_row_counts(hashed_dir))
+    print(f"streamed {n_rows} rows x {args.epochs} epochs in "
+          f"{res.train_seconds:.1f}s: progressive_acc="
+          f"{res.progressive_acc:.4f} steps={res.n_steps} "
+          f"restarts={sup.restarts} "
+          f"stragglers={sup.straggler_escalations} "
+          f"topology={res.topology_lineage}")
+    return dict(progressive_acc=res.progressive_acc,
+                steps=res.n_steps, restarts=sup.restarts,
+                crashes=[c.error for c in sup.crashes])
+
+
 def run_lm(args) -> dict:
     import jax
     import jax.numpy as jnp
@@ -160,7 +218,8 @@ def run_lm(args) -> dict:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="linear", choices=["linear", "lm"])
+    ap.add_argument("--mode", default="linear",
+                    choices=["linear", "stream", "lm"])
     ap.add_argument("--workdir", default="artifacts/train")
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--n-docs", type=int, default=2000)
@@ -174,10 +233,17 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a failure at this step (FT testing)")
+    ap.add_argument("--epochs", type=int, default=1,
+                    help="stream mode: passes over the archive")
+    ap.add_argument("--data-parallel", type=int, default=None,
+                    help="stream mode: logical data-parallel world "
+                         "(elastic — folds onto available devices)")
     args = ap.parse_args()
     os.makedirs(args.workdir, exist_ok=True)
     if args.mode == "linear":
         run_linear(args)
+    elif args.mode == "stream":
+        run_stream(args)
     else:
         run_lm(args)
 

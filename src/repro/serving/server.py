@@ -59,6 +59,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.ft.retry import BackoffPolicy
 from repro.serving.admission import (AdmissionController, Draining,
                                      Overloaded)
 from repro.serving.reload import ReloadManager
@@ -474,10 +475,28 @@ class HTTPStatusError(RuntimeError):
 
 class ScoreClient:
     """Minimal blocking keep-alive client for examples/benches/tests
-    (stdlib ``http.client``; one instance per thread)."""
+    (stdlib ``http.client``; one instance per thread).
 
-    def __init__(self, host: str, port: int, timeout: float = 120.0):
+    ``retries > 0`` opts JSON calls into bounded retry on 429
+    (admission Overloaded) and 503 (Draining): each rejected attempt
+    waits out max(the server's ``Retry-After`` hint, the capped
+    exponential backoff with deterministic jitter from
+    ``repro.ft.retry.BackoffPolicy(seed=retry_seed)``), then reissues
+    the request.  Other statuses (and exhausted retries) raise
+    ``HTTPStatusError`` exactly as with ``retries=0`` (the default —
+    no behavior change for existing callers).
+    """
+
+    def __init__(self, host: str, port: int, timeout: float = 120.0,
+                 *, retries: int = 0,
+                 backoff: Optional["BackoffPolicy"] = None,
+                 retry_seed: int = 0):
         self.host, self.port, self.timeout = host, port, timeout
+        self.retries = int(retries)
+        self.backoff = (BackoffPolicy(base_s=0.02, factor=2.0,
+                                      cap_s=1.0, jitter_frac=0.1,
+                                      seed=retry_seed)
+                        if backoff is None else backoff)
         self._conn: Optional[http.client.HTTPConnection] = None
 
     def _connection(self) -> http.client.HTTPConnection:
@@ -513,17 +532,24 @@ class ScoreClient:
         return resp
 
     def _json_call(self, method, path, body=None, headers=None):
-        resp = self.request(method, path, body, headers)
-        data = resp.read()
-        try:
-            obj = json.loads(data) if data else None
-        except json.JSONDecodeError:
-            obj = data.decode("latin-1", "replace")
-        if resp.status >= 300:
+        for attempt in range(self.retries + 1):
+            resp = self.request(method, path, body, headers)
+            data = resp.read()
+            try:
+                obj = json.loads(data) if data else None
+            except json.JSONDecodeError:
+                obj = data.decode("latin-1", "replace")
+            if resp.status < 300:
+                return obj
             ra = resp.getheader("Retry-After")
-            raise HTTPStatusError(resp.status, obj,
+            err = HTTPStatusError(resp.status, obj,
                                   retry_after_s=float(ra) if ra else None)
-        return obj
+            if resp.status not in (429, 503) or attempt >= self.retries:
+                raise err
+            # back-pressure statuses: honor the server's Retry-After
+            # hint, floored by our own deterministic backoff curve
+            time.sleep(max(err.retry_after_s or 0.0,
+                           self.backoff.delay_s(attempt)))
 
     def score(self, docs: Sequence[Sequence[int]],
               tenant: Optional[str] = None) -> Dict:

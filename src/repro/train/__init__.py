@@ -31,6 +31,9 @@ from repro.train.linear_trainer import (
     FitResult, train_bbit_liblinear, train_vw_liblinear, train_bbit_sgd,
 )
 from repro.train.streaming import StreamFitResult, fit_streaming
+from repro.train.supervisor import (
+    CrashRecord, RestartPolicy, SupervisedRun, run_supervised,
+)
 
 __all__ = [
     "logistic", "hinge", "squared_hinge", "softmax_xent", "binary_margins",
@@ -44,4 +47,5 @@ __all__ = [
     "FitResult", "train_bbit_liblinear", "train_vw_liblinear",
     "train_bbit_sgd",
     "StreamFitResult", "fit_streaming",
+    "CrashRecord", "RestartPolicy", "SupervisedRun", "run_supervised",
 ]

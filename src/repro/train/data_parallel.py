@@ -10,13 +10,27 @@ replicated:
   * every device computes the masked per-example SUM loss over its
     valid rows (``train.losses.sum_loss_with_hits_fn``; padding rows
     and shard-less devices contribute nothing);
-  * the local gradient sums are pre-scaled by ``world / Σ_devices
-    valid`` so the ``psum_mean`` gradient all-reduce
-    (``distributed.collectives``) yields EXACTLY the gradient of the
-    mean loss over the union of all devices' real rows — uneven tails
-    and zero-row devices change the weighting not at all; the L2 term
-    is added once AFTER the all-reduce (replicated params → identical
-    on every device);
+  * the all-reduced gradient SUM is scaled by ``physical / Σ_devices
+    valid`` once AFTER ``psum_mean`` (= psum / physical), landing on
+    exactly the gradient of the mean loss over the union of all
+    devices' real rows — uneven tails and zero-row devices change the
+    weighting not at all.  Scaling after the reduction (sum-then-
+    scale, not scale-then-sum) is what makes the update bitwise
+    invariant to the physical device count: for power-of-two device
+    counts the psum_mean division and the ``physical/total`` factor
+    are exact power-of-two rescalings of the same gradient sum, so
+    the same logical schedule produces bit-identical parameters
+    whether its shard slots live on N devices or fold onto fewer
+    (the elastic-resume property, tests/test_fault_tolerance.py).
+    The L2 term is added once after the all-reduce (replicated params
+    → identical on every device);
+  * **elastic folding** (``logical_world > physical``): the stacked
+    batch keeps its LOGICAL leading axis; each device receives a
+    ``(fold, B, …)`` block and loops its ``fold = logical/physical``
+    shard slots sequentially, accumulating loss/hit/row sums and the
+    gradient sum in slot order before the collectives run — the
+    schedule, and hence the replayed step sequence, is a function of
+    the logical world only;
   * each step pays exactly TWO all-reduces — the (loss, hits, rows)
     scalar triple crosses stacked, the gradient tree crosses fused
     inside ``psum_mean`` — because collective setup cost, not payload,
@@ -68,6 +82,7 @@ def build_dp_averaged_train_step(
     *,
     l2: float = 0.0,
     donate: bool = True,
+    logical_world: int = None,
 ):
     """``loss_sum_fn(params, batch, labels, valid) -> (loss_sum, hits)``
     (per-device, masked sums); returns a jitted
@@ -75,44 +90,67 @@ def build_dp_averaged_train_step(
         ``step(astate, active, batch, labels, valid)
             -> (astate, (mean_loss, hits))``
 
-    where ``batch``/``labels``/``valid`` are stacked ``(world, B, …)``
-    arrays sharded over the mesh (``device_put_sharded``), ``astate``
-    is replicated, ``mean_loss`` is the global mean over valid rows
-    (plus the L2 term, matching ``mean_loss_with_preds_fn``'s
-    parameterization) and ``hits`` the global correct-prediction count
-    — both replicated scalars.
+    where ``batch``/``labels``/``valid`` are stacked
+    ``(logical_world, B, …)`` arrays sharded over the mesh's data axis
+    (``device_put_sharded``), ``astate`` is replicated, ``mean_loss``
+    is the global mean over valid rows (plus the L2 term, matching
+    ``mean_loss_with_preds_fn``'s parameterization) and ``hits`` the
+    global correct-prediction count — both replicated scalars.
+
+    ``logical_world`` (default: the mesh's data-axis size) may exceed
+    the physical device count by an integer factor — each device then
+    folds ``logical_world / physical`` shard slots sequentially (the
+    elastic-resume path, see the module docstring).
     """
-    world = mesh.shape[AXIS]
+    physical = mesh.shape[AXIS]
+    logical = physical if logical_world is None else int(logical_world)
+    if logical % physical:
+        raise ValueError(
+            f"logical world {logical} is not a multiple of the mesh's "
+            f"{physical} data-axis devices — shard slots cannot fold "
+            "evenly")
+    fold = logical // physical
 
     def _local(astate: AveragedTrainState, active, batch, labels, valid):
-        # per-device blocks arrive with a leading axis of 1 — peel it
-        batch = jax.tree.map(lambda x: x[0], batch)
-        labels, valid = labels[0], valid[0]
-        vmask = valid.astype(jnp.float32)
+        # per-device blocks arrive with a leading axis of ``fold``:
+        # run each shard slot and accumulate sums in slot order
+        def slot(params, f):
+            batch_f = jax.tree.map(lambda x: x[f], batch)
+            labels_f, valid_f = labels[f], valid[f]
 
-        def local_objective(params):
-            lsum, hits = loss_sum_fn(params, batch, labels, valid)
-            return lsum, (lsum, hits)
+            def local_objective(p):
+                lsum, hits = loss_sum_fn(p, batch_f, labels_f, valid_f)
+                return lsum, (lsum, hits)
 
-        (_, (lsum, hits)), gsum = jax.value_and_grad(
-            local_objective, has_aux=True)(astate.state.params)
+            (_, (lsum, hits)), g = jax.value_and_grad(
+                local_objective, has_aux=True)(params)
+            return (lsum, hits.astype(jnp.float32),
+                    jnp.sum(valid_f.astype(jnp.float32)), g)
+
+        lsum, hits_f, rows, gsum = slot(astate.state.params, 0)
+        for f in range(1, fold):
+            l_f, h_f, r_f, g_f = slot(astate.state.params, f)
+            lsum = lsum + l_f
+            hits_f = hits_f + h_f
+            rows = rows + r_f
+            gsum = jax.tree.map(jnp.add, gsum, g_f)
 
         # exactly TWO all-reduces per step (collective setup dominates
         # small steps): the scalar triple crosses stacked, then the
         # whole gradient tree crosses fused inside psum_mean.
-        scalars = jax.lax.psum(
-            jnp.stack([lsum, hits.astype(jnp.float32),
-                       jnp.sum(vmask)]), AXIS)
+        scalars = jax.lax.psum(jnp.stack([lsum, hits_f, rows]), AXIS)
         lsum_g, hits_g, total = scalars[0], scalars[1], scalars[2]
-        # pre-scale so psum_mean (= psum / world) lands on
-        # psum(grad lsum) / total — the gradient of the mean loss over
-        # the union of all devices' real rows.  The scale is cast to
-        # each leaf's dtype: a strong-f32 multiply would widen bf16
-        # grads before psum_mean's dtype preservation ever engages.
-        scale = jnp.float32(world) / total
-        grads = psum_mean(
-            jax.tree.map(lambda g: g * scale.astype(g.dtype), gsum),
-            AXIS)
+        # scale AFTER the reduction: psum_mean (= psum / physical)
+        # then × physical/total lands on psum(grad lsum) / total — the
+        # gradient of the mean loss over the union of all devices'
+        # real rows — via exact power-of-two rescalings, so the result
+        # is bitwise independent of how the logical slots fold onto
+        # physical devices.  The scale is cast to each leaf's dtype: a
+        # strong-f32 multiply would widen bf16 grads.
+        scale = jnp.float32(physical) / total
+        grads = jax.tree.map(
+            lambda g: g * scale.astype(g.dtype),
+            psum_mean(gsum, AXIS))
         mean_loss = lsum_g / total
         if l2:
             # replicated params → identical reg term on every device;

@@ -34,9 +34,35 @@ loop arXiv:1205.2958 §5 draws against VW's online mode:
     holding fewer batches (or no shard) contributes zero-weight
     padding batches, keeping every collective full-strength while the
     global row-weighted mean gradient — and hence the Polyak average —
-    stays exact.  The checkpoint fingerprint records the world size
-    and shard-assignment policy, so resume refuses a mismatched
-    topology;
+    stays exact.  The checkpoint fingerprint records the LOGICAL
+    world size and shard-assignment policy; the physical device count
+    is a sanctioned lineage record instead (see elastic resume below);
+  * **elastic resume** (``elastic=True``): ``data_parallel=N`` is the
+    LOGICAL schedule — N shard slots per group — while the PHYSICAL
+    mesh uses whatever devices are alive
+    (``ckpt.elastic.mesh_from_available_devices`` /
+    ``physical_data_world``), each device folding
+    ``N / physical`` slots sequentially
+    (``train.data_parallel``'s fold step).  Because the gradient is
+    scaled AFTER the all-reduce by exact power-of-two factors, a run
+    checkpointed on N devices restores on M ≠ N bit-identically; each
+    physical realization is appended to a topology-lineage record in
+    the checkpoint's meta.json, and resume adopts the checkpoint's
+    logical schedule rather than refusing.  Restored host arrays are
+    placed back on the live mesh with ``ckpt.elastic.reshard``;
+  * **durability** (PR 7): checkpoints are atomic (tmp + fsync +
+    rename), CRC32-checksummed per leaf, and retained as a ring; on
+    restore a torn/corrupt checkpoint is logged, quarantined and the
+    newest valid one used instead — only when none survives does the
+    run restart from scratch (loudly).  Shard reads retry transient
+    I/O errors with bounded backoff; a dead prefetch producer
+    surfaces as an exception, never a hang.  Armed
+    ``repro.ft.faults`` plans can inject crashes / slow steps
+    (``on_train_step``) deterministically; ``train.supervisor``
+    restarts the run from the latest valid checkpoint under a capped
+    backoff policy — an injected-crash supervised run ends with
+    params bit-identical to an uninterrupted one
+    (tests/test_fault_tolerance.py);
   * the update is plain minibatch SGD/AdamW through the existing
     ``build_train_step`` machinery, wrapped with Polyak *tail*
     averaging (``optim.averaging``) — the averaged iterate is the
@@ -75,8 +101,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
+from repro.ckpt.elastic import (
+    mesh_from_available_devices, physical_data_world, replicate_spec_tree,
+    reshard,
+)
 from repro.core.bbit import packed_mask_width, packed_width
 from repro.data.hashed_dataset import _read_meta, shard_row_counts
+from repro.ft import faults
 from repro.data.prefetch import (
     Boundary, StreamBatch, ThreadedPrefetcher, group_batch_stream,
     serial_batch_stream, shard_order,
@@ -113,6 +144,10 @@ class StreamFitResult:
     examples_seen: int
     shards_processed: int          # cumulative, survives resume
     completed: bool                # False when stop_after_shards hit
+    # every (logical, physical) realization this run has trained
+    # under, oldest first — the sanctioned topology-lineage record
+    # also stored in each checkpoint's meta.json
+    topology_lineage: list = dataclasses.field(default_factory=list)
 
     @property
     def eval_params(self) -> Any:
@@ -161,21 +196,35 @@ def fit_streaming(
     mmap: bool = True,
     prefetch: int = 2,
     data_parallel: Optional[int] = None,
+    elastic: bool = False,
     ckpt_dir: Optional[str] = None,
     ckpt_every_shards: int = 1,
+    ckpt_keep_last: int = 3,
     resume: bool = True,
     stop_after_shards: Optional[int] = None,
+    watchdog: Optional[Any] = None,
 ) -> StreamFitResult:
     """Streams a format-v1/2/3 hashed archive through minibatch SGD.
 
     ``prefetch`` is the async pipeline depth: host-side batch assembly
     and jax transfer run that many steps ahead of the device in a
     background thread (0 = inline/serial; results are bit-identical
-    either way).  ``data_parallel=N`` trains over the first N visible
-    devices — disjoint shard groups per step, ``psum_mean`` gradient
-    all-reduce (see ``train.data_parallel``); the checkpoint
-    fingerprint then pins the topology, so a resume on a different
-    device count fails loudly.  ``avg_start_frac`` opens the Polyak
+    either way).  ``data_parallel=N`` is the LOGICAL world: N disjoint
+    shard slots per step with a ``psum_mean`` gradient all-reduce (see
+    ``train.data_parallel``).  Without ``elastic`` it must equal the
+    physical device count and the checkpoint fingerprint pins it, so a
+    resume on a different topology fails loudly; with ``elastic=True``
+    the N slots fold onto whatever devices are alive (bit-identically
+    — power-of-two counts), a checkpointed run resumes on M ≠ N
+    devices by adopting the checkpoint's logical schedule, and each
+    physical realization is appended to the checkpoint's
+    topology-lineage record (meta.json, ``StreamFitResult
+    .topology_lineage``).  ``watchdog`` (a ``ft.watchdog
+    .StepWatchdog``) observes per-step dispatch latency and escalates
+    persistent stragglers; ``ckpt_keep_last`` sizes the retained
+    checkpoint ring (the fallback set when the newest checkpoint is
+    torn/corrupt — see ``ckpt.checkpoint``'s durability contract).
+    ``avg_start_frac`` opens the Polyak
     tail-averaging window after that fraction of the planned total
     steps (0.0 = average from the first step; ignored when
     ``average=False``).  ``stop_after_shards`` (requires ``ckpt_dir``)
@@ -229,17 +278,11 @@ def fit_streaming(
             f" in {root!r} — lower batch_size or re-shard the archive "
             "with fewer shards")
 
+    # ``data_parallel`` names the LOGICAL schedule; the physical mesh
+    # (and the step function) are built only after a possible elastic
+    # adoption of a checkpoint's schedule below.
     dp = data_parallel is not None
-    world = int(data_parallel) if dp else 1
-    if dp:
-        from repro.launch.mesh import make_data_mesh
-        mesh = make_data_mesh(world)
-
-    total_steps = _planned_steps(
-        counts, batch_size, epochs=epochs, seed=seed,
-        shuffle=shuffle_shards, world=world)
-    avg_start_step = (int(math.floor(avg_start_frac * total_steps))
-                      if average else total_steps + 1)
+    logical = int(data_parallel) if dp else 1
 
     # oph_zero archives carry a packed per-row empty bitmask; batches
     # then travel as (codes_bytes, mask_bytes) tuples.  v3 answers this
@@ -261,18 +304,149 @@ def fit_streaming(
         return bbit_logits_packed(params, batch, cfg)
 
     opt = make_optimizer(optimizer, lr)
+
+    astate = init_averaged_state(
+        init_bbit_linear(cfg, jax.random.key(seed)), opt)
+    epoch0, pos0, shards_done, hits, seen = 0, 0, 0, 0, 0
+    if (ckpt_dir and not resume
+            and ckpt.latest_step(ckpt_dir) is not None):
+        # a fresh run's low step numbers would be pruned under the old
+        # run's higher ones, and a later resume would silently pick up
+        # the stale run — refuse rather than interleave two runs
+        raise ValueError(
+            f"ckpt_dir {ckpt_dir!r} already holds checkpoints (latest "
+            f"step {ckpt.latest_step(ckpt_dir)}); with resume=False "
+            "point at a fresh directory or delete the old run first")
+    restored_tree = None
+    restored_step = None
+    prior_lineage: list = []
+    if ckpt_dir and resume and ckpt.latest_step(ckpt_dir) is not None:
+        template = {"astate": astate, "epoch": np.int64(0),
+                    "pos": np.int64(0), "shards_done": np.int64(0),
+                    "hits": np.int64(0), "seen": np.int64(0),
+                    "fingerprint": np.int64(0)}
+        try:
+            restored_tree, restored_step = ckpt.restore(ckpt_dir,
+                                                        template)
+        except FileNotFoundError:
+            # every retained checkpoint failed validation: restore
+            # quarantined each one (loudly, see ckpt.checkpoint) — the
+            # only honest continuation is a fresh start from scratch
+            restored_tree = None
+        except ValueError as e:
+            # restarting from scratch here would silently discard the
+            # run the caller believes they are continuing
+            raise ValueError(
+                f"checkpoint under {ckpt_dir!r} is incompatible with "
+                "this run's model/optimizer state (resume requires the "
+                f"same archive and hyperparameters): {e}") from e
+    if restored_tree is not None:
+        smeta = ckpt.load_meta(ckpt_dir, restored_step) or {}
+        sched = smeta.get("schedule")
+        if sched is not None:
+            ck_dp = bool(sched.get("dp"))
+            ck_logical = int(sched.get("logical_world", 1))
+            if (ck_dp, ck_logical) != (dp, logical):
+                if not elastic:
+                    raise ValueError(
+                        f"checkpoint under {ckpt_dir!r} is incompatible:"
+                        " it was written under "
+                        + (f"data_parallel={ck_logical}" if ck_dp
+                           else "the serial schedule")
+                        + " but this run requested "
+                        + (f"data_parallel={logical}" if dp
+                           else "the serial schedule")
+                        + " — pass elastic=True to adopt the "
+                        "checkpoint's logical schedule on the current "
+                        "devices")
+                dp, logical = ck_dp, ck_logical
+        prior_lineage = list(smeta.get("lineage", []))
+
+    total_steps = _planned_steps(
+        counts, batch_size, epochs=epochs, seed=seed,
+        shuffle=shuffle_shards, world=logical)
+    avg_start_step = (int(math.floor(avg_start_frac * total_steps))
+                      if average else total_steps + 1)
+
+    # a structural restore can succeed while the run semantics differ
+    # (same model/optimizer shapes, different archive/batching/seed/
+    # logical schedule) — fingerprint everything replay depends on and
+    # refuse a mismatch.  prefetch depth is deliberately EXCLUDED: it
+    # never changes the replayed step sequence, so checkpoints are
+    # interchangeable across depths; the PHYSICAL device count is too
+    # (the fold step makes the update a function of the logical
+    # schedule alone) — it lives in the meta.json lineage record, not
+    # the fingerprint.
+    fingerprint = ckpt.run_fingerprint(
+        {"archive": {"n": meta["n"], "shards": n_shards, "k": k, "b": b,
+                     "scheme": meta.get("scheme"),
+                     "seed": meta.get("seed")},
+         "cfg": dataclasses.asdict(cfg),
+         "loss": loss, "optimizer": optimizer, "lr": lr, "l2": l2,
+         "epochs": epochs, "batch_size": batch_size, "seed": seed,
+         "average": average, "avg_start_step": avg_start_step,
+         "shuffle_shards": shuffle_shards,
+         "world": logical,
+         "shard_assignment": ("contiguous_groups" if dp else "serial")})
+
+    if restored_tree is not None:
+        if int(restored_tree["fingerprint"]) != int(fingerprint):
+            raise ValueError(
+                f"checkpoint under {ckpt_dir!r} is incompatible: it was "
+                "written by a run with different hyperparameters, a "
+                "different archive, or a different data-parallel "
+                "topology (fingerprint mismatch) — resume requires "
+                "identical settings")
+        astate = restored_tree["astate"]
+        epoch0 = int(restored_tree["epoch"])
+        pos0 = int(restored_tree["pos"])
+        shards_done = int(restored_tree["shards_done"])
+        hits = int(restored_tree["hits"])
+        seen = int(restored_tree["seen"])
+
+    if dp:
+        n_dev = len(jax.devices())
+        if not elastic and logical > n_dev:
+            raise ValueError(
+                f"data_parallel={logical} needs {logical} devices but "
+                f"only {n_dev} are visible — pass elastic=True to fold "
+                "the logical shard slots onto the available devices")
+        physical = physical_data_world(logical) if elastic else logical
+        mesh = mesh_from_available_devices(model_parallel=1,
+                                           max_devices=physical)
+        if restored_tree is not None:
+            # place the restored host arrays explicitly onto the live
+            # mesh, fully replicated — the elastic-restore re-shard
+            astate = reshard(astate, replicate_spec_tree(astate, mesh))
+    else:
+        physical = 1
+
+    # the sanctioned topology-lineage record: every (logical, physical)
+    # realization this run has trained under, appended on change and
+    # stored in each checkpoint's meta.json next to the schedule
+    lineage = list(prior_lineage)
+    realization = {"logical": int(logical), "physical": int(physical),
+                   "devices": int(len(jax.devices())),
+                   "from_step": int(shards_done)}
+    if not lineage or any(lineage[-1].get(key) != realization[key]
+                          for key in ("logical", "physical")):
+        lineage.append(realization)
+
     # the jitted step (and every compiled shape variant behind it) is
     # cached process-wide on the semantic step parameters: a fresh
     # closure per call would give each fit its own jit cache, silently
     # recompiling every step variant on every fit — measured at ~30×
-    # the warm step cost on repeated bench/test fits.
-    step_key = ("dp" if dp else "serial", world, cfg, has_empty, loss,
-                optimizer, lr, l2)
+    # the warm step cost on repeated bench/test fits.  The physical
+    # world is part of the key: the same logical schedule folds into
+    # differently-shaped per-device programs on different meshes.
+    step_key = ("dp" if dp else "serial", logical, physical, cfg,
+                has_empty, loss, optimizer, lr, l2)
     step_fn = _STEP_CACHE.get(step_key)
     if step_fn is None:
         if dp:
             step_fn = build_dp_averaged_train_step(
-                sum_loss_with_hits_fn(fwd, loss), opt, mesh, l2=l2)
+                sum_loss_with_hits_fn(fwd, loss), opt, mesh, l2=l2,
+                logical_world=logical)
         else:
             # shared minibatch loss + matching decision rule (one
             # definition, train/losses.py); the pre-update predictions
@@ -290,70 +464,17 @@ def fit_streaming(
             _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
         _STEP_CACHE[step_key] = step_fn
 
-    # a structural restore can succeed while the run semantics differ
-    # (same model/optimizer shapes, different archive/batching/seed/
-    # device topology) — fingerprint everything replay depends on and
-    # refuse a mismatch.  prefetch depth is deliberately EXCLUDED: it
-    # never changes the replayed step sequence, so checkpoints are
-    # interchangeable across depths.
-    fingerprint = ckpt.run_fingerprint(
-        {"archive": {"n": meta["n"], "shards": n_shards, "k": k, "b": b,
-                     "scheme": meta.get("scheme"),
-                     "seed": meta.get("seed")},
-         "cfg": dataclasses.asdict(cfg),
-         "loss": loss, "optimizer": optimizer, "lr": lr, "l2": l2,
-         "epochs": epochs, "batch_size": batch_size, "seed": seed,
-         "average": average, "avg_start_step": avg_start_step,
-         "shuffle_shards": shuffle_shards,
-         "world": world,
-         "shard_assignment": ("contiguous_groups" if dp else "serial")})
-
-    astate = init_averaged_state(
-        init_bbit_linear(cfg, jax.random.key(seed)), opt)
-    epoch0, pos0, shards_done, hits, seen = 0, 0, 0, 0, 0
-    if (ckpt_dir and not resume
-            and ckpt.latest_step(ckpt_dir) is not None):
-        # a fresh run's low step numbers would be pruned under the old
-        # run's higher ones, and a later resume would silently pick up
-        # the stale run — refuse rather than interleave two runs
-        raise ValueError(
-            f"ckpt_dir {ckpt_dir!r} already holds checkpoints (latest "
-            f"step {ckpt.latest_step(ckpt_dir)}); with resume=False "
-            "point at a fresh directory or delete the old run first")
-    if ckpt_dir and resume and ckpt.latest_step(ckpt_dir) is not None:
-        template = {"astate": astate, "epoch": np.int64(0),
-                    "pos": np.int64(0), "shards_done": np.int64(0),
-                    "hits": np.int64(0), "seen": np.int64(0),
-                    "fingerprint": np.int64(0)}
-        try:
-            tree, _ = ckpt.restore(ckpt_dir, template)
-        except ValueError as e:
-            # restarting from scratch here would silently discard the
-            # run the caller believes they are continuing
-            raise ValueError(
-                f"checkpoint under {ckpt_dir!r} is incompatible with "
-                "this run's model/optimizer state (resume requires the "
-                f"same archive and hyperparameters): {e}") from e
-        if int(tree["fingerprint"]) != int(fingerprint):
-            raise ValueError(
-                f"checkpoint under {ckpt_dir!r} is incompatible: it was "
-                "written by a run with different hyperparameters, a "
-                "different archive, or a different data-parallel "
-                "topology (fingerprint mismatch) — resume requires "
-                "identical settings")
-        astate = tree["astate"]
-        epoch0 = int(tree["epoch"])
-        pos0 = int(tree["pos"])
-        shards_done = int(tree["shards_done"])
-        hits, seen = int(tree["hits"]), int(tree["seen"])
-
     def save_boundary(next_epoch: int, next_pos: int) -> None:
         tree = {"astate": astate, "epoch": np.int64(next_epoch),
                 "pos": np.int64(next_pos),
                 "shards_done": np.int64(shards_done),
                 "hits": np.int64(hits), "seen": np.int64(seen),
                 "fingerprint": fingerprint}
-        ckpt.save(ckpt_dir, shards_done, tree)
+        ckpt.save(ckpt_dir, shards_done, tree,
+                  keep_last=ckpt_keep_last,
+                  extra_meta={"schedule": {"dp": dp,
+                                           "logical_world": int(logical)},
+                              "lineage": lineage})
         # also publish the current EVAL iterate (Polyak average once
         # the tail window opened, else the raw iterate) as a params-
         # only snapshot under <ckpt_dir>/serve — what a live server's
@@ -373,7 +494,7 @@ def fit_streaming(
 
         stream = group_batch_stream(
             root, batch_size, seed=seed, epochs=epochs,
-            n_shards=n_shards, counts=counts, world=world,
+            n_shards=n_shards, counts=counts, world=logical,
             shuffle=shuffle_shards, start_epoch=epoch0, start_pos=pos0,
             has_empty=has_empty, packed_width=packed_width(k, b),
             mask_width=packed_mask_width(k), transfer=transfer,
@@ -401,7 +522,20 @@ def fit_streaming(
         for ev in events:
             if isinstance(ev, StreamBatch):
                 active = np.float32(global_step >= avg_start_step)
+                if watchdog is not None:
+                    watchdog.start_step()
+                # inside the watchdog window: an injected slow step is
+                # observed as step latency, an injected crash dies
+                # mid-step — both as a real fault would
+                if faults._ACTIVE is not None:
+                    faults.on_train_step(global_step)
                 astate, (_, h) = step_fn(astate, active, *ev.args)
+                if watchdog is not None:
+                    # dispatch is async: this observes host-side step
+                    # latency (enqueue + any producer stall), which is
+                    # exactly where injected slow steps and starving
+                    # input pipelines show up
+                    watchdog.end_step(global_step)
                 # device scalars, drained once per shard: no per-step
                 # host sync to break async dispatch overlap
                 pending_hits.append(h)
@@ -442,4 +576,5 @@ def fit_streaming(
         examples_seen=seen,
         shards_processed=shards_done,
         completed=not stopped,
+        topology_lineage=lineage,
     )

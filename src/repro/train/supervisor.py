@@ -1,0 +1,139 @@
+"""Supervised restart loop: run ``fit_streaming`` until it finishes.
+
+The single-host half of the ROADMAP's fault-tolerant training story:
+a crash (injected or real) kills the fit mid-shard; the supervisor
+waits out a capped exponential backoff (deterministic jitter,
+``repro.ft.retry.BackoffPolicy``) and calls ``fit_streaming`` again
+with ``resume=True`` — the trainer restores from the newest VALID
+checkpoint (torn/corrupt ones are quarantined, see ``ckpt.checkpoint``)
+and replays the stream from that boundary.  Because batch replay is a
+pure function of ``(seed, epoch, position)``, the supervised run's
+final parameters are bit-identical to an uninterrupted run — the
+crash-equivalence property (tests/test_fault_tolerance.py) that makes
+"the run survives production reality" a testable claim rather than a
+hope.
+
+What counts as a crash: any exception EXCEPT
+
+  * ``ValueError`` — a configuration/compatibility error
+    (archive/config mismatch, incompatible checkpoint): retrying can
+    only fail identically, so it propagates immediately;
+  * ``KeyboardInterrupt`` / ``SystemExit`` — the operator, not a
+    fault.
+
+A shared ``StepWatchdog`` (``repro.ft.watchdog``) rides along across
+restarts, so straggler escalations accumulate over the whole supervised
+run; its counters are surfaced on the returned ``SupervisedRun``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, List, Optional
+
+from repro.ft.retry import BackoffPolicy
+from repro.ft.watchdog import StepWatchdog
+from repro.train.streaming import StreamFitResult, fit_streaming
+
+__all__ = ["RestartPolicy", "CrashRecord", "SupervisedRun",
+           "run_supervised"]
+
+log = logging.getLogger("repro.train.supervisor")
+
+
+@dataclasses.dataclass(frozen=True)
+class RestartPolicy:
+    """How hard to try: at most ``max_restarts`` restarts, waiting out
+    ``backoff.delay_s(attempt)`` before each one."""
+    max_restarts: int = 3
+    backoff: BackoffPolicy = BackoffPolicy(base_s=0.05, factor=2.0,
+                                           cap_s=5.0, jitter_frac=0.1)
+
+
+@dataclasses.dataclass
+class CrashRecord:
+    """One supervised crash: which restart followed it, what died, and
+    how long the recovery (backoff + restore + replay to the crash
+    point) took."""
+    restart: int
+    error: str
+    backoff_s: float
+    recover_s: float = 0.0
+
+
+@dataclasses.dataclass
+class SupervisedRun:
+    result: StreamFitResult
+    restarts: int
+    crashes: List[CrashRecord]
+    watchdog: StepWatchdog
+
+    @property
+    def straggler_escalations(self) -> int:
+        return len(self.watchdog.escalations)
+
+
+def run_supervised(
+    root: str,
+    cfg: Any,
+    *,
+    policy: Optional[RestartPolicy] = None,
+    watchdog: Optional[StepWatchdog] = None,
+    **fit_kwargs,
+) -> SupervisedRun:
+    """Runs ``fit_streaming(root, cfg, **fit_kwargs)`` under restart
+    supervision; returns the finished result plus crash accounting.
+
+    ``ckpt_dir`` is required — without checkpoints every restart would
+    silently start over, which is exactly the failure mode this loop
+    exists to prevent.  ``resume`` is forced True on every attempt
+    (including the first: picking up a previous supervised run's
+    checkpoints is the intended behavior).
+    """
+    if not fit_kwargs.get("ckpt_dir"):
+        raise ValueError(
+            "run_supervised requires ckpt_dir: without checkpoints a "
+            "restart cannot resume and would retrain from scratch")
+    if fit_kwargs.get("resume") is False:
+        raise ValueError(
+            "run_supervised forces resume=True — a supervised restart "
+            "that refuses its own checkpoints cannot recover")
+    fit_kwargs["resume"] = True
+    policy = RestartPolicy() if policy is None else policy
+    watchdog = StepWatchdog() if watchdog is None else watchdog
+    crashes: List[CrashRecord] = []
+    attempt = 0
+    while True:
+        t_try = time.perf_counter()
+        try:
+            result = fit_streaming(root, cfg, watchdog=watchdog,
+                                   **fit_kwargs)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except ValueError:
+            # config/compatibility error — deterministic, not a crash
+            raise
+        except Exception as e:  # noqa: BLE001 — the supervised surface
+            if crashes:
+                crashes[-1].recover_s += time.perf_counter() - t_try
+            if attempt >= policy.max_restarts:
+                log.error(
+                    "giving up after %d restarts (%d crashes); last "
+                    "error: %r", attempt, len(crashes) + 1, e)
+                raise
+            delay = policy.backoff.delay_s(attempt)
+            log.warning(
+                "training attempt %d crashed (%r) — restarting from "
+                "the latest valid checkpoint in %.3fs "
+                "(restart %d/%d)", attempt + 1, e, delay, attempt + 1,
+                policy.max_restarts)
+            crashes.append(CrashRecord(restart=attempt + 1,
+                                       error=repr(e), backoff_s=delay))
+            time.sleep(delay)
+            attempt += 1
+            continue
+        if crashes:
+            crashes[-1].recover_s += time.perf_counter() - t_try
+        return SupervisedRun(result=result, restarts=attempt,
+                             crashes=crashes, watchdog=watchdog)

@@ -1,0 +1,508 @@
+"""Crash-safe, self-healing streaming training (PR 7).
+
+Crash-equivalence matrix: a run killed at {a shard boundary, mid-shard,
+during a checkpoint write} and resumed on {the same topology, elastic
+2→1 fake devices, elastic 1→2} must produce BIT-IDENTICAL final
+parameters and exact progressive-counter continuity vs an uninterrupted
+run.  Plus: torn-checkpoint quarantine + fallback, corrupt-shard
+detection (CRC fsck + bounded read retry), prefetcher error context,
+the straggler watchdog on an injected slow step, and the ScoreClient's
+opt-in 429 retry against a live server.
+
+Elastic cases run on 1/2 fake XLA devices in subprocesses (conftest);
+the serial cases run in-process on the main interpreter's single
+device."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import run_in_subprocess
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data import (SynthRcv1Config, ShardCorruptionError,
+                        ShardReadError, ShardStreamError, generate_arrays,
+                        preprocess_and_save, verify_shard)
+from repro.data import hashed_dataset
+from repro.data.prefetch import ThreadedPrefetcher
+from repro.ft import (BackoffPolicy, FaultEvent, FaultPlan, InjectedCrash,
+                      StepWatchdog, faults)
+from repro.models.linear import BBitLinearConfig
+from repro.train import (RestartPolicy, fit_streaming, run_supervised,
+                         trees_bitwise_equal)
+
+_KW = dict(epochs=2, batch_size=32, lr=5e-3, seed=0)
+_LCFG = BBitLinearConfig(k=16, b=4)
+
+
+def _build_archive(root, n_docs=160, n_shards=2, scheme="minwise"):
+    cfg = SynthRcv1Config(seed=11, topic_tokens=150, background_frac=0.35,
+                          max_pairs_per_doc=2000, max_triples_per_doc=1000)
+    rows, labels = generate_arrays(n_docs, cfg)
+    os.makedirs(root, exist_ok=True)
+    preprocess_and_save(root, rows, labels, k=16, b=4, seed=1,
+                        n_shards=n_shards, scheme=scheme, chunk=64)
+    return root
+
+
+@pytest.fixture(scope="module")
+def arch(tmp_path_factory):
+    """160 docs / 2 shards: 3 serial steps per shard, 12 total over 2
+    epochs — small enough for in-process runs, big enough that "mid-
+    shard" and "shard boundary" are distinct step indices."""
+    return _build_archive(str(tmp_path_factory.mktemp("ft") / "arch"))
+
+
+def _counters_equal(a, b):
+    assert a.n_steps == b.n_steps
+    assert a.examples_seen == b.examples_seen
+    assert a.shards_processed == b.shards_processed
+    assert abs(a.progressive_acc - b.progressive_acc) < 1e-12
+
+
+# ------------------------------------------------- fault harness ----
+
+def test_unarmed_and_unmatched_plans_are_inert(arch):
+    """No plan armed (the production default) and an armed plan whose
+    events never match must both leave the run bit-identical."""
+    assert faults.active() is None
+    ref = fit_streaming(arch, _LCFG, **_KW)
+    plan = FaultPlan([FaultEvent(site="train_step", step=10**9),
+                      FaultEvent(site="shard_read", shard=999),
+                      FaultEvent(site="ckpt_write", at_save=10**9)])
+    with faults.arm(plan):
+        armed = fit_streaming(arch, _LCFG, **_KW)
+    assert faults.active() is None
+    assert all(e.fired == 0 for e in plan.events)
+    assert trees_bitwise_equal(ref.params, armed.params)
+    assert trees_bitwise_equal(ref.avg_params, armed.avg_params)
+    _counters_equal(ref, armed)
+
+
+# ------------------------------- supervised crash equivalence ----
+
+def _fast_policy(max_restarts=3):
+    return RestartPolicy(max_restarts=max_restarts,
+                         backoff=BackoffPolicy(base_s=0.005, factor=2.0,
+                                               cap_s=0.02, jitter_frac=0.0))
+
+
+def test_supervised_crashes_are_bit_equivalent(arch, tmp_path):
+    """Two injected process-crashes — one on the first step after a
+    shard-boundary checkpoint (step 3), one mid-shard (step 8) — and
+    the supervised run still finishes bit-identical to an uninterrupted
+    run, with exact counter continuity."""
+    ref = fit_streaming(arch, _LCFG, **_KW)
+    ck = str(tmp_path / "ck")
+    plan = FaultPlan([FaultEvent(site="train_step", step=3, times=1),
+                      FaultEvent(site="train_step", step=8, times=1)])
+    with faults.arm(plan):
+        sup = run_supervised(arch, _LCFG, policy=_fast_policy(),
+                             ckpt_dir=ck, **_KW)
+    assert [e.fired for e in plan.events] == [1, 1]
+    assert sup.restarts == 2 and len(sup.crashes) == 2
+    assert all(c.error.startswith("InjectedCrash") for c in sup.crashes)
+    assert all(c.recover_s > 0 for c in sup.crashes)
+    assert sup.result.completed
+    assert trees_bitwise_equal(ref.params, sup.result.params)
+    assert trees_bitwise_equal(ref.avg_params, sup.result.avg_params)
+    _counters_equal(ref, sup.result)
+
+
+def test_supervised_torn_checkpoint_write_recovers(arch, tmp_path):
+    """The first checkpoint write is torn (payload truncated AFTER the
+    atomic rename — the fsync-less failure mode) and the process dies;
+    the restarted attempt must quarantine the damaged checkpoint, fall
+    back to a fresh start, and still finish bit-identical."""
+    ref = fit_streaming(arch, _LCFG, **_KW)
+    ck = str(tmp_path / "ck")
+    plan = FaultPlan([FaultEvent(site="ckpt_write", times=1)])
+    with faults.arm(plan):
+        sup = run_supervised(arch, _LCFG, policy=_fast_policy(),
+                             ckpt_dir=ck, **_KW)
+    assert plan.events[0].fired == 1 and sup.restarts == 1
+    assert trees_bitwise_equal(ref.params, sup.result.params)
+    assert trees_bitwise_equal(ref.avg_params, sup.result.avg_params)
+    _counters_equal(ref, sup.result)
+    q = os.path.join(ck, ckpt.QUARANTINE_SUBDIR)
+    assert os.path.isdir(q) and len(os.listdir(q)) == 1
+    # the retried (clean) saves are restorable
+    assert ckpt.latest_step(ck) == ref.shards_processed
+
+
+def test_supervised_gives_up_after_max_restarts(arch, tmp_path):
+    """A persistent crash (times=None — every attempt dies at step 0)
+    exhausts the restart budget and re-raises."""
+    plan = FaultPlan([FaultEvent(site="train_step", step=0, times=None)])
+    with faults.arm(plan):
+        with pytest.raises(InjectedCrash):
+            run_supervised(arch, _LCFG, policy=_fast_policy(max_restarts=2),
+                           ckpt_dir=str(tmp_path / "ck"), **_KW)
+    assert plan.events[0].fired == 3  # initial attempt + 2 restarts
+
+
+def test_supervised_refuses_unrecoverable_setups(arch, tmp_path):
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        run_supervised(arch, _LCFG, **_KW)
+    with pytest.raises(ValueError, match="resume"):
+        run_supervised(arch, _LCFG, ckpt_dir=str(tmp_path / "ck"),
+                       resume=False, **_KW)
+    # config errors are deterministic — never retried
+    t0 = time.perf_counter()
+    with pytest.raises(ValueError, match="does not match archive"):
+        run_supervised(arch, BBitLinearConfig(k=8, b=4),
+                       ckpt_dir=str(tmp_path / "ck"), **_KW)
+    assert time.perf_counter() - t0 < 5.0
+
+
+# ------------------------------------- torn-checkpoint fallback ----
+
+def test_restore_quarantines_corrupt_and_falls_back(tmp_path):
+    ck = str(tmp_path / "ck")
+    t1 = {"a": np.arange(6, dtype=np.float32), "b": np.ones(3, np.int64)}
+    t2 = {"a": np.full(6, 7.0, np.float32), "b": np.zeros(3, np.int64)}
+    ckpt.save(ck, 1, t1)
+    ckpt.save(ck, 2, t2)
+    # silent bit-rot: rewrite the payload with same-shape zeros — the
+    # npz parses fine, only the recorded CRC32s catch it
+    p = os.path.join(ck, "step_00000002", "ckpt.npz")
+    with np.load(p) as z:
+        zeroed = {k: np.zeros_like(z[k]) for k in z.files}
+    np.savez(p, **zeroed)
+    # an explicitly requested step never falls back
+    with pytest.raises(ckpt.CorruptCheckpointError, match="CRC mismatch"):
+        ckpt.restore(ck, t1, step=2)
+    # default restore: quarantine step 2, fall back to step 1
+    got, step = ckpt.restore(ck, t1)
+    assert step == 1
+    assert np.array_equal(got["a"], t1["a"])
+    assert np.array_equal(got["b"], t1["b"])
+    q = os.path.join(ck, ckpt.QUARANTINE_SUBDIR)
+    assert os.listdir(q) == ["step_00000002"]
+    assert ckpt.latest_step(ck) == 1
+    # truncation (the torn write) trips the parser, not just the CRC
+    p1 = os.path.join(ck, "step_00000001", "ckpt.npz")
+    with open(p1, "r+b") as f:
+        f.truncate(max(1, os.path.getsize(p1) * 3 // 5))
+    with pytest.raises(FileNotFoundError, match="no valid checkpoints"):
+        ckpt.restore(ck, t1)
+    assert len(os.listdir(q)) == 2
+
+
+def test_checkpoint_meta_records_crcs_and_lineage_extras(tmp_path):
+    ck = str(tmp_path / "ck")
+    tree = {"w": np.arange(4, dtype=np.float32)}
+    ckpt.save(ck, 5, tree, extra_meta={"lineage": [{"logical": 2}]})
+    meta = ckpt.load_meta(ck, 5)
+    assert meta["ckpt_format"] == ckpt.CKPT_FORMAT == 4
+    assert meta["lineage"] == [{"logical": 2}]
+    assert set(meta["crc32"]) == {"leaf_00000"}
+
+
+# ----------------------------------------- shard read durability ----
+
+def test_transient_shard_read_fault_is_absorbed(arch):
+    """Two injected IOErrors on the first shard open: the reader's
+    bounded retry (2 retries = 3 attempts) absorbs them; the run is
+    bit-identical to a fault-free one and nothing is quarantined."""
+    ref = fit_streaming(arch, _LCFG, **_KW)
+    plan = FaultPlan([FaultEvent(site="shard_read", times=2)])
+    with faults.arm(plan):
+        got = fit_streaming(arch, _LCFG, **_KW)
+    assert plan.events[0].fired == 2
+    assert trees_bitwise_equal(ref.params, got.params)
+    _counters_equal(ref, got)
+    assert arch not in hashed_dataset.quarantined_shards
+
+
+def test_persistent_shard_fault_quarantines_with_context(arch):
+    """A persistent read failure (times=None, a dead disk block)
+    exhausts the retries; through the background prefetcher the trainer
+    still sees a ShardStreamError naming (shard, epoch, position) with
+    the reader's ShardReadError chained as the cause."""
+    plan = FaultPlan([FaultEvent(site="shard_read", shard=1, times=None)])
+    try:
+        with faults.arm(plan):
+            with pytest.raises(ShardStreamError) as exc:
+                fit_streaming(arch, _LCFG, prefetch=2, **_KW)
+        e = exc.value
+        assert e.shard == 1 and e.epoch == 0 and 0 <= e.position < 2
+        assert isinstance(e.__cause__, ShardReadError)
+        assert e.__cause__.attempts == hashed_dataset.READ_RETRIES + 1
+        assert e.__cause__.__traceback__ is not None
+        assert 1 in hashed_dataset.quarantined_shards.get(arch, [])
+    finally:
+        hashed_dataset.quarantined_shards.pop(arch, None)
+
+
+def test_verify_shard_fsck_catches_bit_flip(tmp_path):
+    root = _build_archive(str(tmp_path / "arch"), n_docs=80, n_shards=2)
+    meta = hashed_dataset._read_meta(root)
+    assert meta["format_version"] == 4
+    assert len(meta["shard_checksums"]) == 2
+    assert set(verify_shard(root, 0)) >= {"codes", "labels", "rows"}
+    # flip one payload byte past the npy header of shard 1's codes
+    p = os.path.join(root, "hashed_00001.codes.npy")
+    with open(p, "r+b") as f:
+        f.seek(os.path.getsize(p) - 1)
+        last = f.read(1)
+        f.seek(os.path.getsize(p) - 1)
+        f.write(bytes([last[0] ^ 0xFF]))
+    with pytest.raises(ShardCorruptionError, match="codes"):
+        verify_shard(root, 1)
+    assert set(verify_shard(root, 0)) >= {"codes"}  # shard 0 untouched
+
+
+# ------------------------------------------- prefetcher liveness ----
+
+def test_prefetcher_raises_when_producer_dies_without_sentinel():
+    """A producer killed before it can post its error/done sentinel
+    (interpreter teardown, thread kill) must surface as an error in the
+    consumer instead of a forever-blocking queue.get."""
+    pf = ThreadedPrefetcher.__new__(ThreadedPrefetcher)
+    import queue as _q
+    pf._q = _q.Queue(maxsize=1)
+    pf._stop = threading.Event()
+    pf._done = False
+    pf._thread = threading.Thread(target=lambda: None)
+    pf._thread.start()
+    pf._thread.join()
+    with pytest.raises(RuntimeError, match="died without delivering"):
+        next(pf)
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+# -------------------------------------------- straggler watchdog ----
+
+def test_watchdog_flags_injected_slow_step(arch):
+    """An injected 0.3 s stall on step 10 (the rolling window is warm
+    by then) is flagged and escalated by the shared watchdog."""
+    wd = StepWatchdog(threshold=3.0, window=32, escalate_after=1)
+    plan = FaultPlan([FaultEvent(site="slow_step", step=10, delay_s=0.3)])
+    with faults.arm(plan):
+        res = fit_streaming(arch, _LCFG, watchdog=wd, **_KW)
+    assert res.completed and plan.events[0].fired == 1
+    assert 10 in wd.flagged_steps
+    assert 10 in wd.escalations
+    assert len(wd.window) == min(res.n_steps, 32)
+
+
+# ------------------------------------ elastic crash-equivalence ----
+
+_ELASTIC_KW = "epochs=2, batch_size=32, lr=5e-3, seed=0"
+
+
+@pytest.fixture(scope="module")
+def elastic_ref(tmp_path_factory):
+    """240 docs / 4 shards, logical world 2 → 2 steps per shard slot,
+    2 groups per epoch, 8 steps over 2 epochs.  The reference is an
+    uninterrupted elastic run on 2 fake devices; its params/counters
+    are materialized so other subprocesses (1 or 2 devices) can compare
+    bitwise."""
+    base = tmp_path_factory.mktemp("ft_elastic")
+    root = _build_archive(str(base / "arch"), n_docs=240, n_shards=4)
+    ref = str(base / "ref")
+    os.makedirs(ref)
+    run_in_subprocess(f"""
+        import json, numpy as np, jax
+        from repro.models.linear import BBitLinearConfig
+        from repro.train import fit_streaming
+        r = fit_streaming({root!r}, BBitLinearConfig(k=16, b=4),
+                          data_parallel=2, elastic=True, {_ELASTIC_KW})
+        assert r.completed and len(jax.devices()) == 2
+        np.savez({ref!r} + "/params.npz",
+                 *[np.asarray(x) for x in jax.tree.leaves(r.params)])
+        np.savez({ref!r} + "/avg.npz",
+                 *[np.asarray(x) for x in jax.tree.leaves(r.avg_params)])
+        with open({ref!r} + "/counters.json", "w") as f:
+            json.dump(dict(n_steps=r.n_steps, seen=r.examples_seen,
+                           acc=r.progressive_acc,
+                           shards=r.shards_processed), f)
+        print("OK")
+    """, devices=2)
+    return root, ref
+
+
+_ELASTIC_COMPARE = """
+    def compare(r, ref):
+        import json, numpy as np, jax
+        for name, tree in (("params", r.params), ("avg", r.avg_params)):
+            want = np.load(ref + "/" + name + ".npz")
+            got = [np.asarray(x) for x in jax.tree.leaves(tree)]
+            assert len(got) == len(want.files)
+            for a, k in zip(got, want.files):
+                assert np.array_equal(a, want[k]), (name, k)
+        with open(ref + "/counters.json") as f:
+            c = json.load(f)
+        assert r.n_steps == c["n_steps"]
+        assert r.examples_seen == c["seen"]
+        assert r.shards_processed == c["shards"]
+        assert abs(r.progressive_acc - c["acc"]) < 1e-12
+"""
+
+
+def test_elastic_midshard_crash_resumes_2_to_1(elastic_ref, tmp_path):
+    """Killed mid-group on 2 devices (step 5 of 8), resumed to
+    completion on ONE device under the same logical world: bit-identical
+    params, exact counters, and a lineage recording both realizations."""
+    root, ref = elastic_ref
+    ck = str(tmp_path / "ck")
+    run_in_subprocess(f"""
+        from repro.ft import FaultEvent, FaultPlan, InjectedCrash, faults
+        from repro.models.linear import BBitLinearConfig
+        from repro.train import fit_streaming
+        plan = FaultPlan([FaultEvent(site="train_step", step=5, times=1)])
+        try:
+            with faults.arm(plan):
+                fit_streaming({root!r}, BBitLinearConfig(k=16, b=4),
+                              data_parallel=2, elastic=True,
+                              ckpt_dir={ck!r}, {_ELASTIC_KW})
+            raise SystemExit("injected crash did not fire")
+        except InjectedCrash:
+            pass
+        assert plan.events[0].fired == 1
+        print("OK")
+    """, devices=2)
+    run_in_subprocess(_ELASTIC_COMPARE + f"""
+    import jax
+    from repro.models.linear import BBitLinearConfig
+    from repro.train import fit_streaming
+    assert len(jax.devices()) == 1
+    r = fit_streaming({root!r}, BBitLinearConfig(k=16, b=4),
+                      data_parallel=2, elastic=True, ckpt_dir={ck!r},
+                      {_ELASTIC_KW})
+    assert r.completed
+    compare(r, {ref!r})
+    phys = [(e["logical"], e["physical"]) for e in r.topology_lineage]
+    assert (2, 2) in phys and phys[-1] == (2, 1), phys
+    print("OK")
+    """, devices=1)
+
+
+def test_elastic_torn_ckpt_on_1_resumes_on_2(elastic_ref, tmp_path):
+    """The other direction plus a torn write: a supervised 1-device run
+    (logical world 2 folded onto it) tears its first checkpoint, self-
+    heals, stops at the epoch boundary; a 2-device run adopts the
+    checkpoint's schedule and finishes bit-identical to the
+    2-device-throughout reference."""
+    root, ref = elastic_ref
+    ck = str(tmp_path / "ck")
+    run_in_subprocess(f"""
+        import os
+        from repro.ft import (BackoffPolicy, FaultEvent, FaultPlan,
+                              faults)
+        from repro.models.linear import BBitLinearConfig
+        from repro.train import RestartPolicy, run_supervised
+        plan = FaultPlan([FaultEvent(site="ckpt_write", times=1)])
+        pol = RestartPolicy(max_restarts=2,
+                            backoff=BackoffPolicy(base_s=0.005,
+                                                  factor=2.0, cap_s=0.02,
+                                                  jitter_frac=0.0))
+        with faults.arm(plan):
+            sup = run_supervised({root!r}, BBitLinearConfig(k=16, b=4),
+                                 policy=pol, ckpt_dir={ck!r},
+                                 data_parallel=2, elastic=True,
+                                 stop_after_shards=4, {_ELASTIC_KW})
+        assert sup.restarts == 1 and plan.events[0].fired == 1
+        assert not sup.result.completed
+        assert sup.result.shards_processed == 4
+        q = os.path.join({ck!r}, "quarantine")
+        assert os.path.isdir(q) and len(os.listdir(q)) == 1
+        print("OK")
+    """, devices=1)
+    run_in_subprocess(_ELASTIC_COMPARE + f"""
+    import jax
+    from repro.models.linear import BBitLinearConfig
+    from repro.train import fit_streaming
+    assert len(jax.devices()) == 2
+    r = fit_streaming({root!r}, BBitLinearConfig(k=16, b=4),
+                      data_parallel=2, elastic=True, ckpt_dir={ck!r},
+                      {_ELASTIC_KW})
+    assert r.completed
+    compare(r, {ref!r})
+    phys = [(e["logical"], e["physical"]) for e in r.topology_lineage]
+    assert phys[0] == (2, 1) and phys[-1] == (2, 2), phys
+    print("OK")
+    """, devices=2)
+
+
+def test_non_elastic_resume_still_refuses_topology_change(elastic_ref,
+                                                          tmp_path):
+    """Without elastic=True the old contract holds: a dp checkpoint
+    resumed on a smaller world fails loudly (and names the fix)."""
+    root, _ref = elastic_ref
+    ck = str(tmp_path / "ck")
+    run_in_subprocess(f"""
+        from repro.models.linear import BBitLinearConfig
+        from repro.train import fit_streaming
+        part = fit_streaming({root!r}, BBitLinearConfig(k=16, b=4),
+                             data_parallel=2, ckpt_dir={ck!r},
+                             stop_after_shards=2, {_ELASTIC_KW})
+        assert not part.completed
+        print("OK")
+    """, devices=2)
+    run_in_subprocess(f"""
+        from repro.models.linear import BBitLinearConfig
+        from repro.train import fit_streaming
+        try:
+            fit_streaming({root!r}, BBitLinearConfig(k=16, b=4),
+                          data_parallel=2, ckpt_dir={ck!r},
+                          {_ELASTIC_KW})
+            raise SystemExit("2-device schedule ran on 1 device "
+                             "without elastic=True")
+        except ValueError as e:
+            assert "elastic" in str(e), e
+        print("OK")
+    """, devices=1)
+
+
+# --------------------------------------- serving client retry ----
+
+def test_score_client_retries_admission_rejection():
+    """Opt-in bounded retry on 429: with the server's in-flight budget
+    held, a retries=0 client fails immediately while a retrying client
+    honors Retry-After/backoff and succeeds once the budget frees up."""
+    from repro.serving import (AdmissionController, HTTPStatusError,
+                               ScoreClient, ScoreServer)
+    from repro.models.linear import init_bbit_linear
+    from repro.serving import HashedClassifierEngine
+
+    cfg = BBitLinearConfig(k=8, b=4)
+    eng = HashedClassifierEngine(
+        init_bbit_linear(cfg, jax.random.key(0)), cfg, seed=3,
+        scheme="oph", max_batch=8, max_wait_ms=5.0)
+    ctrl = AdmissionController(limit=8, retry_after_s=0.05)
+    srv = ScoreServer(eng, port=0, admission=ctrl)
+    srv.start_in_thread()
+    try:
+        ctrl.acquire(8)  # exhaust the in-flight budget by hand
+        plain = ScoreClient("127.0.0.1", srv.port)
+        with pytest.raises(HTTPStatusError) as exc:
+            plain.score([[1, 2, 3]])
+        assert exc.value.status == 429
+        assert exc.value.retry_after_s and exc.value.retry_after_s > 0
+        plain.close()
+
+        retrier = ScoreClient(
+            "127.0.0.1", srv.port, retries=6,
+            backoff=BackoffPolicy(base_s=0.05, factor=2.0, cap_s=0.25,
+                                  jitter_frac=0.0))
+        rejected_before = ctrl.rejected
+        t = threading.Timer(0.25, ctrl.release, args=(8,))
+        t.start()
+        try:
+            out = retrier.score([[1, 2, 3], [4, 5, 6]])
+        finally:
+            t.join()
+            retrier.close()
+        assert len(out["scores"]) == 2
+        assert ctrl.rejected > rejected_before  # it really was refused
+    finally:
+        srv.request_drain()
+        assert srv.wait_finished(timeout=30)

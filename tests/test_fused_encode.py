@@ -222,7 +222,7 @@ def test_streaming_save_restores_order_and_iterates(tmp_path, scheme):
                                 n_shards=4, chunk=16)
     assert stats["mnnz_per_s"] > 0 and stats["seconds_hashing"] > 0
     codes, l2, meta = load_hashed(d)
-    assert meta["format_version"] == 3 and meta["shards"] == 4
+    assert meta["format_version"] == 4 and meta["shards"] == 4
     assert meta["packed_width"] == packed_width(32, 8)
     assert "mnnz_per_s" in meta       # throughput recorded next to data
     assert np.array_equal(l2, labels)

@@ -186,7 +186,7 @@ def test_hashed_dataset_roundtrip_oph(tmp_path, scheme):
                                 scheme=scheme, n_shards=3)
     assert stats["scheme"] == scheme
     codes, l2, meta = load_hashed(d)
-    assert meta["scheme"] == scheme and meta["format_version"] == 3
+    assert meta["scheme"] == scheme and meta["format_version"] == 4
     assert np.array_equal(l2, labels)
     want = preprocess_rows(rows, k=32, b=6, scheme=scheme)
     assert np.array_equal(codes, want)
