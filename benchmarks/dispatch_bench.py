@@ -1,0 +1,216 @@
+"""Cost-model dispatch: measured-profile choices vs the static policy.
+
+Two paired suites (PR-8), one per trajectory file:
+
+  * ``dispatch_preprocess`` — the one-time hashing pass (fused
+    encode→pack, the paper's Table-2 cost) run twice on identical data:
+    once under the static platform heuristics, once with a freshly
+    calibrated cost profile installed.  Outputs are asserted
+    bit-identical before timing is trusted; the derived column records
+    which implementation each policy picked, so a profile that merely
+    *confirms* the heuristic (the common case on a machine whose
+    fallback is the measured winner) is visible as such.
+  * ``dispatch_serving``  — the fused serving engine with its static
+    pow-2 row-bucket grid vs the per-lane grid + drain caps derived
+    from a measured ``serve_score`` curve, scoring the same ragged
+    request stream (scores asserted identical — micro-batch shape must
+    never change results).
+
+``--smoke`` runs the calibration machinery itself: a budget-capped
+``perf.calibrate`` pass at tiny shapes, profile save→load round-trip,
+and identical-decision checks — no timings, no trajectory JSON.
+
+Caveat carried in every derived column: 2-core CI boxes time with ~2×
+swing, so paired same-process measurements (and ``best-of``) are used,
+and on CPU the honest expectation is parity — the cost model's win
+condition here is "never slower than static, identical bytes", with
+the actual selection upside reserved for boxes where the measured
+winner differs from the heuristic.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, SMOKE, corpus, emit
+
+K = 256
+B = 8
+SCHEME = "oph"
+N_DOCS = 24 if SMOKE else (400 if QUICK else 1500)
+SERVE_NNZ_BUCKETS = (512, 2048)
+SERVE_MAX_BATCH = 16
+REPEATS = 3
+SERVE_REPEATS = 5      # ~25 ms passes: min-of-5 tames 2-core box noise
+
+
+def _calibrated_profile(tmp_dir=None, budget_s=30.0):
+    """Budget-capped calibration at this bench's shapes; returns the
+    loaded-from-disk table (exercising the round trip) when a dir is
+    given, else the in-memory table."""
+    from repro import perf
+    table = perf.calibrate(
+        k=K, b_values=(B,), schemes=(SCHEME,),
+        encode_rows=(64,), encode_widths=(256, 1024),
+        logits_rows=(256,), max_batch=SERVE_MAX_BATCH,
+        nnz_buckets=SERVE_NNZ_BUCKETS, trials=2, budget_s=budget_s,
+        seed=0, table_version="bench")
+    if tmp_dir is not None:
+        path = f"{tmp_dir}/profile.json"
+        table.save(path)
+        table = perf.CostTable.load(path)
+    return table
+
+
+def _smoke():
+    """Budget-capped calibration + profile round-trip (the CI tier)."""
+    import tempfile
+
+    from repro import perf
+    perf.reset()
+    with tempfile.TemporaryDirectory() as td:
+        t0 = time.perf_counter()
+        table = _calibrated_profile(td, budget_s=60.0)
+        dt = time.perf_counter() - t0
+        assert table.entries, "calibration produced an empty table"
+        assert table.matches_device()
+        shape = {"scheme": SCHEME, "k": K, "b": B, "rows": 64, "nnz": 256}
+        perf.set_profile(table)
+        before = perf.choose("encode_packed", shape)
+        perf.reset()
+        perf.set_profile(perf.CostTable.load(f"{td}/profile.json"))
+        assert perf.choose("encode_packed", shape) == before, \
+            "profile round-trip changed a decision"
+        # an exhausted budget must still yield a valid (empty) table
+        empty = perf.calibrate(k=K, b_values=(B,), schemes=(SCHEME,),
+                               encode_rows=(16,), encode_widths=(32,),
+                               logits_rows=(16,), nnz_buckets=(32,),
+                               trials=1, budget_s=0.0, seed=0)
+        assert empty.entries == {}
+    perf.reset()
+    return emit([(
+        "dispatch/smoke_calibrate_roundtrip", dt * 1e6,
+        f"entries={len(table.entries)};decision={before};budget_capped=1")])
+
+
+def _encode_pass(rows):
+    from repro.data import preprocess_rows_packed
+    packed, _ = preprocess_rows_packed(rows, K, B, scheme=SCHEME, seed=1,
+                                       chunk=64)
+    return packed
+
+
+def dispatch_preprocess_bench():
+    from repro import perf
+    if SMOKE:
+        return _smoke()
+    rows, _ = corpus(N_DOCS)
+    perf.reset()
+    out_static = _encode_pass(rows)          # warm the jit caches once
+    static_impl = _any_encode_choice(perf)
+    table = _calibrated_profile()
+    perf.set_profile(table)
+    out_model = _encode_pass(rows)
+    model_impl = _any_encode_choice(perf)
+    # interleaved rounds: both policies see the same box-load envelope
+    t_static = t_model = float("inf")
+    for _ in range(REPEATS):
+        perf.clear_profile()
+        t_static = min(t_static, _timed(_encode_pass, rows)[1])
+        perf.set_profile(table)
+        t_model = min(t_model, _timed(_encode_pass, rows)[1])
+    rep = perf.dispatch_report()
+    perf.reset()
+    assert np.array_equal(out_static, out_model), \
+        "cost-model dispatch changed preprocessing bytes"
+    nnz = sum(len(r) for r in rows)
+    caveat = "box=2core_interleaved_best_of_%d" % REPEATS
+    return emit([
+        (f"dispatch/preprocess_k{K}_b{B}_static", t_static * 1e6,
+         f"Mnnz_per_s={nnz / t_static / 1e6:.1f};impl={static_impl};"
+         f"{caveat}"),
+        (f"dispatch/preprocess_k{K}_b{B}_costmodel", t_model * 1e6,
+         f"Mnnz_per_s={nnz / t_model / 1e6:.1f};impl={model_impl};"
+         f"profile_hits={rep['hits']};"
+         f"speedup_vs_static={t_static / t_model:.2f}x;{caveat}"),
+    ])
+
+
+def _timed(fn, *args):
+    t0 = time.perf_counter()
+    out = fn(*args)
+    return out, time.perf_counter() - t0
+
+
+def _any_encode_choice(perf):
+    rep = perf.dispatch_report()
+    for key, impl in rep["choices"].items():
+        if key.startswith("encode_packed|"):
+            return impl
+    return "?"
+
+
+def _ragged_docs(rng, n):
+    return [np.unique(rng.integers(0, 1 << 26, size=s))
+            for s in rng.integers(16, 1800, size=n)]
+
+
+def dispatch_serving_bench():
+    from repro import perf
+    if SMOKE:
+        return emit([("dispatch/serving_smoke_skipped", 0.0,
+                      "covered_by=dispatch_preprocess_smoke")])
+    import jax
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    from repro.serving import HashedClassifierEngine
+
+    cfg = BBitLinearConfig(k=K, b=B)
+    params = init_bbit_linear(cfg, jax.random.key(0))
+    rng = np.random.default_rng(7)
+    docs = _ragged_docs(rng, 256 if QUICK else 768)
+    kw = dict(seed=1, max_batch=SERVE_MAX_BATCH, max_wait_ms=1.0,
+              scheme=SCHEME, nnz_buckets=SERVE_NNZ_BUCKETS,
+              row_buckets=None)
+
+    # both engines built and warmed up-front (dispatch choices bake in
+    # at trace time), then timed in interleaved rounds so the 2-core
+    # box's load envelope hits static and cost-model passes alike
+    perf.reset()
+    eng_s = HashedClassifierEngine(params, cfg, **kw)
+    perf.set_profile(_calibrated_profile())
+    eng_m = HashedClassifierEngine(params, cfg, **kw)
+    try:
+        s_static, s_model = eng_s.score_docs(docs), eng_m.score_docs(docs)
+        t_static = t_model = float("inf")
+        for _ in range(SERVE_REPEATS):
+            t_static = min(t_static, _timed(eng_s.score_docs, docs)[1])
+            t_model = min(t_model, _timed(eng_m.score_docs, docs)[1])
+        st_static, st_model = eng_s.stats(), eng_m.stats()
+    finally:
+        eng_s.close()
+        eng_m.close()
+        perf.reset()
+    assert np.array_equal(s_static, s_model), \
+        "profile-derived micro-batching changed scores"
+    caveat = "box=2core_interleaved_best_of_%d" % SERVE_REPEATS
+    n = len(docs)
+    return emit([
+        (f"dispatch/serving_k{K}_b{B}_static", t_static / n * 1e6,
+         f"docs_per_s={n / t_static:.0f};"
+         f"row_buckets={'/'.join(map(str, st_static['row_buckets']))};"
+         f"{caveat}"),
+        (f"dispatch/serving_k{K}_b{B}_costmodel", t_model / n * 1e6,
+         f"docs_per_s={n / t_model:.0f};"
+         f"lane_row_buckets={_fmt_lanes(st_model['lane_row_buckets'])};"
+         f"lane_caps={_fmt_lanes(st_model['lane_caps'])};"
+         f"speedup_vs_static={t_static / t_model:.2f}x;{caveat}"),
+    ])
+
+
+def _fmt_lanes(lanes):
+    if not lanes:
+        return "static"
+    return "|".join(
+        f"{m}:{'/'.join(map(str, v)) if isinstance(v, list) else v}"
+        for m, v in sorted(lanes.items(), key=lambda kv: int(kv[0])))

@@ -5,10 +5,11 @@ Prints ``name,us_per_call,derived`` CSV.  QUICK grids by default;
 ``python -m benchmarks.run fig1 fig8 table2``.
 
 ``python -m benchmarks.run --smoke`` is the CI tier: tiny shapes
-(``BENCH_SMOKE=1``), interpret-mode fused-kernel parity canaries and a
-preprocessing-pipeline parity pass — fast enough for every merge, and
-any bit mismatch fails the run.  Smoke mode never writes trajectory
-JSON files.
+(``BENCH_SMOKE=1``), interpret-mode fused-kernel parity canaries, a
+preprocessing-pipeline parity pass, and a budget-capped cost-model
+calibration + profile round-trip (dispatch_preprocess) — fast enough
+for every merge, and any bit mismatch fails the run.  Smoke mode never
+writes trajectory JSON files.
 
 OPH suites write ``BENCH_oph.json``, the preprocess suite writes
 ``BENCH_preprocess.json``, the streaming-trainer suite writes
@@ -25,11 +26,12 @@ import traceback
 
 # Suites whose records feed the perf-trajectory files.
 OPH_SUITES = ("kernels_oph", "oph_curve")
-PREPROCESS_SUITES = ("preprocess",)
+PREPROCESS_SUITES = ("preprocess", "dispatch_preprocess")
 STREAMING_SUITES = ("streaming",)
-SERVING_SUITES = ("serving",)
+SERVING_SUITES = ("serving", "dispatch_serving")
 
-SMOKE_DEFAULT = ["kernels_fused", "preprocess", "streaming", "serving"]
+SMOKE_DEFAULT = ["kernels_fused", "preprocess", "streaming", "serving",
+                 "dispatch_preprocess"]
 
 
 def _write_json(path_env: str, default: str, bench: str, records) -> None:
@@ -53,9 +55,9 @@ def main() -> None:
         argv = [a for a in argv if a != "--smoke"]
         os.environ["BENCH_SMOKE"] = "1"   # before benchmarks.* imports
 
-    from benchmarks import (kernel_bench, paper_figures, preprocess_bench,
-                            roofline_report, serving_bench,
-                            streaming_bench)
+    from benchmarks import (dispatch_bench, kernel_bench, paper_figures,
+                            preprocess_bench, roofline_report,
+                            serving_bench, streaming_bench)
 
     suites = {
         "fig1": paper_figures.fig1_fig2_svm,
@@ -76,6 +78,8 @@ def main() -> None:
         "preprocess": preprocess_bench.preprocess_bench,
         "streaming": streaming_bench.streaming_bench,
         "serving": serving_bench.serving_bench,
+        "dispatch_preprocess": dispatch_bench.dispatch_preprocess_bench,
+        "dispatch_serving": dispatch_bench.dispatch_serving_bench,
     }
     if argv:
         selected = argv

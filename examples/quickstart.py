@@ -22,6 +22,20 @@ or from the command line:
         --mode classifier --http --port 8077
     curl -s localhost:8077/status | python -m json.tool
 
+Calibrate once, run fast (step 6 here): every implementation choice —
+Pallas kernel vs XLA fallback, packed logits kernel vs unpack, serving
+micro-batch sizing — routes through ``repro.perf``.  Measure this box
+once and every launcher picks the measured winner:
+
+    PYTHONPATH=src python -m repro.launch.calibrate \
+        --out artifacts/perf/profile.json --budget-s 60
+    PYTHONPATH=src python -m repro.launch.train --mode stream \
+        --profile artifacts/perf/profile.json
+    # or: export REPRO_PROFILE=artifacts/perf/profile.json
+
+No profile (or a profile from a different machine) is always safe: the
+static heuristics this repo has always shipped apply, bit-identically.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
@@ -83,6 +97,25 @@ def main() -> None:
           f"p50={st['engine']['p50_ms']:.1f}ms")
     srv.request_drain()               # drains the engine too
     srv.wait_finished(timeout=30)
+
+    print("6) calibrate once, run fast: measuring this box's dispatch "
+          "cost table (budget-capped)…")
+    import tempfile
+
+    from repro import perf
+    table = perf.calibrate(k=k, b_values=(b,), schemes=("minwise",),
+                           encode_rows=(32,), encode_widths=(128,),
+                           logits_rows=(64,), include_serving=False,
+                           trials=2, budget_s=15.0)
+    with tempfile.TemporaryDirectory() as td:
+        path = f"{td}/profile.json"
+        table.save(path)                      # versioned, device-keyed
+        perf.maybe_load_profile(path)         # what --profile does
+        rep = perf.dispatch_report()
+    print(f"   {len(table.entries)} measured entries in "
+          f"{table.meta['calibrate_seconds']}s; dispatch now profile-"
+          f"driven (table {rep['table_version']!r}) — wrong-device or "
+          f"missing profiles fall back to the static heuristics")
     assert res.test_acc > 0.85
 
 

@@ -80,6 +80,16 @@ class OPHPaperConfig:
     ft_backoff_cap_s: float = 60.0
     ft_ckpt_keep_last: int = 3
     ft_elastic: bool = True
+    # cost-model dispatch (PR 8): a measured perf profile consumed by
+    # launch/train.py, launch/serve.py and the benchmarks — "calibrate
+    # once, run fast" (launch/calibrate.py writes it; a missing or
+    # wrong-device file silently degrades to the static heuristics) —
+    # and the calibration pass's own knobs
+    profile_path: str = "artifacts/perf/profile.json"
+    calibrate_budget_s: float = 60.0
+    calibrate_trials: int = 3
+    calibrate_max_batch: int = 64
+    calibrate_nnz_buckets: tuple = (128, 512, 2048)
 
     def linear_config(self) -> BBitLinearConfig:
         return BBitLinearConfig(k=self.k, b=self.b,
@@ -125,6 +135,18 @@ class OPHPaperConfig:
                   pipeline_depth=self.serve_pipeline_depth,
                   stats_window=self.serve_stats_window,
                   adapt_every=self.serve_adapt_every)
+        kw.update(overrides)
+        return kw
+
+    def calibrate_kwargs(self, **overrides) -> dict:
+        """Keyword arguments for ``perf.calibrate`` at this config's
+        scale — the one-shot microbenchmark pass behind
+        ``launch/calibrate.py``."""
+        kw = dict(k=self.k, b_values=(self.b,), schemes=(self.scheme,),
+                  max_batch=self.calibrate_max_batch,
+                  nnz_buckets=self.calibrate_nnz_buckets,
+                  trials=self.calibrate_trials,
+                  budget_s=self.calibrate_budget_s, seed=self.seed)
         kw.update(overrides)
         return kw
 

@@ -162,6 +162,32 @@ class HashingScheme:
         """Hash evaluations issued per nonzero (the Table-2 cost driver)."""
         raise NotImplementedError
 
+    # -- dispatch (routed through the perf cost model) ----------------------
+
+    def _encode_shape(self, indices, b: int) -> dict:
+        return {"scheme": self.name, "k": self.k, "b": int(b),
+                "rows": int(indices.shape[0]),
+                "nnz": int(indices.shape[1])}
+
+    def _choose_encode(self, indices, b: int, use_kernel: bool) -> str:
+        """Kernel-vs-XLA choice for unpacked encode.  ``use_kernel=False``
+        pins the XLA arm (the historical contract); True defers to
+        ``perf.choose`` — heuristic (TPU→Pallas) unless a profile says
+        otherwise."""
+        from repro import perf
+        return perf.choose("encode", self._encode_shape(indices, b),
+                           impl=None if use_kernel else "xla")
+
+    def _fused_pack(self, indices, b: int, use_kernel: bool = True) -> bool:
+        """Fused encode→pack choice — shared with the serving engine via
+        ``ops.fused_encode_on_device`` (the single predicate both the
+        offline writers and the jitted hot path branch on)."""
+        from repro.kernels import ops
+        return ops.fused_encode_on_device(
+            int(b), scheme=self.name, k=self.k,
+            rows=int(indices.shape[0]), nnz=int(indices.shape[1]),
+            impl=None if use_kernel else "xla")
+
     def encode_jnp(
         self, indices: jax.Array, mask: jax.Array, b: int,
     ) -> Tuple[jax.Array, Optional[jax.Array]]:
@@ -254,7 +280,7 @@ class MinwiseScheme(HashingScheme):
 
     def encode_device(self, indices, nnz, b, *, use_kernel=True):
         indices = jnp.asarray(indices)
-        if use_kernel and jax.default_backend() == "tpu":
+        if self._choose_encode(indices, b, use_kernel) == "pallas":
             from repro.kernels import ops
             return ops.minhash_bbit(indices, jnp.asarray(nnz),
                                     self._a, self._b, b), None
@@ -263,7 +289,7 @@ class MinwiseScheme(HashingScheme):
 
     def encode_packed_device(self, indices, nnz, b, *, use_kernel=True):
         from repro.kernels import ops
-        if use_kernel and ops.fused_encode_on_device(b):
+        if self._fused_pack(indices, b, use_kernel):
             return ops.minhash_packed(jnp.asarray(indices),
                                       jnp.asarray(nnz),
                                       self._a, self._b, b), None
@@ -275,7 +301,7 @@ class MinwiseScheme(HashingScheme):
 
     def encode_packed_jit(self, indices, nnz, b):
         from repro.kernels import ops
-        if ops.fused_encode_on_device(b):
+        if self._fused_pack(indices, b):
             return ops.minhash_packed(indices, nnz,
                                       self._a, self._b, b), None
         z = minhash_jnp(indices, _prefix_mask(indices, nnz),
@@ -316,7 +342,7 @@ class OPHScheme(HashingScheme):
 
     def encode_device(self, indices, nnz, b, *, use_kernel=True):
         indices = jnp.asarray(indices)
-        if use_kernel and jax.default_backend() == "tpu":
+        if self._choose_encode(indices, b, use_kernel) == "pallas":
             from repro.kernels import ops
             vals = ops.oph(indices, jnp.asarray(nnz),
                            self._a, self._b, self.k)
@@ -328,7 +354,7 @@ class OPHScheme(HashingScheme):
         from repro.kernels import ops
         if not self.densify and b > 15:
             raise ValueError("oph_zero reserves 0xFFFF: b must be <= 15")
-        if use_kernel and ops.fused_encode_on_device(b):
+        if self._fused_pack(indices, b, use_kernel):
             packed, empty = ops.oph_packed(
                 jnp.asarray(indices), jnp.asarray(nnz),
                 self._a, self._b, self.k, b,
@@ -345,7 +371,7 @@ class OPHScheme(HashingScheme):
         from repro.kernels import ops
         if not self.densify and b > 15:
             raise ValueError("oph_zero reserves 0xFFFF: b must be <= 15")
-        if ops.fused_encode_on_device(b):
+        if self._fused_pack(indices, b):
             packed, empty = ops.oph_packed(indices, nnz, self._a,
                                            self._b, self.k, b,
                                            densify=self.densify)

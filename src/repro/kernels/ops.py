@@ -1,6 +1,6 @@
 """Public jit'd wrappers around the Pallas kernels with jnp fallbacks.
 
-Dispatch policy (TPU-adaptive, see DESIGN.md §2):
+Dispatch policy (cost-model driven, see docs/DESIGN.md §2):
   * ``minhash``      — kernel always (pure VPU streaming).
   * ``oph``          — kernel always (single-pass scatter-min; k must be
                        a power of two — the core jnp path covers the
@@ -15,6 +15,11 @@ Dispatch policy (TPU-adaptive, see DESIGN.md §2):
 On non-TPU backends (this CPU container) the wrappers run the kernels
 in interpret mode when ``interpret=None`` (auto) — the same code path a
 TPU deployment exercises, minus Mosaic lowering.
+
+Every branch here is a thin client of ``perf.choose`` — the measured
+cost-model dispatch layer.  Without a loaded profile the choices are
+bit-identical to the historical static policy; with one, each
+(op, shape-bucket) picks whichever arm actually measured faster.
 """
 from __future__ import annotations
 
@@ -39,14 +44,14 @@ from repro.kernels.bbit_linear import (
     bbit_linear_packed_bwd_dw_pallas,
 )
 from repro.kernels.vw_sketch import vw_sketch_pallas
-
-BBIT_KERNEL_MAX_V = 4096  # 2^12; beyond this the gather path wins
+from repro import perf
+from repro.perf import BBIT_KERNEL_MAX_V  # canonical home is perf; noqa
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is not None:
         return interpret
-    return jax.default_backend() != "tpu"
+    return perf.choose("pallas_mode") != "compiled"
 
 
 # ---------------------------------------------------------------------------
@@ -82,14 +87,30 @@ def fused_pack_supported(bits: int) -> bool:
     return bits in PACK_BITS
 
 
-def fused_encode_on_device(bits: int) -> bool:
-    """THE dispatch predicate for the fused encode kernels: TPU backend
-    AND byte-aligned b.  ``schemes.encode_packed_device`` (offline
-    preprocessing) and ``schemes.encode_packed_jit`` (the serving
-    engine's jitted encode→score pass) both branch on it, so the
-    serving hot path can never diverge from the preprocessing dispatch
-    policy (interpret-mode Pallas on CPU would crawl; XLA covers it)."""
-    return jax.default_backend() == "tpu" and fused_pack_supported(bits)
+def fused_encode_on_device(bits: int, *, scheme: Optional[str] = None,
+                           k: Optional[int] = None,
+                           rows: Optional[int] = None,
+                           nnz: Optional[int] = None,
+                           impl: Optional[str] = None) -> bool:
+    """THE dispatch predicate for the fused encode kernels — now a thin
+    client of ``perf.choose("encode_packed", ...)``.
+    ``schemes.encode_packed_device`` (offline preprocessing) and
+    ``schemes.encode_packed_jit`` (the serving engine's jitted
+    encode→score pass) both branch on it, so the serving hot path can
+    never diverge from the preprocessing dispatch policy.  Without a
+    profile this reproduces the old static predicate exactly: TPU
+    backend AND byte-aligned b (interpret-mode Pallas on CPU would
+    crawl; XLA covers it)."""
+    shape = {"b": int(bits)}
+    if scheme is not None:
+        shape["scheme"] = scheme
+    if k is not None:
+        shape["k"] = int(k)
+    if rows is not None:
+        shape["rows"] = int(rows)
+    if nnz is not None:
+        shape["nnz"] = int(nnz)
+    return perf.choose("encode_packed", shape, impl=impl) == "pallas"
 
 
 def minhash_packed(indices, nnz, a, b, bits: int,
@@ -141,7 +162,8 @@ def _bbit_linear_vjp_fwd(codes, weights, interpret):
 def _bbit_linear_vjp_bwd(interpret, res, dout):
     codes, weights = res
     v = weights.shape[1]
-    if v <= BBIT_KERNEL_MAX_V:
+    shape = {"v": v, "k": codes.shape[1], "rows": codes.shape[0]}
+    if perf.choose("logits_bwd", shape) == "kernel":
         dw = bbit_linear_bwd_dw_pallas(
             codes.astype(jnp.int32), dout.astype(jnp.float32), v,
             interpret=_auto_interpret(interpret))
@@ -190,7 +212,8 @@ def _bbit_linear_packed_vjp_fwd(k, bits, interpret, packed, empty,
 def _bbit_linear_packed_vjp_bwd(k, bits, interpret, res, dout):
     packed, empty, weights = res
     v = weights.shape[1]
-    if packed_kernel_supported(bits, v):
+    shape = {"v": v, "k": k, "b": bits, "rows": packed.shape[0]}
+    if perf.choose("logits_packed_bwd", shape) == "kernel":
         dw = bbit_linear_packed_bwd_dw_pallas(
             packed, dout.astype(jnp.float32), v, k=k, bits=bits,
             empty=empty, interpret=_auto_interpret(interpret))

@@ -1,0 +1,68 @@
+"""Calibration launcher — "calibrate once, run fast".
+
+One-shot microbenchmark pass (``perf.calibrate``) over the dispatchable
+ops on THIS box, writing a versioned, device-fingerprinted cost profile:
+
+    python -m repro.launch.calibrate --out artifacts/perf/profile.json
+
+Afterwards every launcher/bench that passes ``--profile`` (or reads
+``CONFIG.profile_path`` / the ``REPRO_PROFILE`` env var) dispatches
+encode, logits, and serving micro-batch sizing off the measured table
+instead of the static platform heuristics.  The pass is wall-clock
+budgeted (``--budget-s``) — a partial table is safe: any bucket missing
+a measured arm just keeps the heuristic choice.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    from repro.configs.rcv1_oph import CONFIG
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=CONFIG.profile_path,
+                    help="profile JSON destination")
+    ap.add_argument("--budget-s", type=float,
+                    default=CONFIG.calibrate_budget_s,
+                    help="wall-clock budget for the whole pass")
+    ap.add_argument("--trials", type=int, default=CONFIG.calibrate_trials)
+    ap.add_argument("--k", type=int, default=CONFIG.k)
+    ap.add_argument("--b", type=int, action="append", default=None,
+                    help="b values to measure (repeatable; default "
+                         f"[{CONFIG.b}])")
+    ap.add_argument("--scheme", action="append", default=None,
+                    help="schemes to measure (repeatable; default "
+                         f"[{CONFIG.scheme!r}])")
+    ap.add_argument("--max-batch", type=int,
+                    default=CONFIG.calibrate_max_batch,
+                    help="serving row-bucket ceiling for the "
+                         "serve_score curve")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="skip the serve_score sizing curve")
+    ap.add_argument("--seed", type=int, default=CONFIG.seed)
+    ap.add_argument("--table-version", default="v1")
+    args = ap.parse_args()
+
+    from repro import perf
+    table = perf.calibrate(**CONFIG.calibrate_kwargs(
+        k=args.k,
+        b_values=tuple(args.b or [CONFIG.b]),
+        schemes=tuple(args.scheme or [CONFIG.scheme]),
+        max_batch=args.max_batch,
+        include_serving=not args.no_serving,
+        trials=args.trials, budget_s=args.budget_s, seed=args.seed,
+        table_version=args.table_version))
+    table.save(args.out)
+    summary = perf.summarize(table)
+    print(json.dumps(summary, indent=2, sort_keys=True))
+    print(f"\nwrote {len(table.entries)} entries "
+          f"({table.meta.get('calibrate_seconds', '?')}s) "
+          f"-> {os.path.abspath(args.out)}")
+    print("use it via --profile, CONFIG.profile_path, or "
+          f"REPRO_PROFILE={args.out}")
+
+
+if __name__ == "__main__":
+    main()

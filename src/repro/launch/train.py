@@ -103,8 +103,11 @@ def run_linear(args) -> dict:
     te_acc = accuracy(
         predict_classes(state.params, jnp.asarray(codes_te.astype(np.int32)),
                         lcfg), y_te)
+    from repro import perf
+    rep = perf.dispatch_report()
     print(f"final loss={np.mean(losses[-10:]):.4f} test_acc={te_acc:.4f} "
-          f"stragglers={len(watchdog.flagged_steps)}")
+          f"stragglers={len(watchdog.flagged_steps)} "
+          f"dispatch_hits={rep['hits']} fallbacks={rep['fallbacks']}")
     return dict(test_acc=te_acc, final_loss=float(np.mean(losses[-10:])),
                 steps=int(min(total_steps, step + 1)))
 
@@ -148,12 +151,16 @@ def run_stream(args) -> dict:
     faults.disarm()
     res = sup.result
     n_rows = sum(shard_row_counts(hashed_dir))
+    from repro import perf
+    rep = perf.dispatch_report()
     print(f"streamed {n_rows} rows x {args.epochs} epochs in "
           f"{res.train_seconds:.1f}s: progressive_acc="
           f"{res.progressive_acc:.4f} steps={res.n_steps} "
           f"restarts={sup.restarts} "
           f"stragglers={sup.straggler_escalations} "
-          f"topology={res.topology_lineage}")
+          f"topology={res.topology_lineage} "
+          f"dispatch={res.dispatch} "
+          f"(profile_hits={rep['hits']} fallbacks={rep['fallbacks']})")
     return dict(progressive_acc=res.progressive_acc,
                 steps=res.n_steps, restarts=sup.restarts,
                 crashes=[c.error for c in sup.crashes])
@@ -238,8 +245,23 @@ def main() -> None:
     ap.add_argument("--data-parallel", type=int, default=None,
                     help="stream mode: logical data-parallel world "
                          "(elastic — folds onto available devices)")
+    ap.add_argument("--profile", default=None,
+                    help="perf cost-model profile JSON (default: the "
+                         "config's profile_path if it exists; missing/"
+                         "mismatched files fall back to the static "
+                         "dispatch heuristics)")
     args = ap.parse_args()
     os.makedirs(args.workdir, exist_ok=True)
+    from repro import perf
+    from repro.configs.rcv1_oph import CONFIG
+    profile = args.profile if args.profile is not None \
+        else CONFIG.profile_path
+    if perf.maybe_load_profile(profile):
+        print(f"dispatch: cost-model profile {profile} "
+              f"(table {perf.get_model().table.table_version})")
+    else:
+        print("dispatch: static heuristics (no usable profile; run "
+              "python -m repro.launch.calibrate to measure this box)")
     if args.mode == "linear":
         run_linear(args)
     elif args.mode == "stream":

@@ -16,6 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import perf
 from repro.kernels import ops, ref
 
 
@@ -48,12 +49,36 @@ def init_bbit_linear(cfg: BBitLinearConfig, key: Optional[jax.Array] = None):
     return {"table": table, "bias": bias}
 
 
-def _kernel_enabled(cfg: BBitLinearConfig) -> bool:
+def _forced_impl(cfg: BBitLinearConfig, kernel: str, fallback: str
+                 ) -> Optional[str]:
+    """Map the config's ``use_kernel`` tri-state onto a perf pin:
+    'always'→kernel, 'never'→the fallback arm, 'auto'→None (let
+    ``perf.choose`` decide — static TPU heuristic unless a measured
+    profile says otherwise)."""
     if cfg.use_kernel == "always" or cfg.use_kernel is True:
-        return True
+        return kernel
     if cfg.use_kernel == "never" or cfg.use_kernel is False:
-        return False
-    return jax.default_backend() == "tpu"
+        return fallback
+    return None
+
+
+def logits_impl(cfg: BBitLinearConfig, rows: Optional[int] = None) -> str:
+    """The widened-codes dispatch choice: 'kernel' | 'gather'."""
+    shape = {"k": cfg.k, "b": cfg.b, "v": 1 << cfg.b}
+    if rows is not None:
+        shape["rows"] = int(rows)
+    return perf.choose("logits", shape,
+                       impl=_forced_impl(cfg, "kernel", "gather"))
+
+
+def logits_packed_impl(cfg: BBitLinearConfig,
+                       rows: Optional[int] = None) -> str:
+    """The packed-rows dispatch choice: 'kernel' | 'unpack'."""
+    shape = {"k": cfg.k, "b": cfg.b, "v": 1 << cfg.b}
+    if rows is not None:
+        shape["rows"] = int(rows)
+    return perf.choose("logits_packed", shape,
+                       impl=_forced_impl(cfg, "kernel", "unpack"))
 
 
 def bbit_logits(params, codes: jax.Array, cfg: BBitLinearConfig,
@@ -70,7 +95,7 @@ def bbit_logits(params, codes: jax.Array, cfg: BBitLinearConfig,
             axis=2,
         )[:, :, 0, :].astype(jnp.float32)
         out = jnp.where(empty[:, :, None], 0.0, gathered).sum(axis=1)
-    elif _kernel_enabled(cfg) and (1 << cfg.b) <= ops.BBIT_KERNEL_MAX_V:
+    elif logits_impl(cfg, rows=codes.shape[0]) == "kernel":
         out = ops.bbit_linear(codes.astype(jnp.int32), params["table"])
     else:
         out = ref.bbit_linear_fwd(codes, params["table"])
@@ -94,8 +119,7 @@ def bbit_logits_packed(params, packed: jax.Array, cfg: BBitLinearConfig,
     inside the caller's jit (bit-identical numerics; the widened codes
     are a fused temporary).
     """
-    if (_kernel_enabled(cfg)
-            and ops.packed_kernel_supported(cfg.b, 1 << cfg.b)):
+    if logits_packed_impl(cfg, rows=packed.shape[0]) == "kernel":
         out = ops.bbit_linear_packed(packed, params["table"], cfg.k,
                                      cfg.b, empty=empty_packed)
         if cfg.normalize:

@@ -1,0 +1,230 @@
+"""One-shot microbenchmark calibration for the dispatch cost model.
+
+Protocol (docs/DESIGN.md §2.3): for every (op, shape) in a small
+deterministic grid, each eligible implementation is pinned via
+``perf.forced`` and timed through the *real* dispatch path — the same
+wrappers production calls — with one untimed warmup call (compile time
+excluded; steady-state is what dispatch predicts) followed by
+median-of-``trials`` timed calls, each blocked to completion.  A
+global wall-clock ``budget_s`` is enforced between measurements: when
+it runs out the table is returned as-is, and :func:`cost_model.choose`
+simply falls back to the static heuristic for any bucket that is
+missing an arm — partial profiles are safe by construction.
+
+Trial inputs are derived from a fixed seed so two calibration runs on
+the same box produce comparable tables.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.perf import cost_model
+from repro.perf.cost_model import OPS, CostTable, device_fingerprint
+
+
+class _Budget:
+    def __init__(self, budget_s: float):
+        self._t0 = time.perf_counter()
+        self._budget = float(budget_s)
+
+    def spent(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def exhausted(self) -> bool:
+        return self.spent() >= self._budget
+
+
+def _median_time(fn, trials: int, budget: _Budget) -> Optional[float]:
+    """One warmup (compile) + up to ``trials`` timed calls; returns the
+    median, or the single warmup-adjacent sample if the budget dies
+    early, or None if there was no room for even the warmup."""
+    if budget.exhausted():
+        return None
+    fn()                                    # warmup / compile — untimed
+    samples = []
+    for _ in range(max(1, trials)):
+        if samples and budget.exhausted():
+            break
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples)) if samples else None
+
+
+def _block(x) -> None:
+    import jax
+    jax.block_until_ready(x)
+
+
+# ---------------------------------------------------------------------------
+# deterministic trial inputs
+
+
+def _sparse_rows(rng: np.random.Generator, rows: int, width: int):
+    import jax.numpy as jnp
+    idx = rng.integers(0, 1 << 30, size=(rows, width)).astype(np.int32)
+    nnz = rng.integers(max(1, width // 2), width + 1,
+                       size=(rows,)).astype(np.int32)
+    return jnp.asarray(idx), jnp.asarray(nnz)
+
+
+def _measure_encode(table: CostTable, *, scheme: str, k: int, b: int,
+                    rows: int, width: int, trials: int, budget: _Budget,
+                    seed: int, packed: bool) -> None:
+    from repro.core.schemes import make_scheme
+    op = "encode_packed" if packed else "encode"
+    sch = make_scheme(scheme, k, seed)
+    rng = np.random.default_rng(seed * 7919 + rows * 31 + width)
+    idx, nnz = _sparse_rows(rng, rows, width)
+    shape = {"scheme": scheme, "k": k, "b": b, "rows": rows, "nnz": width}
+    for impl in OPS[op].eligible(shape):
+        with cost_model.forced(**{op: impl}):
+            if packed:
+                fn = lambda: _block(sch.encode_packed_device(idx, nnz, b))
+            else:
+                fn = lambda: _block(sch.encode_device(idx, nnz, b))
+            sec = _median_time(fn, trials, budget)
+        if sec is not None:
+            table.put(op, impl, shape, sec)
+
+
+def _measure_logits(table: CostTable, *, k: int, b: int, rows: int,
+                    trials: int, budget: _Budget, seed: int,
+                    packed: bool) -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.bbit import pack_codes
+    from repro.models.linear import (
+        BBitLinearConfig, bbit_logits, bbit_logits_packed, init_bbit_linear)
+    op = "logits_packed" if packed else "logits"
+    v = 1 << b
+    cfg = BBitLinearConfig(k=k, b=b)
+    params = init_bbit_linear(cfg, jax.random.key(seed))
+    rng = np.random.default_rng(seed * 104729 + rows * 13 + b)
+    codes = rng.integers(0, v, size=(rows, k)).astype(np.uint16)
+    shape = {"k": k, "b": b, "v": v, "rows": rows}
+    if packed:
+        x = jnp.asarray(pack_codes(codes, b))
+    else:
+        x = jnp.asarray(codes.astype(np.int32))
+    for impl in OPS[op].eligible(shape):
+        with cost_model.forced(**{op: impl}):
+            # fresh jit wrapper per impl — the pin is read at trace time
+            fn = jax.jit(
+                (lambda p, c: bbit_logits_packed(p, c, cfg)) if packed
+                else (lambda p, c: bbit_logits(p, c, cfg)))
+            sec = _median_time(lambda: _block(fn(params, x)),
+                               trials, budget)
+        if sec is not None:
+            table.put(op, impl, shape, sec)
+
+
+def _measure_serve_score(table: CostTable, *, scheme: str, k: int, b: int,
+                         max_batch: int, nnz_buckets: Sequence[int],
+                         trials: int, budget: _Budget, seed: int) -> None:
+    """Cost-per-dispatch curve for the serving fused encode→score path
+    over the (row bucket × nnz lane) grid — feeds
+    ``perf.suggest_row_buckets`` / ``suggest_lane_caps``."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.schemes import make_scheme
+    from repro.models.linear import (
+        BBitLinearConfig, bbit_scores_packed, init_bbit_linear)
+    sch = make_scheme(scheme, k, seed)
+    cfg = BBitLinearConfig(k=k, b=b)
+    params = init_bbit_linear(cfg, jax.random.key(seed))
+
+    @jax.jit
+    def score(idx, nnz, p):
+        packed, empty = sch.encode_packed_jit(idx, nnz, b)
+        return bbit_scores_packed(p, packed, cfg, empty_packed=empty)
+
+    rng = np.random.default_rng(seed * 613 + k)
+    for m in nnz_buckets:
+        for rows in cost_model._pow2_candidates(max_batch):
+            if budget.exhausted():
+                return
+            idx, nnz = _sparse_rows(rng, rows, int(m))
+            sec = _median_time(lambda: _block(score(idx, nnz, params)),
+                               trials, budget)
+            if sec is not None:
+                table.put("serve_score", "fused",
+                          {"scheme": scheme, "k": k, "b": b,
+                           "rows": rows, "nnz": int(m)}, sec)
+
+
+# ---------------------------------------------------------------------------
+
+
+def calibrate(*, k: int = 256, b_values: Iterable[int] = (8,),
+              schemes: Iterable[str] = ("oph",),
+              encode_rows: Iterable[int] = (64, 256),
+              encode_widths: Iterable[int] = (256, 1024),
+              logits_rows: Iterable[int] = (256, 1024),
+              max_batch: int = 64,
+              nnz_buckets: Sequence[int] = (128, 512, 2048),
+              include_serving: bool = True,
+              trials: int = 3, budget_s: float = 60.0,
+              seed: int = 0,
+              table_version: str = "v1") -> CostTable:
+    """Populate a :class:`CostTable` for this device within a wall-clock
+    budget.  Shapes are visited cheapest-first so a tight budget still
+    yields complete (all-impl) entries for the small buckets."""
+    budget = _Budget(budget_s)
+    table = CostTable(fingerprint=device_fingerprint(),
+                      table_version=table_version,
+                      meta={"budget_s": float(budget_s),
+                            "trials": int(trials), "seed": int(seed),
+                            "k": int(k), "schemes": list(schemes),
+                            "b_values": [int(b) for b in b_values]})
+    for b in b_values:
+        for rows in sorted(encode_rows):
+            for width in sorted(encode_widths):
+                for scheme in schemes:
+                    if budget.exhausted():
+                        break
+                    _measure_encode(table, scheme=scheme, k=k, b=b,
+                                    rows=rows, width=width, trials=trials,
+                                    budget=budget, seed=seed, packed=True)
+                    _measure_encode(table, scheme=scheme, k=k, b=b,
+                                    rows=rows, width=width, trials=trials,
+                                    budget=budget, seed=seed, packed=False)
+        for rows in sorted(logits_rows):
+            if budget.exhausted():
+                break
+            _measure_logits(table, k=k, b=b, rows=rows, trials=trials,
+                            budget=budget, seed=seed, packed=True)
+            _measure_logits(table, k=k, b=b, rows=rows, trials=trials,
+                            budget=budget, seed=seed, packed=False)
+        if include_serving and not budget.exhausted():
+            for scheme in schemes:
+                _measure_serve_score(table, scheme=scheme, k=k, b=b,
+                                     max_batch=max_batch,
+                                     nnz_buckets=nnz_buckets,
+                                     trials=trials, budget=budget,
+                                     seed=seed)
+    table.meta["calibrate_seconds"] = round(budget.spent(), 3)
+    table.meta["n_entries"] = len(table.entries)
+    return table
+
+
+def summarize(table: CostTable) -> Dict[str, object]:
+    """Human-oriented digest: per-op entry counts and, for each op with
+    both arms measured, which impl the profile would pick per bucket."""
+    per_op: Dict[str, int] = {}
+    picks: Dict[str, Dict[str, str]] = {}
+    by_bucket: Dict[Tuple[str, str], Dict[str, float]] = {}
+    for key, sec in table.entries.items():
+        op, impl, bucket = key.split("|", 2)
+        per_op[op] = per_op.get(op, 0) + 1
+        by_bucket.setdefault((op, bucket), {})[impl] = sec
+    for (op, bucket), costs in sorted(by_bucket.items()):
+        if len(costs) > 1:
+            picks.setdefault(op, {})[bucket] = min(costs, key=costs.get)
+    return {"table_version": table.table_version,
+            "fingerprint": table.fingerprint,
+            "entries": len(table.entries), "per_op": per_op,
+            "profile_picks": picks, "meta": table.meta}

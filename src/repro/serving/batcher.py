@@ -174,7 +174,9 @@ class BucketBatcher:
     per-item results`` runs on the resolver thread (the blocking
     device→host sync lives here, off the drain loop).
 
-    A lane is drained when it reaches ``max_batch`` items or its oldest
+    A lane is drained when it reaches its cap (``lane_caps[key]`` where
+    given — the cost model's measured throughput-optimal micro-batch
+    for that lane — else the global ``max_batch``) or its oldest
     request has waited ``max_wait_ms``; a full lane dispatches
     immediately (never queues behind another lane's not-yet-ripe head),
     otherwise lanes compete oldest-head-first so none starves.  At most
@@ -189,7 +191,8 @@ class BucketBatcher:
                  depth: int = 2,
                  size: Callable[[object], int] = len,
                  watchdog: Optional[StepWatchdog] = None,
-                 stall_after_s: float = 10.0):
+                 stall_after_s: float = 10.0,
+                 lane_caps: Optional[Dict[Hashable, int]] = None):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self._dispatch = dispatch
@@ -197,6 +200,7 @@ class BucketBatcher:
         self._route = route
         self._size = size
         self.max_batch = max_batch
+        self.lane_caps = dict(lane_caps or {})
         self.max_wait = max_wait_ms / 1000.0
         self.depth = depth
         self._cond = threading.Condition()
@@ -279,16 +283,20 @@ class BucketBatcher:
                 "slow_batches": len(self.watchdog.flagged_steps),
                 "escalations": len(self.watchdog.escalations)}
 
+    def _lane_cap(self, key) -> int:
+        cap = self.lane_caps.get(key, self.max_batch)
+        return max(1, min(int(cap), self.max_batch))
+
     def _pick_locked(self):
-        """→ (key, head_enq_time, full) or None.  A FULL lane (≥
-        max_batch) wins outright — it is dispatchable NOW and must not
+        """→ (key, head_enq_time, full) or None.  A FULL lane (≥ its
+        cap) wins outright — it is dispatchable NOW and must not
         wait behind an older-but-not-yet-ripe head in another lane;
         otherwise the oldest head (latency fairness)."""
         best = None
         for key, lane in self._lanes.items():
             if not lane:
                 continue
-            if len(lane) >= self.max_batch:
+            if len(lane) >= self._lane_cap(key):
                 return (key, lane[0][2], True)
             if best is None or lane[0][2] < best[1]:
                 best = (key, lane[0][2], False)
@@ -310,7 +318,8 @@ class BucketBatcher:
                     age = time.perf_counter() - t_head
                     if full or self._closed or age >= self.max_wait:
                         batch = [lane.popleft() for _ in
-                                 range(min(len(lane), self.max_batch))]
+                                 range(min(len(lane),
+                                           self._lane_cap(key)))]
                         break
                     # head not ripe: sleep at most until it is (an
                     # incoming submit notifies earlier)

@@ -112,8 +112,10 @@ from repro.data.prefetch import (
     Boundary, StreamBatch, ThreadedPrefetcher, group_batch_stream,
     serial_batch_stream, shard_order,
 )
+from repro import perf
 from repro.models.linear import (
     BBitLinearConfig, bbit_logits_packed, init_bbit_linear,
+    logits_packed_impl,
 )
 from repro.optim.averaging import average_or_none
 from repro.optim.optimizers import make_optimizer
@@ -148,6 +150,12 @@ class StreamFitResult:
     # under, oldest first — the sanctioned topology-lineage record
     # also stored in each checkpoint's meta.json
     topology_lineage: list = dataclasses.field(default_factory=list)
+    # what the cost-model dispatch actually ran (impl per op + profile
+    # identity) — recorded in each checkpoint's meta.json extras too,
+    # NOT in the replay fingerprint (a profile swap must not invalidate
+    # a resume; the numerics are impl-invariant within tolerance and
+    # bit-identical on the packed-kernel/unpack pair used here)
+    dispatch: Optional[dict] = None
 
     @property
     def eval_params(self) -> Any:
@@ -439,8 +447,18 @@ def fit_streaming(
     # the warm step cost on repeated bench/test fits.  The physical
     # world is part of the key: the same logical schedule folds into
     # differently-shaped per-device programs on different meshes.
+    # resolve the packed-logits dispatch ONCE, up front: it pins the
+    # trace (part of the step-cache key — a profile loaded between two
+    # fits must not reuse a step traced for the other impl) and is the
+    # run's dispatch-of-record in checkpoints + StreamFitResult
+    chosen_impl = logits_packed_impl(cfg, rows=batch_size)
+    _perf_rep = perf.dispatch_report()
+    dispatch_record = {"logits_packed": chosen_impl,
+                       "table_version": _perf_rep["table_version"],
+                       "profile_loaded": _perf_rep["profile_loaded"]}
+
     step_key = ("dp" if dp else "serial", logical, physical, cfg,
-                has_empty, loss, optimizer, lr, l2)
+                has_empty, loss, optimizer, lr, l2, chosen_impl)
     step_fn = _STEP_CACHE.get(step_key)
     if step_fn is None:
         if dp:
@@ -474,7 +492,8 @@ def fit_streaming(
                   keep_last=ckpt_keep_last,
                   extra_meta={"schedule": {"dp": dp,
                                            "logical_world": int(logical)},
-                              "lineage": lineage})
+                              "lineage": lineage,
+                              "dispatch": dispatch_record})
         # also publish the current EVAL iterate (Polyak average once
         # the tail window opened, else the raw iterate) as a params-
         # only snapshot under <ckpt_dir>/serve — what a live server's
@@ -577,4 +596,5 @@ def fit_streaming(
         shards_processed=shards_done,
         completed=not stopped,
         topology_lineage=lineage,
+        dispatch=dispatch_record,
     )
