@@ -1,0 +1,266 @@
+"""Banded-LSH retrieval benchmarks: recall vs brute force, QPS, memory.
+
+The packed b-bit codes the serving tier already stores are an LSH
+sketch, so near-duplicate retrieval falls out of the same bytes
+(``retrieval/``): r-rows-per-band keys gathered straight from the
+packed codes bucket documents, and candidates are ranked by packed
+Hamming similarity on device (``kernels/hamming.py`` via the
+``hamming_topk`` dispatch op).
+
+Full tier — for each ``rows_per_band`` r on one hashed corpus:
+
+  * recall@k of ``BandedLSHIndex.query`` against ground truth ranked
+    by BRUTE-FORCE true resemblance |A∩B|/|A∪B| over the raw token
+    sets (not the sketch — so the number folds in both the banding
+    loss and the b-bit estimation error);
+  * the same recall for a full Hamming scan over every stored code
+    (r-independent; isolates the banding loss from the sketch error);
+  * query throughput (QPS, steady state after one warmup sweep),
+    mean candidate fraction per probe, index build rate, and the
+    index's own ``bytes_est`` accounting — the recall/QPS/memory
+    trade as r moves.
+
+Queries are an adversarial half/half mix: perturbed near-duplicates
+of corpus documents (10% token churn — these MUST be found) and fresh
+unrelated documents (nothing to find; they probe the cand-frac cost).
+
+``--smoke`` / ``BENCH_SMOKE=1`` (CI) asserts the bit contracts on tiny
+shapes: band keys gathered from packed bytes ≡ keys recomputed from
+unpacked codes across aligned AND unaligned b×r grids, exact-duplicate
+retrieval at rank 1 with similarity 1.0 plus near-duplicate recall on
+a tiny corpus, and the serving dedup-cache contract end-to-end — a
+cache HIT returns bitwise the floats a fresh cacheless dispatch
+produces, without touching the batcher.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, SMOKE, emit
+
+K = 256
+B = 8
+SEED = 1
+TOP_K = 10
+# r must divide K and keep r*B <= 56 band bits (one uint64 gather),
+# so with B=8 the legal sweep is r in {1, 2, 4}
+ROWS_PER_BAND = (1, 2, 4)
+N_CORPUS = 1200 if QUICK else 4000
+N_QUERIES = 48 if QUICK else 150
+DROP_FRAC = 0.1
+ENCODE_CHUNK = 256
+
+
+def _encode_packed(scheme, rows, b: int) -> np.ndarray:
+    """Host-side packed codes (bit-identical to the device encode),
+    chunked so padding stays bounded by the widest doc per chunk."""
+    from repro.data.packing import pad_rows
+    out = []
+    for lo in range(0, len(rows), ENCODE_CHUNK):
+        idx, nnz = pad_rows(rows[lo:lo + ENCODE_CHUNK], pad_to_multiple=1)
+        packed, _ = scheme.encode_packed_numpy(idx, nnz, b)
+        out.append(packed)
+    return np.concatenate(out, axis=0)
+
+
+def _perturb(rng, doc: np.ndarray, drop_frac: float) -> np.ndarray:
+    keep = doc[rng.random(doc.size) > drop_frac]
+    extra = rng.integers(0, 1 << 30,
+                         size=max(1, int(doc.size * drop_frac)))
+    return np.unique(np.concatenate([keep, extra.astype(doc.dtype)]))
+
+
+def _resemblance_topk(queries, docs, k: int) -> list:
+    """Ground truth: top-k corpus ids by |A∩B|/|A∪B| per query."""
+    truth = []
+    for q in queries:
+        sims = np.empty(len(docs), np.float64)
+        for j, d in enumerate(docs):
+            inter = np.intersect1d(q, d, assume_unique=True).size
+            sims[j] = inter / (q.size + d.size - inter)
+        truth.append(np.argsort(-sims)[:k])
+    return truth
+
+
+def _recall(got_ids, truth_ids) -> float:
+    hits = sum(len(set(int(i) for i in g) & set(int(i) for i in t))
+               for g, t in zip(got_ids, truth_ids))
+    return hits / (len(truth_ids) * len(truth_ids[0]))
+
+
+# ------------------------------------------------------- smoke tier -------
+def _smoke() -> list:
+    from repro.core.bbit import pack_codes
+    from repro.core.schemes import make_scheme
+    from repro.retrieval import (BandedLSHIndex, band_keys_packed,
+                                 band_keys_ref)
+
+    # band keys straight from packed bytes ≡ keys from unpacked codes,
+    # aligned (r*b % 8 == 0) and unaligned grids alike
+    rng = np.random.default_rng(0)
+    checked = 0
+    for b in (1, 2, 3, 4, 8, 12):
+        for r in (1, 2, 4):
+            k = 24
+            codes = rng.integers(0, 1 << b, size=(16, k)).astype(np.uint16)
+            got = band_keys_packed(pack_codes(codes, b), k, b, r)
+            want = band_keys_ref(codes, b, r)
+            assert np.array_equal(got, want), \
+                f"band keys drifted from reference (b={b}, r={r})"
+            checked += 1
+
+    # retrieval sanity on a tiny corpus: the exact duplicate is rank 1
+    # at similarity 1.0; a 10%-churn near-duplicate lands in the top k
+    scheme = make_scheme("oph", 64, SEED)
+    docs = [np.unique(rng.integers(0, 1 << 24,
+                                   size=int(rng.integers(40, 120))))
+            for _ in range(32)]
+    packed = _encode_packed(scheme, docs, 4)
+    index = BandedLSHIndex(k=64, b=4, rows_per_band=4)
+    index.insert(list(range(len(docs))), packed)
+    ids, sims = index.query(packed[5], top_k=3)
+    assert ids[0] == 5 and float(sims[0]) == 1.0, \
+        "exact duplicate not rank-1/sim-1.0"
+    near = _perturb(rng, docs[7], DROP_FRAC)
+    q = _encode_packed(scheme, [near], 4)[0]
+    ids, _ = index.query(q, top_k=5)
+    assert 7 in [int(i) for i in ids], "near-duplicate missed at top-5"
+
+    hit_parity = _smoke_dedup_hit_parity()
+    return emit([
+        ("retrieval/smoke_band_parity", 0.0,
+         f"grids_bitwise_identical={checked};"
+         "note=packed_gather_vs_unpacked_reference"),
+        ("retrieval/smoke_recall_sanity_k64_b4", 0.0,
+         "exact_dup_rank1_sim1=1;near_dup_top5=1"),
+        hit_parity,
+    ])
+
+
+def _smoke_dedup_hit_parity() -> tuple:
+    """Serving dedup-cache contract: second submit of the same doc is a
+    HIT, returns bitwise the fresh cacheless floats, and never reaches
+    the batcher."""
+    import jax
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    from repro.serving import HashedClassifierEngine
+
+    rng = np.random.default_rng(3)
+    docs = [np.unique(rng.integers(0, 1 << 24,
+                                   size=int(rng.integers(10, 60))))
+            for _ in range(6)]
+    lcfg = BBitLinearConfig(k=16, b=4)
+    params = init_bbit_linear(lcfg, jax.random.key(2))
+    eng = HashedClassifierEngine(params, lcfg, seed=3, scheme="oph",
+                                 max_batch=4, max_wait_ms=2.0,
+                                 nnz_buckets=(128,), row_buckets=(1, 4),
+                                 precompile=False, dedup_cache=True,
+                                 dedup_entries=32)
+    try:
+        for d in docs:
+            eng.submit(d).result(timeout=120)      # fill
+        batches = eng.batcher.batches_run
+        for d in docs:
+            want = float(eng.score_docs([d])[0])   # bypasses the cache
+            got = float(eng.submit(d).result(timeout=120))
+            assert got == want, "cache hit != fresh dispatch bitwise"
+        st = eng.stats()["dedup"]
+        assert st["hits"] >= len(docs), f"expected hits, got {st}"
+        assert eng.batcher.batches_run == batches, \
+            "cache hit reached the batcher"
+    finally:
+        eng.close()
+    return ("retrieval/smoke_dedup_hit_parity_k16_b4", 0.0,
+            "hit_bitwise_eq_fresh=1;no_dispatch_on_hit=1;"
+            f"hits={st['hits']};guard_rejects={st['guard_rejects']}")
+
+
+# -------------------------------------------------------- full tier -------
+def retrieval_bench() -> list:
+    if SMOKE:
+        return _smoke()
+    from benchmarks.common import corpus
+    from repro.core.schemes import make_scheme
+    from repro.kernels import ops
+    from repro.retrieval import BandedLSHIndex
+
+    rng = np.random.default_rng(SEED)
+    docs, _ = corpus(N_CORPUS)
+    docs = list(docs)
+    scheme = make_scheme("oph", K, SEED)
+    t0 = time.perf_counter()
+    packed = _encode_packed(scheme, docs, B)
+    encode_s = time.perf_counter() - t0
+
+    # half near-duplicates (must be found), half fresh docs (cost probe)
+    q_docs, dup_of = [], []
+    for i in range(N_QUERIES):
+        if i % 2 == 0:
+            j = int(rng.integers(0, len(docs)))
+            q_docs.append(_perturb(rng, docs[j], DROP_FRAC))
+            dup_of.append(j)
+        else:
+            q_docs.append(np.unique(rng.integers(
+                0, 1 << 30, size=int(rng.integers(50, 3000)))))
+            dup_of.append(-1)
+    q_packed = _encode_packed(scheme, q_docs, B)
+    t0 = time.perf_counter()
+    truth = _resemblance_topk(q_docs, docs, TOP_K)
+    truth_s = time.perf_counter() - t0
+    dup_found_denom = sum(1 for j in dup_of if j >= 0)
+
+    # r-independent ceiling: full Hamming scan over every stored code
+    ids_all = np.arange(len(docs))
+    t0 = time.perf_counter()
+    scan = [ops.hamming_topk(q, packed, k=K, bits=B, topk=TOP_K)[0]
+            for q in q_packed]
+    scan = [np.asarray(s) for s in scan]          # block on device
+    scan_s = time.perf_counter() - t0
+    scan_recall = _recall(scan, truth)
+
+    rows = [
+        (f"retrieval/bruteforce_scan_k{K}_b{B}",
+         scan_s / N_QUERIES * 1e6,
+         f"recall_at_{TOP_K}={scan_recall:.3f};"
+         f"qps={N_QUERIES / scan_s:.0f};n={len(docs)};"
+         f"encode_s={encode_s:.2f};truth_s={truth_s:.2f};"
+         "note=sketch_error_only_ceiling_for_banded_recall"),
+    ]
+    for r in ROWS_PER_BAND:
+        index = BandedLSHIndex(k=K, b=B, rows_per_band=r)
+        t0 = time.perf_counter()
+        index.insert(list(ids_all), packed)
+        build_s = time.perf_counter() - t0
+        cand_frac = np.mean([len(index.candidates(q)) / len(docs)
+                             for q in q_packed])
+        for q in q_packed:                         # warmup (compiles)
+            index.query(q, top_k=TOP_K)
+        t0 = time.perf_counter()
+        got = [index.query(q, top_k=TOP_K)[0] for q in q_packed]
+        query_s = time.perf_counter() - t0
+        recall = _recall([np.asarray(g) for g in got], truth)
+        dup_found = sum(
+            1 for g, j in zip(got, dup_of)
+            if j >= 0 and j in [int(x) for x in g]) / dup_found_denom
+        st = index.stats()
+        rows.append(
+            (f"retrieval/banded_r{r}_k{K}_b{B}",
+             query_s / N_QUERIES * 1e6,
+             f"recall_at_{TOP_K}={recall:.3f};"
+             f"near_dup_found={dup_found:.3f};"
+             f"qps={N_QUERIES / query_s:.0f};"
+             f"cand_frac={cand_frac:.4f};"
+             f"build_rows_per_s={len(docs) / build_s:.0f};"
+             f"bytes_est={st['bytes_est']};bands={st['bands']};"
+             f"band_bits={st['band_bits']};n={len(docs)}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        _smoke()
+    else:
+        retrieval_bench()

@@ -13,11 +13,13 @@ writes trajectory JSON files.
 
 OPH suites write ``BENCH_oph.json``, the preprocess suite writes
 ``BENCH_preprocess.json``, the streaming-trainer suite writes
-``BENCH_streaming.json`` and the serving suite writes
-``BENCH_serving.json`` (override paths with ``BENCH_OPH_JSON`` /
+``BENCH_streaming.json``, the serving suite writes
+``BENCH_serving.json`` and the retrieval suite writes
+``BENCH_retrieval.json`` (override paths with ``BENCH_OPH_JSON`` /
 ``BENCH_PREPROCESS_JSON`` / ``BENCH_STREAMING_JSON`` /
-``BENCH_SERVING_JSON``) so the preprocessing-, training- and
-serving-throughput trajectories are machine-readable across commits.
+``BENCH_SERVING_JSON`` / ``BENCH_RETRIEVAL_JSON``) so the
+preprocessing-, training-, serving- and retrieval-throughput
+trajectories are machine-readable across commits.
 """
 import json
 import os
@@ -29,9 +31,10 @@ OPH_SUITES = ("kernels_oph", "oph_curve")
 PREPROCESS_SUITES = ("preprocess", "dispatch_preprocess")
 STREAMING_SUITES = ("streaming",)
 SERVING_SUITES = ("serving", "dispatch_serving")
+RETRIEVAL_SUITES = ("retrieval",)
 
 SMOKE_DEFAULT = ["kernels_fused", "preprocess", "streaming", "serving",
-                 "dispatch_preprocess"]
+                 "retrieval", "dispatch_preprocess"]
 
 
 def _write_json(path_env: str, default: str, bench: str, records) -> None:
@@ -56,8 +59,9 @@ def main() -> None:
         os.environ["BENCH_SMOKE"] = "1"   # before benchmarks.* imports
 
     from benchmarks import (dispatch_bench, kernel_bench, paper_figures,
-                            preprocess_bench, roofline_report,
-                            serving_bench, streaming_bench)
+                            preprocess_bench, retrieval_bench,
+                            roofline_report, serving_bench,
+                            streaming_bench)
 
     suites = {
         "fig1": paper_figures.fig1_fig2_svm,
@@ -78,6 +82,7 @@ def main() -> None:
         "preprocess": preprocess_bench.preprocess_bench,
         "streaming": streaming_bench.streaming_bench,
         "serving": serving_bench.serving_bench,
+        "retrieval": retrieval_bench.retrieval_bench,
         "dispatch_preprocess": dispatch_bench.dispatch_preprocess_bench,
         "dispatch_serving": dispatch_bench.dispatch_serving_bench,
     }
@@ -94,6 +99,7 @@ def main() -> None:
         "preprocess": [PREPROCESS_SUITES, [], False],
         "streaming": [STREAMING_SUITES, [], False],
         "serving": [SERVING_SUITES, [], False],
+        "retrieval": [RETRIEVAL_SUITES, [], False],
     }
     for name in selected:
         try:
@@ -123,6 +129,10 @@ def main() -> None:
                 and not trajectories["serving"][2]):
             _write_json("BENCH_SERVING_JSON", "BENCH_serving.json",
                         "serving", trajectories["serving"][1])
+        if (trajectories["retrieval"][1]
+                and not trajectories["retrieval"][2]):
+            _write_json("BENCH_RETRIEVAL_JSON", "BENCH_retrieval.json",
+                        "retrieval", trajectories["retrieval"][1])
     for key, (group_suites, records, failed) in trajectories.items():
         if failed:
             # never clobber a complete trajectory file with partials

@@ -22,7 +22,14 @@ plus steady-state rows/s for:
     asyncio HTTP tier (``serving.server.ScoreServer``): concurrent
     keep-alive clients hammering batch ``POST /score``, measuring the
     full network path (parse → admission → batcher → device → JSON),
-    ending in a graceful drain.
+    ending in a graceful drain;
+  * ``dedup_open_dup*`` — cache-on vs cache-off A/B over zipf-
+    duplicated open-loop traffic at duplication ratios 0 / 0.5 / 0.9
+    (``serving/dedup.py``: band-signature probe, exact packed-code
+    guard).  The LRU is sized below the corpus so dup=0 measures pure
+    cache overhead (hit rate ~0) and dup=0.9 measures the short-
+    circuit; a bitwise canary asserts every cache HIT returns exactly
+    the floats a fresh cacheless dispatch produces.
 
 Measurement structure (the only one that survives this shared box's
 noise, same as streaming_bench): the legacy/fused/nobatch/open variants
@@ -75,6 +82,27 @@ N_REQ = 400 if QUICK else 1200
 ROUNDS = 3
 NNZ_BUCKETS = (512, 2048, 8192)
 ROW_BUCKETS = (1, 8, MAX_BATCH)
+# duplicate-traffic A/B: a zipf-weighted hot pool of viral documents
+# mixed into a cold sweep at a controlled duplication ratio.  The cache
+# is sized well below the corpus (hot pool + in-flight cold churn) so
+# at dup=0 the LRU evicts everything before it repeats — hit rate ~0 —
+# while at dup=0.9 the hot pool stays resident: the bench measures the
+# bounded cache, not an unbounded memo of the whole corpus.
+DEDUP_RATIOS = (0.0, 0.5, 0.9)
+DEDUP_HOT = 64
+DEDUP_ENTRIES = 256
+# both A/B engines run the same batching window, wider than the main
+# bench's: at high duplication the cache strips 90% of traffic off the
+# device, so the residual cold misses trickle in and need a longer
+# coalescing window to form full batches (2ms windows at a 10% miss
+# rate dispatch ~2-row device batches — all launch overhead)
+DEDUP_MAX_WAIT_MS = 16.0
+# the cache-on wall at dup=0.9 is tens of milliseconds per round, so a
+# single scheduler stall on this shared box swings the A/B ratio by
+# 20%+ — the dedup leg measures more rounds than the other suites and
+# keeps each side's best (minimum) wall, the estimator closest to the
+# noise-free value since noise only ever adds time
+DEDUP_ROUNDS = 5
 
 
 def _pcts(lat_s) -> dict:
@@ -137,6 +165,18 @@ def _open_loop(engine, docs, n_req) -> dict:
 def _make_docs(n_docs):
     rows, _ = corpus(n_docs)
     return rows
+
+
+def _dup_stream(n_req: int, dup_ratio: float, n_docs: int,
+                hot: int, seed: int) -> np.ndarray:
+    """Request indices: fraction ``dup_ratio`` drawn zipf(s=1)-style
+    from docs[:hot]; the rest sweep docs[hot:] round-robin (cold)."""
+    rng = np.random.default_rng(seed)
+    is_hot = rng.random(n_req) < dup_ratio
+    p = 1.0 / np.arange(1, hot + 1, dtype=np.float64)
+    hot_picks = rng.choice(hot, size=n_req, p=p / p.sum())
+    cold = (np.cumsum(~is_hot) - 1) % max(n_docs - hot, 1)
+    return np.where(is_hot, hot_picks, hot + cold)
 
 
 def _make_engines(docs, *, replicas=1, legacy=True):
@@ -286,6 +326,19 @@ def _worker(cfg: dict) -> None:
                           "cold_s": eng["cold_fused_s"]}))
         return
 
+    if cfg["mode"] == "dedup":
+        # rounds need enough steady state for the sparse-miss
+        # coalescing windows to amortize (a 400-req round is mostly
+        # window tail), so the dedup A/B uses a fixed floor even in
+        # QUICK mode; the cold sweep must never repeat a doc across
+        # rounds (a repeat is a duplicate — at dup=0 there must be
+        # none), so the corpus holds enough docs for every round's
+        # disjoint window
+        n_req = max(n_req, 2000)
+        _dedup_worker(_make_docs(DEDUP_HOT + (DEDUP_ROUNDS + 1) * n_req),
+                      n_req)
+        return
+
     eng = _make_engines(docs)
     fused, legacy = eng["fused"], eng["legacy_batcher"]
 
@@ -324,6 +377,100 @@ def _worker(cfg: dict) -> None:
                cold_legacy_s=eng["cold_legacy_s"],
                fused_batches=fused.batcher.batches_run)
     print(json.dumps(out))
+
+
+def _open_loop_many(engine, docs, n_req: int, per: int) -> dict:
+    """Open loop through the batch front door (``submit_many`` in
+    ``per``-doc requests — how HTTP traffic actually arrives): with the
+    cache on, each request keys in ONE vectorized host-encode pass."""
+    done = [0.0] * n_req
+    futs = []
+    t0 = time.perf_counter()
+    for lo in range(0, n_req, per):
+        batch = [docs[i % len(docs)]
+                 for i in range(lo, min(lo + per, n_req))]
+        t_sub = time.perf_counter()
+        for j, fut in enumerate(engine.submit_many(batch)):
+            def cb(f, i=lo + j, t_sub=t_sub):
+                done[i] = time.perf_counter() - t_sub
+
+            fut.add_done_callback(cb)
+            futs.append(fut)
+    # end of stream: don't leave the tail request waiting out a full
+    # coalescing window (identical call for both A/B engines)
+    engine.flush()
+    for f in futs:
+        f.result(timeout=600)
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "rows_per_s": n_req / wall, **_pcts(done)}
+
+
+def _dedup_worker(docs, n_req: int) -> None:
+    """Cache-on vs cache-off A/B over zipf-duplicated open-loop traffic
+    at each duplication ratio — interleaved rounds like the rest of the
+    file, but each side reports its best (minimum) wall across rounds
+    (see DEDUP_ROUNDS) — plus the bitwise canary: a cache HIT must
+    return the exact floats a fresh cacheless dispatch produces."""
+    import jax
+    from repro.models.linear import BBitLinearConfig, init_bbit_linear
+    from repro.serving import HashedClassifierEngine
+
+    lcfg = BBitLinearConfig(k=K, b=B)
+    params = init_bbit_linear(lcfg, jax.random.key(0))
+    kw = dict(seed=1, scheme="oph", max_batch=MAX_BATCH,
+              max_wait_ms=DEDUP_MAX_WAIT_MS, nnz_buckets=NNZ_BUCKETS,
+              row_buckets=ROW_BUCKETS)
+    on = HashedClassifierEngine(params, lcfg, dedup_cache=True,
+                                dedup_entries=DEDUP_ENTRIES, **kw)
+    off = HashedClassifierEngine(params, lcfg, **kw)
+    out = {}
+    # two full lanes per request: the off engine dispatches each as an
+    # immediately-full batch (window never waits), the on engine keys
+    # the whole request in one vectorized host pass
+    per = 2 * MAX_BATCH
+    for dup in DEDUP_RATIOS:
+        # one continuous stream sliced into per-round windows: cold
+        # docs never repeat across rounds (only the hot pool does)
+        seq = _dup_stream((DEDUP_ROUNDS + 1) * n_req, dup, len(docs),
+                          DEDUP_HOT, seed=7)
+        rounds = [[docs[i] for i in seq[r * n_req:(r + 1) * n_req]]
+                  for r in range(DEDUP_ROUNDS + 1)]
+        _open_loop_many(on, rounds[0], n_req, per)
+        _open_loop_many(off, rounds[0], n_req, per)
+        d0 = on.dedup.stats()
+        best_on = best_off = None
+        for stream in rounds[1:]:
+            # rounds stay interleaved so both sides see the same load
+            # pattern; each side then keeps its own minimum wall (see
+            # the DEDUP_ROUNDS note — box noise only ever adds time)
+            a = _open_loop_many(on, stream, n_req, per)
+            b = _open_loop_many(off, stream, n_req, per)
+            if best_on is None or a["wall_s"] < best_on["wall_s"]:
+                best_on = a
+            if best_off is None or b["wall_s"] < best_off["wall_s"]:
+                best_off = b
+        d1 = on.dedup.stats()
+        probes = (d1["hits"] + d1["misses"]) - (d0["hits"] + d0["misses"])
+        hit_rate = (d1["hits"] - d0["hits"]) / max(probes, 1)
+        out[f"{dup:.1f}"] = {
+            "on": best_on, "off": best_off, "hit_rate": hit_rate,
+            "speedup": (best_on["rows_per_s"]
+                        / max(best_off["rows_per_s"], 1e-9))}
+    # bitwise canary: hot docs are resident now — a hit must equal the
+    # engine's own cacheless oracle path float-for-float
+    hits_before = on.dedup.stats()["hits"]
+    for d in docs[:8]:
+        want = float(on.score_docs([d])[0])        # bypasses the cache
+        got = float(on.submit(d).result(timeout=600))
+        assert got == want, "cache hit drifted from fresh dispatch"
+    assert on.dedup.stats()["hits"] >= hits_before + 8, \
+        "canary docs were not cache hits"
+    assert on.compile_misses == 0 and off.compile_misses == 0
+    snap = dict(on.dedup.stats())
+    on.close(), off.close()
+    snap.pop("hit_nnz", None)
+    print(json.dumps({"ratios": out, "cache": snap,
+                      "hot": DEDUP_HOT, "entries": DEDUP_ENTRIES}))
 
 
 def _worker_env(devices: int) -> tuple:
@@ -524,6 +671,7 @@ def serving_bench() -> list:
         return _smoke()
     ab = _run_worker("serve", devices=1)
     http = _run_worker("http", devices=1)
+    dedup = _run_worker("dedup", devices=1)
     rep1, rep2 = _paired(
         lambda: _run_worker("replicas", devices=1, replicas=1),
         lambda: _run_worker("replicas", devices=2, replicas=2))
@@ -538,6 +686,19 @@ def serving_bench() -> list:
         return (f"p50_ms={v['p50_ms']:.2f};p95_ms={v['p95_ms']:.2f};"
                 f"p99_ms={v['p99_ms']:.2f};rows_per_s={v['rows_per_s']:.0f}")
 
+    dedup_rows = []
+    for ratio, r in sorted(dedup["ratios"].items()):
+        on, off = r["on"], r["off"]
+        dedup_rows.append(
+            (f"serving/dedup_open_dup{ratio}_k{K}_b{B}",
+             on["wall_s"] * 1e6,
+             f"rows_per_s_on={on['rows_per_s']:.0f};"
+             f"rows_per_s_off={off['rows_per_s']:.0f};"
+             f"speedup_on_vs_off={r['speedup']:.2f}x;"
+             f"hit_rate={r['hit_rate']:.3f};"
+             f"hot={dedup['hot']};entries={dedup['entries']};"
+             "hit_bitwise_eq_fresh=1;"
+             "note=zipf_hot_pool_open_loop_bounded_lru"))
     return emit([
         (f"serving/legacy_closed_k{K}_b{B}", leg["wall_s"] * 1e6,
          f"{lat(leg)};clients={CLIENTS};"
@@ -569,7 +730,7 @@ def serving_bench() -> list:
          f"{lat(rep2['open'])};devices={rep2['devices']};"
          f"scaling_1to2dev={scaling:.2f}x;"
          "note=2_fake_devices_share_2_cores_scaling_measures_contention"),
-    ])
+    ] + dedup_rows)
 
 
 if __name__ == "__main__":

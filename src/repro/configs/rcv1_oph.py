@@ -90,6 +90,19 @@ class OPHPaperConfig:
     calibrate_trials: int = 3
     calibrate_max_batch: int = 64
     calibrate_nnz_buckets: tuple = (128, 512, 2048)
+    # duplicate-traffic dedup cache + LSH retrieval (PR 9): the serving
+    # engine's band-keyed score cache (serving/dedup.py — probe on
+    # dedup_probe_bands band keys, guard on exact packed-code equality,
+    # invalidated per WeightSet swap) and the banded retrieval index's
+    # geometry.  rows_per_band=4 at b=8 gives 32-bit band keys, 64
+    # bands at k=256 — collision probability ~R^4, steep enough that
+    # near-duplicates probe the same bucket while unrelated docs don't.
+    dedup_cache: bool = True
+    dedup_entries: int = 65536
+    dedup_rows_per_band: int = 4
+    dedup_probe_bands: int = 4
+    retrieval_rows_per_band: int = 4
+    retrieval_top_k: int = 10
 
     def linear_config(self) -> BBitLinearConfig:
         return BBitLinearConfig(k=self.k, b=self.b,
@@ -135,6 +148,18 @@ class OPHPaperConfig:
                   pipeline_depth=self.serve_pipeline_depth,
                   stats_window=self.serve_stats_window,
                   adapt_every=self.serve_adapt_every)
+        kw.update(overrides)
+        return kw
+
+    def dedup_kwargs(self, **overrides) -> dict:
+        """Keyword arguments enabling the engine's duplicate-traffic
+        score cache — merge into ``serve_kwargs()``'s dict (kept
+        separate so batching knobs and cache knobs stay independently
+        overridable)."""
+        kw = dict(dedup_cache=self.dedup_cache,
+                  dedup_entries=self.dedup_entries,
+                  dedup_rows_per_band=self.dedup_rows_per_band,
+                  dedup_probe_bands=self.dedup_probe_bands)
         kw.update(overrides)
         return kw
 

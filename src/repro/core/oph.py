@@ -154,6 +154,36 @@ def oph_bin_minima_numpy(
     return vals, vals == UINT32_MAX_NP
 
 
+def oph_bin_minima_ragged_numpy(
+    tokens: np.ndarray, lens: np.ndarray, fam: OPHHash,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Ragged twin of ``oph_bin_minima_numpy``: one flat hash pass over
+    the concatenation of every row's VALID ids (no pad lanes, no mask)
+    and one flat scatter-min into (n, k).  Bit-identical minima — the
+    padded oracle's masked lanes only ever contribute the UINT32_MAX
+    init value, so dropping them changes nothing.  This is the serving
+    dedup cache's key path: per-row cost tracks the row's true nnz
+    instead of the widest doc in the batch.
+
+    Args:
+      tokens: int (sum(lens),) concatenated feature ids, row-major.
+      lens: int (n,) true nonzero count per row.
+      fam: the single-hash OPH family.
+
+    Returns:
+      (vals uint32 (n, k), empty bool (n, k)).
+    """
+    n = int(lens.shape[0])
+    h = fam(tokens)                                # ONE eval per nonzero
+    bins = (h >> np.uint32(fam.shift)).astype(np.int64)
+    rows = np.repeat(np.arange(n, dtype=np.int64),
+                     np.asarray(lens, dtype=np.int64))
+    vals = np.full(n * fam.k, UINT32_MAX_NP, dtype=np.uint32)
+    np.minimum.at(vals, rows * np.int64(fam.k) + bins, h)
+    vals = vals.reshape(n, fam.k)
+    return vals, vals == UINT32_MAX_NP
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def oph_bin_minima_jnp(
     indices: jax.Array,

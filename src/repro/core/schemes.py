@@ -45,7 +45,7 @@ from repro.core.oph import (
     densify_rotation,
     oph_bin_minima_jnp,
 )
-from repro.core.universal_hash import MultiplyShiftHash
+from repro.core.universal_hash import MultiplyShiftHash, _fmix32_numpy
 
 SCHEMES: Dict[str, Type["HashingScheme"]] = {}
 
@@ -259,6 +259,23 @@ class HashingScheme:
         return (np.asarray(packed),
                 None if empty is None else np.asarray(empty))
 
+    def encode_packed_numpy(
+        self, indices: np.ndarray, nnz: np.ndarray, b: int,
+    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Pure-numpy twin of ``encode_packed``: bit-identical bytes,
+        zero device dispatches.
+
+        This is the serving dedup cache's key path — a single document
+        is fingerprinted with ONE host-side hash pass (no padded device
+        round-trip), and because the bytes equal the device encode
+        bit-for-bit, packed-code equality on the host transfers exactly
+        to score equality on the device (tests/test_dedup_cache.py
+        enforces the parity per scheme).  Pad width never affects the
+        output (padding is masked), so callers may pad however is
+        cheapest.
+        """
+        raise NotImplementedError
+
 
 @register_scheme("minwise")
 class MinwiseScheme(HashingScheme):
@@ -307,6 +324,29 @@ class MinwiseScheme(HashingScheme):
         z = minhash_jnp(indices, _prefix_mask(indices, nnz),
                         self._a, self._b)
         return _minwise_finish_packed(z, b), None
+
+    # k-chunking bounds the (n, m, chunk) intermediate the same way
+    # minhash_jnp's m_chunk/k_chunk tiling does on device.
+    _NUMPY_K_CHUNK = 64
+
+    def encode_packed_numpy(self, indices, nnz, b):
+        from repro.core.bbit import pack_codes
+        indices = np.asarray(indices)
+        n, m = indices.shape
+        mask = (np.arange(m, dtype=np.int64)[None, :]
+                < np.asarray(nnz, dtype=np.int64)[:, None])
+        t = indices.astype(np.uint32)[:, :, None]
+        a_np = np.asarray(self.family.a, dtype=np.uint32)
+        b_np = np.asarray(self.family.b, dtype=np.uint32)
+        z = np.empty((n, self.k), dtype=np.uint32)
+        sentinel = np.uint32(0xFFFFFFFF)
+        for lo in range(0, self.k, self._NUMPY_K_CHUNK):
+            hi = min(lo + self._NUMPY_K_CHUNK, self.k)
+            h = _fmix32_numpy(a_np[None, None, lo:hi] * t
+                              + b_np[None, None, lo:hi])
+            z[:, lo:hi] = np.where(mask[:, :, None], h, sentinel).min(axis=1)
+        codes = (z & np.uint32((1 << b) - 1)).astype(np.uint16)
+        return pack_codes(codes, b), None
 
 
 @register_scheme("oph")
@@ -380,6 +420,51 @@ class OPHScheme(HashingScheme):
             indices, _prefix_mask(indices, nnz), self._a, self._b, self.k)
         packed, empty = _oph_finish_packed(vals, b, self.densify)
         return packed, (None if self.densify else empty)
+
+    def encode_packed_numpy(self, indices, nnz, b):
+        indices = np.asarray(indices)
+        n, m = indices.shape
+        lens = np.minimum(np.asarray(nnz, dtype=np.int64), m)
+        mask = np.arange(m, dtype=np.int64)[None, :] < lens[:, None]
+        # ragged fast path: hash + scatter-min touch only real nonzeros
+        # (a padded pass spends most of its time on the pad lanes of
+        # the widest doc in the batch) — bit-identical minima
+        return self.encode_packed_numpy_ragged(indices[mask], lens, b)
+
+    def encode_packed_numpy_ragged(self, tokens, lens, b):
+        """Ragged host encode: ``tokens`` is the row-major concat of
+        every doc's (already id-folded) nonzeros, ``lens`` the per-doc
+        counts.  Same bytes as ``encode_packed_numpy`` with no pad
+        lanes materialized at all — the serving dedup key path calls
+        this directly so per-row cost tracks true nnz."""
+        from repro.core.bbit import pack_codes
+        from repro.core.oph import (OPH_EMPTY_CODE,
+                                    densify_rotation_numpy,
+                                    oph_bin_minima_ragged_numpy,
+                                    split_zero_codes)
+        if not self.densify and b > 15:
+            raise ValueError("oph_zero reserves 0xFFFF: b must be <= 15")
+        vals, empty = oph_bin_minima_ragged_numpy(tokens, lens,
+                                                  self.family)
+        if self.densify:
+            # rotation densify is row-independent and the identity on
+            # fully-occupied rows (the common case at real document
+            # sizes: P(empty bin) = (1-1/k)^nnz), so only rows that
+            # actually have an empty bin go through it
+            need = empty.any(axis=1)
+            if need.any():
+                sub_vals, sub_empty = densify_rotation_numpy(
+                    vals[need], empty[need])
+                vals[need] = sub_vals
+                empty[need] = sub_empty
+        codes = (vals & np.uint32((1 << b) - 1)).astype(np.uint16)
+        codes = np.where(empty, OPH_EMPTY_CODE, codes)
+        if self.densify:
+            # all-empty rows keep OPH_EMPTY_CODE → all-ones low b bits,
+            # matching _oph_finish_packed's sentinel bytes exactly
+            return pack_codes(codes, b), None
+        codes0, empty = split_zero_codes(codes)
+        return pack_codes(codes0, b), np.packbits(empty, axis=1)
 
 
 @register_scheme("oph_zero")

@@ -124,6 +124,17 @@ def _fmix32(h: jnp.ndarray) -> jnp.ndarray:
     return h
 
 
+def _fmix32_numpy(h: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``_fmix32`` (bit-exact; uint32 wraparound)."""
+    h = h.astype(np.uint32)
+    h = h ^ (h >> np.uint32(16))
+    h = (h * np.uint32(0x85EBCA6B)).astype(np.uint32)
+    h = h ^ (h >> np.uint32(13))
+    h = (h * np.uint32(0xC2B2AE35)).astype(np.uint32)
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
 @dataclasses.dataclass(frozen=True)
 class MultiplyShiftHash:
     """h_j(t) = fmix32(a_j * t + b_j  mod 2^32) on uint32.

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: packed-popcount Hamming distance for candidate
+scoring.
+
+The retrieval index ranks band-collision candidates by Hamming distance
+between packed b-bit code rows (core.bbit layout).  Both rows pad the
+final partial byte with zeros, so the distance is simply
+
+    dist[i] = Σ_w popcount(cands[i, w] XOR query[w])
+
+— no bit masking needed.  The kernel XORs a (BN, W) candidate block
+against the broadcast query row and popcounts bytes with the SWAR
+ladder (three shifts/adds in uint32; every value stays < 256 so the
+8-bit constants suffice), accumulating int32 row sums.  The XLA twin
+uses ``jax.lax.population_count`` — bit-identical (integer arithmetic),
+which tests/test_retrieval.py asserts.  Top-k selection happens in the
+``ops.hamming_topk`` wrapper (``jax.lax.top_k`` over negated
+distances), shared by both arms.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popcount_bytes(x: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount of uint32 lanes holding byte values (< 256)."""
+    x = x - ((x >> jnp.uint32(1)) & jnp.uint32(0x55))
+    x = (x & jnp.uint32(0x33)) + ((x >> jnp.uint32(2)) & jnp.uint32(0x33))
+    return (x + (x >> jnp.uint32(4))) & jnp.uint32(0x0F)
+
+
+def _hamming_kernel(cands_ref, q_ref, out_ref):
+    """Grid (n/BN,): one candidate block per step, full row width."""
+    x = cands_ref[...].astype(jnp.uint32)           # (BN, W)
+    q = q_ref[...].astype(jnp.uint32)               # (1, W)
+    pc = _popcount_bytes(x ^ q)
+    out_ref[...] = jnp.sum(pc.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def hamming_distance_pallas(
+    query: jax.Array,
+    cands: jax.Array,
+    *,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """int32 (n,) popcount distances: query (w,) uint8 vs cands (n, w)."""
+    n, w = cands.shape
+    q = query.reshape(1, w)
+    bn = min(block_n, n)
+    pad_n = (-n) % bn
+    cands_p = jnp.pad(cands, ((0, pad_n), (0, 0)))
+    np_ = cands_p.shape[0]
+    out = pl.pallas_call(
+        _hamming_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+        interpret=interpret,
+    )(cands_p, q)
+    return out[:n, 0]
+
+
+@jax.jit
+def hamming_distance_xla(query: jax.Array, cands: jax.Array) -> jax.Array:
+    """XLA twin: ``population_count`` over the XORed bytes."""
+    x = jnp.bitwise_xor(cands, query[None, :])
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=1)

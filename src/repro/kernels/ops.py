@@ -43,6 +43,10 @@ from repro.kernels.bbit_linear import (
     bbit_linear_packed_fwd_pallas,
     bbit_linear_packed_bwd_dw_pallas,
 )
+from repro.kernels.hamming import (
+    hamming_distance_pallas,
+    hamming_distance_xla,
+)
 from repro.kernels.vw_sketch import vw_sketch_pallas
 from repro import perf
 from repro.perf import BBIT_KERNEL_MAX_V  # canonical home is perf; noqa
@@ -240,6 +244,35 @@ def bbit_linear_packed(packed: jax.Array, weights: jax.Array, k: int,
     returns dW only.
     """
     return _bbit_linear_packed(k, bits, interpret, packed, empty, weights)
+
+
+# ---------------------------------------------------------------------------
+def hamming_topk(query, cands, *, k: int, bits: int, topk: int,
+                 impl: Optional[str] = None,
+                 interpret: Optional[bool] = None):
+    """Top-k nearest candidates by packed-code Hamming similarity.
+
+    ``query`` uint8 (w,), ``cands`` uint8 (n, w) — packed b-bit code
+    rows (``core.bbit`` layout, w = ceil(k·bits/8)).  Returns
+    (idx int32 (t,), sims f32 (t,)) with t = min(topk, n), sims sorted
+    descending: sim = 1 − popcount_dist/(k·bits), the fraction of
+    agreeing code bits.  Distance arm routed through
+    ``perf.choose("hamming_topk")`` — Pallas SWAR popcount vs XLA
+    ``population_count`` (bit-identical integers, so the choice can
+    never change results).
+    """
+    n = int(cands.shape[0])
+    shape = {"b": int(bits), "k": int(k), "rows": n,
+             "width": int(cands.shape[1])}
+    if perf.choose("hamming_topk", shape, impl=impl) == "pallas":
+        dist = hamming_distance_pallas(query, cands,
+                                       interpret=_auto_interpret(interpret))
+    else:
+        dist = hamming_distance_xla(query, cands)
+    t = min(int(topk), n)
+    neg, idx = jax.lax.top_k(-dist, t)
+    sims = 1.0 + neg.astype(jnp.float32) / jnp.float32(k * bits)
+    return idx, sims
 
 
 # ---------------------------------------------------------------------------

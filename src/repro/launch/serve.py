@@ -15,9 +15,12 @@
 HTTP flags (classifier mode): ``--http --host H --port P`` (port 0
 picks an ephemeral port), ``--drain-timeout-s`` bounds how long SIGTERM
 waits for in-flight requests, ``--adapt-every N`` re-derives the nnz
-lane grid from live traffic every N requests.  The process prints one
-``LISTENING <host> <port>`` line once the socket is bound (machine-
-readable; the e2e smoke and examples wait on it).
+lane grid from live traffic every N requests.  ``--dedup-cache`` puts
+the band-keyed duplicate-traffic score cache (``serving/dedup.py``) in
+front of the batcher (``--cache-entries`` caps it) and prints one
+``DEDUP_CACHE ...`` line alongside the ``LISTENING <host> <port>`` line
+once the socket is bound (machine-readable; the e2e smoke and examples
+wait on it).
 """
 from __future__ import annotations
 
@@ -55,6 +58,10 @@ def _build_classifier_engine(args):
     print("dispatch: "
           + (f"cost-model profile {profile}" if has_profile
              else "static heuristics (no usable profile)"))
+    dedup_kw = {}
+    if args.dedup_cache:
+        dedup_kw = CONFIG.dedup_kwargs(dedup_cache=True,
+                                       dedup_entries=args.cache_entries)
     eng = HashedClassifierEngine(
         res.params, lcfg, seed=1, max_batch=args.max_batch,
         nnz_buckets=(2048, 8192),
@@ -62,7 +69,13 @@ def _build_classifier_engine(args):
         # buckets + drain caps from the serve_score cost curve;
         # without one this is the historical static pair
         row_buckets=None if has_profile else (1, args.max_batch),
-        adapt_every=args.adapt_every)
+        adapt_every=args.adapt_every, **dedup_kw)
+    if args.dedup_cache:
+        print(f"DEDUP_CACHE entries={args.cache_entries} "
+              f"rows_per_band={CONFIG.dedup_rows_per_band} "
+              f"probe_bands={CONFIG.dedup_probe_bands}", flush=True)
+    else:
+        print("DEDUP_CACHE off", flush=True)
     return eng, rows, labels, n_tr
 
 
@@ -147,11 +160,21 @@ def main() -> None:
     ap.add_argument("--adapt-every", type=int, default=0,
                     help="re-derive nnz lane grid from live traffic "
                          "every N requests (0 = static grid)")
+    ap.add_argument("--dedup-cache", action="store_true",
+                    help="enable the band-keyed duplicate-traffic score "
+                         "cache (serving/dedup.py) in front of the "
+                         "batcher")
+    ap.add_argument("--cache-entries", type=int, default=None,
+                    help="dedup cache capacity (LRU entries; default: "
+                         "the config's dedup_entries)")
     ap.add_argument("--profile", default=None,
                     help="perf cost-model profile JSON (default: the "
                          "config's profile_path if present) — drives "
                          "encode dispatch and micro-batch sizing")
     args = ap.parse_args()
+    if args.cache_entries is None:
+        from repro.configs.rcv1_oph import CONFIG
+        args.cache_entries = CONFIG.dedup_entries
     if args.mode == "classifier":
         serve_classifier(args)
     else:

@@ -205,6 +205,17 @@ _register(OpSpec("pallas_mode", ("compiled", "interpret"),
                  _pallas_mode_eligible,
                  _capability_first("compiled", "interpret"),
                  calibrated=False))
+# retrieval candidate scoring: packed-popcount Hamming + top-k.  The
+# Pallas arm is gated like the rest of the packed family: only
+# byte-aligned b flows through the packed retrieval/serving hot paths,
+# so XLA ``population_count`` covers every other shape
+def _hamming_topk_eligible(shape) -> Tuple[str, ...]:
+    ok = int(shape.get("b", 0)) in _pack_bits()
+    return ("pallas", "xla") if ok else ("xla",)
+
+
+_register(OpSpec("hamming_topk", ("pallas", "xla"),
+                 _hamming_topk_eligible, _tpu_first("pallas", "xla")))
 # serving fused encode→score dispatch: single impl — calibrated for
 # its cost-per-row curve (micro-batch sizing), never a choice
 _register(OpSpec("serve_score", ("fused",), lambda s: ("fused",),

@@ -1,0 +1,28 @@
+"""Banded LSH retrieval over packed b-bit minwise codes.
+
+The codes this repo already packs (core.bbit: row-major bitstream,
+LSB-first) are LSH-ready: split each row's k codes into k/r bands of r
+consecutive codes and two documents collide in a band with probability
+~R^r (R = resemblance, paper Eq. 6 regime).  ``bands`` extracts band
+keys straight from the packed bytes (no unpack), ``index`` is the
+banded inverted index, and candidate sets are ranked by packed-popcount
+Hamming similarity through the ``hamming_topk`` dispatch op
+(kernels/hamming.py Pallas kernel on TPU, XLA ``population_count``
+elsewhere).  The serving dedup cache (serving/dedup.py) reuses the same
+band machinery inward as a probe key for duplicate traffic.
+"""
+from repro.retrieval.bands import (
+    band_geometry,
+    band_keys_packed,
+    band_keys_ref,
+    band_signature,
+)
+from repro.retrieval.index import BandedLSHIndex
+
+__all__ = [
+    "BandedLSHIndex",
+    "band_geometry",
+    "band_keys_packed",
+    "band_keys_ref",
+    "band_signature",
+]

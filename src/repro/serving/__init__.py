@@ -4,6 +4,7 @@ control, live stats, graceful drain, versioned hot-reload)."""
 from repro.serving.admission import (AdmissionController, Draining,
                                      Overloaded)
 from repro.serving.batcher import BucketBatcher, DynamicBatcher
+from repro.serving.dedup import DedupCache
 from repro.serving.engine import (HashedClassifierEngine, VersionedScore,
                                   VersionedVector, greedy_generate)
 from repro.serving.reload import (ReloadManager, WeightSet,
@@ -12,7 +13,8 @@ from repro.serving.server import (HTTPStatusError, ScoreClient,
                                   ScoreServer)
 from repro.serving.stats import NnzHistogram, StatsWindow
 
-__all__ = ["AdmissionController", "BucketBatcher", "Draining",
+__all__ = ["AdmissionController", "BucketBatcher", "DedupCache",
+           "Draining",
            "DynamicBatcher", "HTTPStatusError", "HashedClassifierEngine",
            "NnzHistogram", "Overloaded", "ReloadManager", "ScoreClient",
            "ScoreServer", "StatsWindow", "VersionedScore",

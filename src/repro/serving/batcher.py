@@ -205,6 +205,7 @@ class BucketBatcher:
         self.depth = depth
         self._cond = threading.Condition()
         self._lanes: dict = {}     # key -> deque[(item, fut, t_enq)]
+        self._flush_before = -1.0  # heads enqueued at/before this are ripe
         self._closed = False
         self._resq: "queue.Queue" = queue.Queue(maxsize=depth)
         self.batches_run = 0
@@ -242,6 +243,17 @@ class BucketBatcher:
             self._cond.notify()
         self.size_hist.record(n)
         return fut
+
+    def flush(self) -> None:
+        """Ripen every currently queued head NOW: the drain thread
+        dispatches all pending lanes without waiting out ``max_wait``.
+        For end-of-stream clients and graceful drain — a caller that
+        knows no more traffic is coming should not leave the tail
+        request sitting in a half-full lane for a full coalescing
+        window.  Requests submitted after the call batch normally."""
+        with self._cond:
+            self._flush_before = time.perf_counter()
+            self._cond.notify_all()
 
     # ------------------------------------------------- observability --
     def depths(self) -> Dict:
@@ -316,7 +328,8 @@ class BucketBatcher:
                     key, t_head, full = pick
                     lane = self._lanes[key]
                     age = time.perf_counter() - t_head
-                    if full or self._closed or age >= self.max_wait:
+                    if (full or self._closed or age >= self.max_wait
+                            or t_head <= self._flush_before):
                         batch = [lane.popleft() for _ in
                                  range(min(len(lane),
                                            self._lane_cap(key)))]

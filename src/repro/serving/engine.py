@@ -70,6 +70,7 @@ from __future__ import annotations
 
 import threading
 import time
+from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -138,11 +139,27 @@ class HashedClassifierEngine:
                  pipeline_depth: int = 2,
                  stats_window: int = 2048,
                  adapt_every: int = 0,
-                 version: str = "v0"):
+                 version: str = "v0",
+                 dedup_cache: bool = False,
+                 dedup_entries: int = 4096,
+                 dedup_rows_per_band: int = 4,
+                 dedup_probe_bands: int = 4):
         self.cfg = cfg
         self.scheme = make_scheme(scheme, cfg.k, seed)
         self.family = getattr(self.scheme, "family", None)
         self.fused = fused
+        # duplicate-traffic short-circuit: band-signature probe + exact
+        # packed-code guard, sitting after (host-side) encode and before
+        # device dispatch — see serving/dedup.py for the contract
+        self.dedup: Optional["DedupCache"] = None
+        if dedup_cache:
+            from repro.retrieval.bands import band_geometry
+            from repro.serving.dedup import DedupCache
+            band_geometry(cfg.k, cfg.b, dedup_rows_per_band)
+            self.dedup = DedupCache(max_entries=dedup_entries,
+                                    version=version)
+            self._dedup_rows_per_band = int(dedup_rows_per_band)
+            self._dedup_probe_bands = int(dedup_probe_bands)
         # zero-coded schemes give an empty doc exact semantics (every
         # bin empty → contributions masked out → score == bias)
         self._allows_empty = getattr(self.scheme, "densify", True) is False
@@ -272,13 +289,30 @@ class HashedClassifierEngine:
                     self._compiled.add((r, m, d))
 
     # ----------------------------------------------------------- scoring --
-    def _validate(self, doc) -> np.ndarray:
+    def _validate(self, doc, *, check_neg: bool = True) -> np.ndarray:
+        if (type(doc) is np.ndarray and doc.dtype == np.int64
+                and doc.ndim == 1):
+            # already the canonical dtype/shape: skip the generic
+            # asarray/issubdtype machinery (measurable at batch rates)
+            if check_neg and doc.size and int(doc.min()) < 0:
+                raise ValueError("doc has negative feature indices")
+            if doc.size == 0 and not self._allows_empty:
+                raise ValueError(
+                    f"empty document: scheme {self.scheme.name!r} has "
+                    "no empty semantics (its min over zero hashes is "
+                    "sentinel garbage) — reject upstream or serve with "
+                    "the zero-coded 'oph_zero' scheme, whose "
+                    "all-empty-bins path scores it as the bias")
+            return doc
         arr = np.asarray(doc)
         if arr.ndim != 1 or not np.issubdtype(arr.dtype, np.integer):
             raise TypeError(
                 f"doc must be a 1-D integer id array, got shape "
                 f"{arr.shape} dtype {arr.dtype}")
-        if arr.size and int(arr.min()) < 0:
+        # check_neg=False defers the negativity reduce to the caller's
+        # ONE fused pass over the batch concat (submit_many) — a
+        # per-row .min() is numpy fixed overhead at batch rates
+        if check_neg and arr.size and int(arr.min()) < 0:
             raise ValueError("doc has negative feature indices")
         if arr.size == 0 and not self._allows_empty:
             raise ValueError(
@@ -333,6 +367,82 @@ class HashedClassifierEngine:
             return [VersionedScore(x, version) for x in host[:n]]
         return [VersionedVector(row, version) for row in host[:n]]
 
+    # ----------------------------------------------------- dedup cache ----
+    def _dedup_keys(self, arrs: Sequence[np.ndarray],
+                    cat: Optional[np.ndarray] = None) -> List[Tuple]:
+        """One host-side hash pass over a whole batch → each doc's
+        (band-signature probe, full packed bytes, empty bytes) — the
+        cache's (probe, guard) pairs.  The bytes are bit-identical to
+        the device encode (same fold/mask semantics via ``pad_rows`` +
+        ``encode_packed_numpy``), and the encode is pad-width
+        invariant, so a key computed in any batch equals the key
+        computed alone.  Batching exists because the per-doc cost is
+        numpy FIXED overhead (~200µs of small-array calls, not
+        arithmetic): one batched pass amortizes it to ~µs/row, which
+        is what lets a cache hit undercut the device round trip."""
+        from repro.retrieval.bands import band_keys_packed
+        ragged = getattr(self.scheme, "encode_packed_numpy_ragged", None)
+        if ragged is not None:
+            # no padded intermediate at all: concat + fold (the exact
+            # ``pad_rows`` id-folding policy) + one ragged encode
+            lens = np.fromiter((a.size for a in arrs), dtype=np.int64,
+                               count=len(arrs))
+            if cat is None:
+                cat = (np.concatenate(arrs) if len(arrs) > 1
+                       else np.asarray(arrs[0]))
+            tokens = (cat & np.int64((1 << 31) - 1)).astype(np.int32)
+            packed, empty = ragged(tokens, lens, self.cfg.b)
+        else:
+            idx, nnz = pad_rows(list(arrs), pad_to_multiple=1)
+            packed, empty = self.scheme.encode_packed_numpy(
+                idx, nnz, self.cfg.b)
+        keys = band_keys_packed(packed, self.cfg.k, self.cfg.b,
+                                self._dedup_rows_per_band)
+        sigs = keys[:, :self._dedup_probe_bands].tolist()
+        return [(tuple(s), packed[i].tobytes(),
+                 None if empty is None else empty[i].tobytes())
+                for i, s in enumerate(sigs)]
+
+    def _dedup_key(self, arr: np.ndarray):
+        return self._dedup_keys([arr])[0]
+
+    def _submit_dedup(self, arr: np.ndarray, key: Optional[Tuple] = None):
+        """Cache short-circuit: a hit returns an already-resolved Future
+        (no batcher, no device); a miss dispatches normally and fills
+        the cache when its batch resolves.
+
+        The cached object is the RESOLVED batcher Future itself, shared
+        by every subsequent hit: a finished Future is effectively
+        immutable (``add_done_callback`` invokes immediately instead of
+        appending, ``cancel`` is a no-op), and handing it out directly
+        skips the ~µs-scale ``threading.Condition`` allocation a fresh
+        Future per hit would cost — which profiles as the hit path's
+        single biggest line item once the encode is batched."""
+        sig, packed, empty = self._dedup_key(arr) if key is None else key
+        version = self._weights.version
+        hit = self.dedup.get(sig, packed, empty, version, nnz=arr.size)
+        if hit is not None:
+            return hit
+        return self._submit_dedup_miss(arr, (sig, packed, empty), version)
+
+    def _submit_dedup_miss(self, arr: np.ndarray, key: Tuple,
+                           version: str):
+        """Miss leg of the dedup path: normal batcher dispatch plus a
+        cache fill when the batch resolves."""
+        sig, packed, empty = key
+        fut = self.batcher.submit(arr)
+        cache = self.dedup
+
+        def _fill(f):
+            if f.cancelled() or f.exception() is not None:
+                return
+            result = f.result()
+            cache.put(sig, packed, empty, f,
+                      getattr(result, "version", version))
+
+        fut.add_done_callback(_fill)
+        return fut
+
     # ------------------------------------------------------------- API ----
     def submit(self, doc: Sequence[int], tenant: Optional[str] = None):
         """Validate + route one doc; returns a Future of its score (a
@@ -340,7 +450,10 @@ class HashedClassifierEngine:
         latency and the optional ``tenant`` feed the stats window."""
         arr = self._validate(doc)
         t0 = time.perf_counter()
-        fut = self.batcher.submit(arr)
+        if self.dedup is not None:
+            fut = self._submit_dedup(arr)
+        else:
+            fut = self.batcher.submit(arr)
 
         def _record(f, t0=t0, tenant=tenant):
             self.stats_window.record(
@@ -354,6 +467,63 @@ class HashedClassifierEngine:
             if self._submits % self.adapt_every == 0:
                 self._adapt_async()
         return fut
+
+    def submit_many(self, docs: Sequence[Sequence[int]],
+                    tenant: Optional[str] = None) -> List[Future]:
+        """Batch ``submit``: identical routing and results, but with
+        the dedup cache enabled the whole batch's keys come from ONE
+        vectorized host-encode pass (``_dedup_keys``) instead of a
+        per-doc pass — the batch front door (HTTP ``POST /score``
+        arrives batched already) is where duplicate short-circuiting
+        actually pays.  With the cache off this is a plain loop."""
+        arrs = [self._validate(d, check_neg=False) for d in docs]
+        if not arrs:
+            return []
+        cat = (np.concatenate(arrs) if len(arrs) > 1
+               else np.asarray(arrs[0]))
+        if cat.size and int(cat.min()) < 0:
+            raise ValueError("doc has negative feature indices")
+        t0 = time.perf_counter()
+        futs = []
+
+        def _record(f, t0=t0, tenant=tenant):
+            self.stats_window.record(
+                time.perf_counter() - t0, rows=1, tenant=tenant,
+                error=(not f.cancelled()
+                       and f.exception() is not None))
+
+        if self.dedup is not None:
+            keys = self._dedup_keys(arrs, cat=cat)
+            version = self._weights.version
+            hits = self.dedup.get_many(keys, version,
+                                       [a.size for a in arrs])
+            n_hits = 0
+            for i, arr in enumerate(arrs):
+                hit = hits[i]
+                if hit is not None:
+                    # resolved shared Future; stats recorded in one
+                    # batched call below instead of per-row callbacks
+                    futs.append(hit)
+                    n_hits += 1
+                    continue
+                fut = self._submit_dedup_miss(arr, keys[i], version)
+                fut.add_done_callback(_record)
+                futs.append(fut)
+            if n_hits:
+                self.stats_window.record_batch(
+                    time.perf_counter() - t0, n_hits, tenant=tenant)
+        else:
+            for arr in arrs:
+                fut = self.batcher.submit(arr)
+                fut.add_done_callback(_record)
+                futs.append(fut)
+        if self.adapt_every:
+            before = self._submits
+            self._submits += len(arrs)
+            if (before // self.adapt_every
+                    != self._submits // self.adapt_every):
+                self._adapt_async()
+        return futs
 
     def score_docs(self, docs: Sequence[Sequence[int]],
                    device_index: Optional[int] = None,
@@ -420,6 +590,10 @@ class HashedClassifierEngine:
                 jax.block_until_ready(tree)
             self._weights = WeightSet(version=version, params=staged,
                                       created_at=time.time())
+            if self.dedup is not None:
+                # same critical section as the reference swap: no window
+                # where new-version traffic can hit an old-version score
+                self.dedup.invalidate(version)
             self.reloads += 1
         return version
 
@@ -490,8 +664,17 @@ class HashedClassifierEngine:
             rebuckets=self.rebuckets,
             health=self.batcher.health(),
             dispatch=perf.dispatch_report(),
+            dedup=(dict(self.dedup.stats(), enabled=True,
+                        rows_per_band=self._dedup_rows_per_band,
+                        probe_bands=self._dedup_probe_bands)
+                   if self.dedup is not None else {"enabled": False}),
         )
         return snap
+
+    def flush(self):
+        """Dispatch every queued request now instead of waiting out the
+        coalescing window (end-of-stream clients, graceful drain)."""
+        self.batcher.flush()
 
     def close(self):
         self.batcher.close()

@@ -331,6 +331,12 @@ class ScoreServer:
     def _submit_all(self, docs: List[np.ndarray],
                     tenant: Optional[str]) -> List:
         try:
+            # batch submit: with the dedup cache on, the whole request
+            # keys in one vectorized host-encode pass; duck-typed so
+            # an engine exposing only ``submit`` still serves
+            submit_many = getattr(self.engine, "submit_many", None)
+            if submit_many is not None:
+                return submit_many(docs, tenant=tenant)
             return [self.engine.submit(d, tenant=tenant) for d in docs]
         except (TypeError, ValueError) as e:   # engine-side validation
             raise _HttpError(400, str(e))
@@ -452,15 +458,24 @@ class ScoreServer:
         return keep
 
     def status(self) -> Dict:
+        """Full engine ``stats()`` merged at the top level (keys are a
+        superset of the engine's, so new engine sections — ``dedup``,
+        ``dispatch`` — surface here without server changes), with the
+        server's own scalars layered on top: ``health`` flattens to the
+        drain-aware string, ``uptime_s``/``version`` are the server's
+        view, and the verbatim engine snapshot stays nested under
+        ``engine`` for existing consumers."""
         eng = self.engine.stats()
         adm = self.admission.snapshot()
         health = ("draining" if adm["draining"]
                   else eng["health"]["state"])
-        return {"health": health, "version": eng["version"],
-                "model": self.model_name,
-                "uptime_s": time.time() - self._t0,
-                "http_requests": self.http_requests,
-                "engine": eng, "admission": adm}
+        out = dict(eng)
+        out.update({"health": health, "version": eng["version"],
+                    "model": self.model_name,
+                    "uptime_s": time.time() - self._t0,
+                    "http_requests": self.http_requests,
+                    "engine": eng, "admission": adm})
+        return out
 
 
 class HTTPStatusError(RuntimeError):
