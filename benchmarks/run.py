@@ -29,7 +29,7 @@ import traceback
 # Suites whose records feed the perf-trajectory files.
 OPH_SUITES = ("kernels_oph", "oph_curve")
 PREPROCESS_SUITES = ("preprocess", "dispatch_preprocess")
-STREAMING_SUITES = ("streaming",)
+STREAMING_SUITES = ("streaming", "multihost")
 SERVING_SUITES = ("serving", "dispatch_serving")
 RETRIEVAL_SUITES = ("retrieval",)
 
@@ -81,6 +81,7 @@ def main() -> None:
         "roofline": roofline_report.roofline_rows,
         "preprocess": preprocess_bench.preprocess_bench,
         "streaming": streaming_bench.streaming_bench,
+        "multihost": streaming_bench.multihost_bench,
         "serving": serving_bench.serving_bench,
         "retrieval": retrieval_bench.retrieval_bench,
         "dispatch_preprocess": dispatch_bench.dispatch_preprocess_bench,

@@ -421,6 +421,83 @@ def streaming_bench() -> list:
     ])
 
 
+def multihost_bench() -> list:
+    """PR-10 records: a REAL 2-process ``jax.distributed`` localhost
+    gang (gloo CPU collectives, per-rank shard ownership, coordinated
+    checkpoints) vs the bit-identical single-process elastic fold, and
+    the gang's time-to-recover from a ``kill -9`` mid-run under
+    gang-restart supervision.  Gang wall-clock includes worker spawn +
+    jax import + distributed init (the real cost of a gang attempt);
+    the derived ``train_s`` column is the inner fit time."""
+    if SMOKE:
+        return []
+    import jax
+
+    from repro.ft import BackoffPolicy, FaultEvent, FaultPlan
+    from repro.models.linear import BBitLinearConfig
+    from repro.train import (RestartPolicy, fit_streaming,
+                             run_multiprocess_supervised)
+
+    fit = dict(epochs=EPOCHS, batch_size=BATCH, lr=LR, data_parallel=2,
+               elastic=True, prefetch=0, seed=0)
+    pol = RestartPolicy(max_restarts=2,
+                        backoff=BackoffPolicy(base_s=0.05, cap_s=0.5))
+    with tempfile.TemporaryDirectory(prefix="mh_bench_") as root:
+        _setup(root, N_DOCS, K, B, N_SHARDS)
+        lcfg = BBitLinearConfig(k=K, b=B)
+
+        t0 = time.perf_counter()
+        ref = fit_streaming(root, lcfg, **fit)
+        t_serial = time.perf_counter() - t0
+        rows_serial = ref.examples_seen / max(t_serial, 1e-9)
+        ref_leaves = [np.asarray(x) for x in jax.tree.leaves(ref.params)]
+
+        t0 = time.perf_counter()
+        clean = run_multiprocess_supervised(
+            root, lcfg, procs=2, run_dir=os.path.join(root, "gang"),
+            policy=pol, ckpt_dir=os.path.join(root, "gang", "ckpt"),
+            **fit)
+        t_gang = time.perf_counter() - t0
+        assert clean.restarts == 0
+        rec = clean.result
+        got = np.load(clean.params_paths[0])
+        assert all(np.array_equal(got[f"p{i}"], leaf)
+                   for i, leaf in enumerate(ref_leaves)), \
+            "2-process gang drifted from the single-process fold"
+        rows_gang = rec["examples_seen"] / max(rec["train_seconds"],
+                                               1e-9)
+
+        crash_step = rec["n_steps"] // 2
+        plan = FaultPlan([FaultEvent(site="proc_kill", step=crash_step,
+                                     rank=1, times=1)])
+        killed = run_multiprocess_supervised(
+            root, lcfg, procs=2, run_dir=os.path.join(root, "gang_kill"),
+            policy=pol, fault_spec=plan.to_spec(),
+            ckpt_dir=os.path.join(root, "gang_kill", "ckpt"), **fit)
+        assert killed.restarts == 1
+        got = np.load(killed.params_paths[0])
+        assert all(np.array_equal(got[f"p{i}"], leaf)
+                   for i, leaf in enumerate(ref_leaves)), \
+            "gang kill-9 recovery drifted from the uninterrupted run"
+        t_recover = killed.crashes[0].recover_s
+
+    return emit([
+        (f"streaming/multihost_serial_ref_k{K}_b{B}", t_serial * 1e6,
+         f"rows_per_s={rows_serial:.0f};steps={ref.n_steps};"
+         "note=1proc_elastic_fold_of_dp2"),
+        (f"streaming/multihost_gang2_k{K}_b{B}", t_gang * 1e6,
+         f"rows_per_s_inner={rows_gang:.0f};"
+         f"train_s={rec['train_seconds']:.3f};procs=2;"
+         f"bitwise_vs_serial=1;"
+         f"spawn_overhead_s={t_gang - rec['train_seconds']:.3f};"
+         "note=wall_includes_spawn+jax_import+dist_init"),
+        (f"streaming/multihost_time_to_recover_k{K}_b{B}",
+         t_recover * 1e6,
+         f"crash_step={crash_step};restarts=1;bit_identical=1;"
+         "note=kill9_rank1+gang_respawn+coordinated_restore+replay"),
+    ])
+
+
 if __name__ == "__main__":
     if len(sys.argv) >= 3 and sys.argv[1] == "--worker":
         _worker(json.loads(sys.argv[2]))

@@ -259,6 +259,15 @@ def restore(root: str, template: Any, step: Optional[int] = None, *,
     falls back: corruption raises ``CorruptCheckpointError``.
     A template/leaf-count mismatch raises ``ValueError`` (structural
     incompatibility, NOT corruption — nothing is quarantined).
+
+    A step written by a multi-process gang (``ckpt.coordinated`` —
+    per-rank payloads, no top-level ``ckpt.npz``) restores through the
+    same walk: this process's own rank payload is preferred, any valid
+    rank's replicated payload is accepted, and only a step with NO
+    valid payload counts as corrupt.  Plain and coordinated layouts
+    are fully interchangeable — that is what lets a single process
+    resume a gang's checkpoint (N→1) and a gang resume a
+    single-process one (1→N).
     """
     if fallback is None:
         fallback = step is None
@@ -272,8 +281,14 @@ def restore(root: str, template: Any, step: Optional[int] = None, *,
     for s in steps:
         d = _step_dir(root, s)
         try:
-            arrays = _load_validated(d, load_meta(root, s) if validate
-                                     else None)
+            from repro.ckpt import coordinated
+            if coordinated.is_coordinated_dir(d):
+                from repro.distributed.runtime import current_rank
+                arrays = coordinated.load_step_arrays(
+                    d, prefer_rank=current_rank())
+            else:
+                arrays = _load_validated(d, load_meta(root, s)
+                                         if validate else None)
         except CorruptCheckpointError as e:
             last_err = e
             if not fallback:

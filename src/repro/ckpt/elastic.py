@@ -34,6 +34,43 @@ def physical_data_world(logical: int,
     return p
 
 
+def process_fold(logical: int, procs: int, local_devices: int, *,
+                 elastic: bool = True) -> tuple:
+    """The three-level elastic fold for a multi-process gang: logical
+    shard slots → per-process slot blocks → per-device fold.
+
+    Returns ``(local_slots, d_local, physical)`` where ``local_slots =
+    logical // procs`` is each process's contiguous slot block,
+    ``d_local`` the data-mesh devices each process contributes (the
+    largest divisor of its slot count that fits its local devices —
+    same rule as ``physical_data_world``, applied per process), and
+    ``physical = procs · d_local`` the global data-mesh size.  Every
+    process must see the same ``local_devices`` (the mesh needs a
+    uniform per-process block); with ``elastic=False`` the slots must
+    map 1:1 onto local devices.  Because the per-device update scales
+    the gradient sum AFTER the all-reduce (``train.data_parallel``),
+    any power-of-two realization of the same logical schedule —
+    including across different gang sizes — is bit-identical.
+    """
+    if procs < 1:
+        raise ValueError(f"procs must be >= 1, got {procs}")
+    if logical % procs:
+        raise ValueError(
+            f"data_parallel={logical} logical shard slots cannot split "
+            f"evenly over {procs} processes")
+    local_slots = logical // procs
+    if elastic:
+        d_local = physical_data_world(local_slots, local_devices)
+    else:
+        if local_slots > local_devices:
+            raise ValueError(
+                f"{local_slots} shard slots per process need "
+                f"{local_slots} local devices but only {local_devices} "
+                "are visible — pass elastic=True to fold")
+        d_local = local_slots
+    return local_slots, d_local, procs * d_local
+
+
 def reshard(tree: Any, shardings: Any) -> Any:
     """device_put every leaf under the matching sharding (or replicate).
 

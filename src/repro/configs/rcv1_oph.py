@@ -80,6 +80,16 @@ class OPHPaperConfig:
     ft_backoff_cap_s: float = 60.0
     ft_ckpt_keep_last: int = 3
     ft_elastic: bool = True
+    # multi-host gang training (PR 10): process count for
+    # ``train.supervisor.run_multiprocess_supervised`` (1 = classic
+    # single-process), the coordinated-checkpoint barrier budget, and
+    # the optional error-feedback gradient compression over the gang's
+    # all-reduce (None = exact fp32; 8 = int8 blockwise-absmax, 1 =
+    # sign+scale — the paper's b-bit storage argument applied to the
+    # gradient wire format)
+    stream_procs: int = 1
+    ft_barrier_timeout_s: float = 120.0
+    stream_grad_compress: Optional[int] = None
     # cost-model dispatch (PR 8): a measured perf profile consumed by
     # launch/train.py, launch/serve.py and the benchmarks — "calibrate
     # once, run fast" (launch/calibrate.py writes it; a missing or
@@ -119,7 +129,9 @@ class OPHPaperConfig:
                   prefetch=self.stream_prefetch,
                   data_parallel=self.stream_data_parallel,
                   elastic=self.ft_elastic,
-                  ckpt_keep_last=self.ft_ckpt_keep_last)
+                  ckpt_keep_last=self.ft_ckpt_keep_last,
+                  grad_compress=self.stream_grad_compress,
+                  ckpt_barrier_timeout_s=self.ft_barrier_timeout_s)
         kw.update(overrides)
         return kw
 

@@ -55,7 +55,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Any, Callable, Iterator, Sequence
+from typing import Any, Callable, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -193,6 +193,7 @@ def group_batch_stream(
     mask_width: int,
     transfer: Callable[..., tuple],
     mmap: bool = True,
+    slot_range: "Optional[Tuple[int, int]]" = None,
 ) -> Iterator[Any]:
     """Data-parallel event stream: consecutive GROUPS of ``world``
     shards from the epoch order, one shard per device, in lockstep.
@@ -208,32 +209,50 @@ def group_batch_stream(
     hits and zero rows.  Per-shard batch contents equal the serial
     schedule's (same ``iter_hashed_batches`` permutation contract).
 
+    ``slot_range=(lo, hi)`` is the multi-process ownership window
+    (``distributed.runtime.process_slot_range``): this process reads
+    ONLY the shards occupying slots [lo, hi) of each group and the
+    stacked arrays carry just those ``hi - lo`` rows — the caller
+    assembles the global batch from every process's block
+    (``jax.make_array_from_process_local_data``).  Everything
+    schedule-shaped stays GLOBAL regardless: ``n_rows`` counts the
+    real examples across ALL slots (computed from ``counts``, no
+    remote reads — the progressive-validation denominator must agree
+    on every rank), the step count per group is the global
+    ``max ceil(rows/B)``, and ``Boundary.shards_consumed`` is the full
+    group size.
+
     ``start_pos`` must sit on a group boundary (a multiple of
     ``world``) — which is the only place the trainer checkpoints.
     """
+    slot_lo, slot_hi = (0, world) if slot_range is None else slot_range
+    if not (0 <= slot_lo < slot_hi <= world):
+        raise ValueError(
+            f"slot_range {slot_range} outside the [0, {world}) slots")
     if start_pos % world != 0 and start_pos < n_shards:
         raise ValueError(
             f"data-parallel resume position {start_pos} is not a "
             f"multiple of the world size {world} — checkpoint written "
             "under a different schedule?")
+    local = slot_hi - slot_lo
     for epoch in range(start_epoch, epochs):
         order = shard_order(seed, epoch, n_shards, shuffle)
         first = start_pos if epoch == start_epoch else 0
         for lo in range(first, n_shards, world):
             group = [int(s) for s in order[lo: lo + world]]
-            iters = [iter_hashed_batches(
-                root, batch_size, shard_ids=[s],
-                perm_seed=(seed, epoch), mmap=mmap) for s in group]
+            iters = {d: iter_hashed_batches(
+                root, batch_size, shard_ids=[group[d]],
+                perm_seed=(seed, epoch), mmap=mmap)
+                for d in range(len(group)) if slot_lo <= d < slot_hi}
             n_batches = [-(-counts[s] // batch_size) for s in group]
             for t in range(max(n_batches)):
-                codes = np.zeros((world, batch_size, packed_width),
+                codes = np.zeros((local, batch_size, packed_width),
                                  np.uint8)
-                empty = (np.zeros((world, batch_size, mask_width),
+                empty = (np.zeros((local, batch_size, mask_width),
                                   np.uint8) if has_empty else None)
-                labels = np.zeros((world, batch_size), np.int32)
-                valid = np.zeros((world, batch_size), bool)
-                n_rows = 0
-                for d, it in enumerate(iters):
+                labels = np.zeros((local, batch_size), np.int32)
+                valid = np.zeros((local, batch_size), bool)
+                for d, it in iters.items():
                     if t >= n_batches[d]:
                         continue
                     try:
@@ -250,12 +269,17 @@ def group_batch_stream(
                             f"{root!r}: {e}", shard=group[d],
                             epoch=epoch, position=lo + d) from e
                     m = len(bl)
-                    codes[d, :m] = bp
-                    labels[d, :m] = bl
-                    valid[d, :m] = True
+                    codes[d - slot_lo, :m] = bp
+                    labels[d - slot_lo, :m] = bl
+                    valid[d - slot_lo, :m] = True
                     if has_empty:
-                        empty[d, :m] = bem
-                    n_rows += m
+                        empty[d - slot_lo, :m] = bem
+                # the GLOBAL real-row count for this step — a pure
+                # function of the row counts, so every process agrees
+                # without reading each other's shards
+                n_rows = sum(
+                    min(batch_size, counts[group[d]] - t * batch_size)
+                    for d in range(len(group)) if t < n_batches[d])
                 yield StreamBatch(
                     args=transfer(codes, empty, labels, valid),
                     n_rows=n_rows)

@@ -1,4 +1,10 @@
-"""Distributed runtime: shardings, compression, SP, PP, collectives."""
+"""Distributed runtime: processes, shardings, compression, SP, PP,
+collectives."""
+from repro.distributed.runtime import (
+    ProcessRuntime, current_rank, current_runtime, heartbeat,
+    init_runtime, mesh_over_processes, process_slot_range,
+    read_heartbeats, replicate_across_processes,
+)
 from repro.distributed.shardings import (
     data_axes, batch_spec, replicated, shard, dp_size, mp_size, constrain,
 )
@@ -16,6 +22,9 @@ from repro.distributed.collectives import (
 )
 
 __all__ = [
+    "ProcessRuntime", "init_runtime", "current_runtime", "current_rank",
+    "mesh_over_processes", "process_slot_range",
+    "replicate_across_processes", "heartbeat", "read_heartbeats",
     "data_axes", "batch_spec", "replicated", "shard", "dp_size", "mp_size",
     "constrain",
     "compressed_allreduce_mean", "tree_compressed_allreduce_mean",

@@ -1,0 +1,261 @@
+"""Multi-process (multi-host) runtime over ``jax.distributed``.
+
+PR 7 made the streaming trainer survive anything that can happen to a
+single process; this layer makes the PROCESS itself a replaceable part.
+A training gang is ``procs`` cooperating processes, each owning a
+contiguous block of the logical shard slots (``process_slot_range``)
+and a fixed block of the global device mesh
+(``mesh_over_processes``).  Everything topology-shaped that the rest
+of the repo needs lives here:
+
+  * ``init_runtime`` — the coordinator bootstrap.  For ``procs > 1``
+    it selects the gloo CPU collectives backend and calls
+    ``jax.distributed.initialize``; for ``procs == 1`` it touches
+    nothing (single-process runs must not pay a distributed-runtime
+    tax, and configuring gloo without a coordinator breaks CPU backend
+    init).  It also tells ``repro.ft.faults`` this process's rank, so
+    rank-targeted fault events (``rank=k``) fire on the right process;
+  * ``ProcessRuntime`` — the passive record the trainer threads
+    through: gang size, rank, per-process device count, and the run
+    directory used for heartbeat files;
+  * ``mesh_over_processes`` — the global (data, model) mesh with
+    devices sorted by ``(process_index, id)`` and exactly ``d_local``
+    devices per process, so process p's devices occupy mesh rows
+    ``[p·d_local, (p+1)·d_local)`` — which is what makes a process's
+    contiguous slot block line up with a contiguous run of mesh rows
+    and lets ``jax.make_array_from_process_local_data`` assemble the
+    stacked batch from purely local reads;
+  * ``replicate_across_processes`` — host pytree → fully-replicated
+    global arrays via ``jax.make_array_from_callback`` (a plain
+    ``device_put`` cannot build arrays spanning non-addressable
+    devices);
+  * **heartbeats** — each rank writes an atomic
+    ``<run_dir>/hb/rank_<r>.json`` at every shard boundary with its
+    rank, global step and wall-clock, giving the supervisor (and a
+    human with ``cat``) a liveness/progress view that does not depend
+    on the collectives being healthy.
+
+The process topology is deliberately NOT part of the run fingerprint:
+the shard-ownership policy (``"contiguous_slots"``) is, so resume
+refuses a run whose slot→process mapping rule changed, while the gang
+SIZE rides the sanctioned topology-lineage record exactly like the
+physical device count — a checkpoint written by N processes resumes on
+M ≠ N under ``elastic=True`` (see ``train.streaming``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.ft import faults
+
+__all__ = [
+    "ProcessRuntime", "init_runtime", "current_runtime", "current_rank",
+    "mesh_over_processes", "replicate_across_processes",
+    "process_slot_range", "heartbeat", "read_heartbeats",
+]
+
+SHARD_OWNERSHIP = "contiguous_slots"
+
+_CURRENT: Optional["ProcessRuntime"] = None
+
+
+def current_runtime() -> Optional["ProcessRuntime"]:
+    """The runtime ``init_runtime`` registered (None before init —
+    i.e. in every classic single-process run)."""
+    return _CURRENT
+
+
+def current_rank() -> int:
+    """This process's gang rank (0 when no runtime was initialized)."""
+    return _CURRENT.rank if _CURRENT is not None else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessRuntime:
+    """One process's view of the training gang."""
+    procs: int = 1                 # gang size (1 = classic single-process)
+    rank: int = 0                  # this process's id in [0, procs)
+    coordinator: str = ""          # "host:port" ("" when single-process)
+    local_devices: int = 1         # devices this process contributes
+    run_dir: Optional[str] = None  # heartbeat / gang bookkeeping root
+
+    @property
+    def is_multiprocess(self) -> bool:
+        return self.procs > 1
+
+    @property
+    def is_leader(self) -> bool:
+        return self.rank == 0
+
+
+def init_runtime(
+    procs: int = 1,
+    rank: int = 0,
+    coordinator: Optional[str] = None,
+    run_dir: Optional[str] = None,
+) -> ProcessRuntime:
+    """Bootstraps this process into a ``procs``-wide gang.
+
+    Must run before the first jax computation (``jax.distributed
+    .initialize`` cannot attach to an already-initialized backend).
+    Single-process (``procs == 1``) is a no-op beyond building the
+    record — in particular the gloo collectives config is NOT touched:
+    selecting gloo without a coordinator leaves the CPU client half
+    built and every later backend call fails.
+    """
+    if procs < 1:
+        raise ValueError(f"procs must be >= 1, got {procs}")
+    if not 0 <= rank < procs:
+        raise ValueError(f"rank {rank} outside [0, {procs})")
+    if procs > 1:
+        if not coordinator:
+            raise ValueError(
+                "multi-process init needs a coordinator address "
+                "(host:port) shared by every rank")
+        import jax
+        try:
+            # CPU cross-process collectives ship via gloo; the config
+            # knob must be set BEFORE distributed.initialize builds the
+            # backend.  Non-CPU builds may not expose it — harmless,
+            # their collectives don't route through it.
+            jax.config.update("jax_cpu_collectives_implementation",
+                              "gloo")
+        except Exception:  # noqa: BLE001 — knob absent on this build
+            pass
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=procs, process_id=rank)
+    faults.set_rank(rank)
+    rt = ProcessRuntime(procs=procs, rank=rank,
+                        coordinator=coordinator or "",
+                        local_devices=_local_device_count(),
+                        run_dir=run_dir)
+    global _CURRENT
+    _CURRENT = rt
+    if run_dir:
+        heartbeat(rt, phase="init")
+    return rt
+
+
+def _local_device_count() -> int:
+    import jax
+    return jax.local_device_count()
+
+
+def mesh_over_processes(d_local: int, *, model_parallel: int = 1):
+    """The gang's global (data, model) mesh: ``d_local`` devices per
+    process, ordered by ``(process_index, id)``.
+
+    Process p's devices land at data rows ``[p·d_local, (p+1)·d_local)``
+    — the invariant ``process_slot_range`` and the local-batch assembly
+    in ``train.data_parallel.device_put_process_local`` rely on.  Every
+    process must contribute at least ``d_local`` devices.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    by_proc: dict = {}
+    for d in jax.devices():
+        by_proc.setdefault(d.process_index, []).append(d)
+    chosen = []
+    for p in sorted(by_proc):
+        devs = sorted(by_proc[p], key=lambda d: d.id)
+        if len(devs) < d_local:
+            raise ValueError(
+                f"process {p} has {len(devs)} devices but the mesh "
+                f"needs {d_local} per process")
+        chosen.extend(devs[:d_local])
+    n = len(chosen)
+    if n % model_parallel:
+        raise ValueError(
+            f"{n} devices not divisible by model_parallel="
+            f"{model_parallel}")
+    arr = np.asarray(chosen).reshape(n // model_parallel, model_parallel)
+    return Mesh(arr, ("data", "model"))
+
+
+def replicate_across_processes(tree: Any, mesh) -> Any:
+    """Host pytree → fully-replicated global arrays on ``mesh``.
+
+    ``jax.device_put`` can only target addressable devices; a
+    replicated array on a multi-process mesh spans devices this
+    process cannot address, so each leaf is assembled with
+    ``make_array_from_callback`` (every process feeds its local shards
+    from its own identical host copy — the standard same-value-on-
+    every-process contract).
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(mesh, P())
+
+    def _leaf(x):
+        host = np.asarray(x)
+        return jax.make_array_from_callback(
+            host.shape, rep, lambda idx: host[idx])
+
+    return jax.tree.map(_leaf, tree)
+
+
+def process_slot_range(logical: int, procs: int,
+                       rank: int) -> Tuple[int, int]:
+    """The contiguous block of logical shard slots rank ``rank`` owns.
+
+    ``logical`` must divide evenly over the gang — uneven ownership
+    would give processes different step counts within a group and
+    deadlock the collectives.
+    """
+    if logical % procs:
+        raise ValueError(
+            f"data_parallel={logical} logical shard slots cannot split "
+            f"evenly over {procs} processes — choose procs dividing "
+            "the logical world")
+    per = logical // procs
+    return rank * per, (rank + 1) * per
+
+
+# ------------------------------------------------------- heartbeats ----
+
+def _hb_dir(run_dir: str) -> str:
+    return os.path.join(run_dir, "hb")
+
+
+def heartbeat(rt: ProcessRuntime, *, step: int = 0,
+              shards_done: int = 0, phase: str = "train") -> None:
+    """Atomically publishes this rank's liveness/progress record."""
+    if not rt.run_dir:
+        return
+    d = _hb_dir(rt.run_dir)
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"rank_{rt.rank:05d}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"rank": rt.rank, "procs": rt.procs, "phase": phase,
+                   "step": int(step), "shards_done": int(shards_done),
+                   "time": time.time(), "pid": os.getpid()}, f)
+    os.replace(tmp, path)
+
+
+def read_heartbeats(run_dir: str) -> dict:
+    """All ranks' latest heartbeat records, keyed by rank."""
+    out: dict = {}
+    d = _hb_dir(run_dir)
+    try:
+        names = os.listdir(d)
+    except FileNotFoundError:
+        return out
+    for name in names:
+        if not (name.startswith("rank_") and name.endswith(".json")):
+            continue
+        try:
+            with open(os.path.join(d, name)) as f:
+                rec = json.load(f)
+            out[int(rec["rank"])] = rec
+        except (OSError, ValueError, KeyError):
+            continue
+    return out

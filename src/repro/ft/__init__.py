@@ -9,14 +9,15 @@ faults + bounded retry).  Serving reuses ``BackoffPolicy`` for the
 ScoreClient's opt-in 429/503 retry.
 """
 from repro.ft.faults import (
-    FaultEvent, FaultPlan, InjectedCrash, active, arm, arm_plan, disarm,
+    FaultEvent, FaultPlan, InjectedCrash, active, arm, arm_plan,
+    current_rank, disarm, set_rank,
 )
 from repro.ft.retry import BackoffPolicy
 from repro.ft.watchdog import FailureInjector, StepWatchdog
 
 __all__ = [
     "FaultEvent", "FaultPlan", "InjectedCrash", "active", "arm",
-    "arm_plan", "disarm",
+    "arm_plan", "disarm", "set_rank", "current_rank",
     "BackoffPolicy",
     "FailureInjector", "StepWatchdog",
 ]

@@ -35,18 +35,37 @@ directive* and ``ckpt.checkpoint.save`` implements the tear itself
 (write, truncate the payload, complete the rename + manifest update,
 then crash) — simulating the real-world failure where the rename is
 durable but the data pages never hit disk.
+
+Cross-rank injection (the multi-process gang, ``distributed.runtime``):
+
+  * every event carries an optional ``rank`` — it fires only in the
+    process whose ``set_rank`` matches (``None`` = any rank), so one
+    plan shipped to every worker kills exactly rank k;
+  * ``"proc_kill"`` is a REAL death: ``SIGKILL`` to self at the named
+    step — no Python cleanup, no exception, the exact way an OOM
+    killer or `kill -9` takes a worker.  ``"manifest_write"`` kills
+    rank 0 between writing the coordinated checkpoint's rank payloads
+    and committing the step manifest (``ckpt.coordinated``) — the
+    window that must leave the PREVIOUS checkpoint authoritative;
+  * plans survive respawns: ``state_path`` persists each event's
+    ``fired`` count (written before any kill/raise), so a ``times=1``
+    kill does not re-fire after the supervisor restarts the gang —
+    which is what makes the multi-process crash matrix terminate.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import json
+import os
+import signal
 import time
 from typing import List, Optional
 
 __all__ = [
     "FaultEvent", "FaultPlan", "InjectedCrash", "arm", "arm_plan",
-    "disarm", "active", "on_train_step", "on_shard_read",
-    "on_ckpt_write",
+    "disarm", "active", "set_rank", "current_rank", "on_train_step",
+    "on_shard_read", "on_ckpt_write", "on_manifest_write",
 ]
 
 
@@ -70,19 +89,31 @@ class FaultEvent:
       * ``"ckpt_write"`` — tear the checkpoint written at checkpoint
         step ``at_save`` (``None`` = the next save): the payload is
         truncated *after* the atomic rename completes, then
-        ``InjectedCrash`` is raised.
+        ``InjectedCrash`` is raised;
+      * ``"proc_kill"`` — ``SIGKILL`` to self before dispatching train
+        step ``step``: a real `kill -9`, no cleanup, no exception;
+      * ``"manifest_write"`` — kill the committing rank of a
+        coordinated checkpoint at save step ``at_save`` (``None`` =
+        the next save) AFTER every rank payload is durable but BEFORE
+        the step manifest commits.
 
-    ``times`` bounds how often the event fires (``None`` = every match,
-    the persistent-corruption model); ``fired`` counts firings.
+    ``rank`` scopes the event to one process of a multi-process gang
+    (``None`` = any rank; single-process runs are rank 0).  ``times``
+    bounds how often the event fires (``None`` = every match, the
+    persistent-corruption model); ``fired`` counts firings.
     """
     site: str
     step: Optional[int] = None
     shard: Optional[int] = None
     at_save: Optional[int] = None
+    rank: Optional[int] = None
     times: Optional[int] = 1
     delay_s: float = 0.0
     mode: str = "torn"
     fired: int = 0
+
+    def _rank_matches(self) -> bool:
+        return self.rank is None or self.rank == _RANK
 
     def _take(self) -> bool:
         if self.times is not None and self.fired >= self.times:
@@ -97,15 +128,79 @@ class FaultPlan:
     ``arm``/``arm_plan``.  The plan is stateful: each event remembers
     how often it fired, so the same plan object armed across a
     supervised restart sequence injects each failure exactly as
-    scripted."""
+    scripted.
+
+    ``state_path`` extends that statefulness across PROCESS deaths:
+    firing counts are persisted there (atomically, BEFORE the failure
+    is delivered) and re-loaded by ``load_state`` in the respawned
+    worker — without it, a ``times=1`` process kill would re-fire on
+    every restart and the gang could never finish.
+    """
     events: List[FaultEvent]
     seed: int = 0
+    state_path: Optional[str] = None
 
     def matching(self, site: str):
-        return [e for e in self.events if e.site == site]
+        return [e for e in self.events if e.site == site
+                and e._rank_matches()]
+
+    # ------------------------------ cross-process (de)serialization --
+    def to_spec(self) -> dict:
+        """JSON-safe description (fired counts excluded — those travel
+        via ``state_path``), for shipping a plan to gang workers."""
+        evs = []
+        for e in self.events:
+            d = dataclasses.asdict(e)
+            d.pop("fired")
+            evs.append(d)
+        return {"events": evs, "seed": self.seed}
+
+    @classmethod
+    def from_spec(cls, spec: dict,
+                  state_path: Optional[str] = None) -> "FaultPlan":
+        plan = cls([FaultEvent(**ev) for ev in spec.get("events", [])],
+                   seed=int(spec.get("seed", 0)),
+                   state_path=state_path)
+        plan.load_state()
+        return plan
+
+    # ------------------------------------- fired-count persistence ---
+    def load_state(self) -> None:
+        if not self.state_path:
+            return
+        try:
+            with open(self.state_path) as f:
+                fired = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError, OSError):
+            return
+        for i, ev in enumerate(self.events):
+            ev.fired = int(fired.get(str(i), ev.fired))
+
+    def persist_state(self) -> None:
+        if not self.state_path:
+            return
+        tmp = self.state_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({str(i): ev.fired
+                       for i, ev in enumerate(self.events)}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.state_path)
 
 
 _ACTIVE: Optional[FaultPlan] = None
+_RANK: int = 0
+
+
+def set_rank(rank: int) -> None:
+    """Declares this process's gang rank (``distributed.runtime`` calls
+    it from ``init_runtime``); rank-scoped events compare against it."""
+    global _RANK
+    _RANK = int(rank)
+
+
+def current_rank() -> int:
+    return _RANK
 
 
 def arm_plan(plan: Optional[FaultPlan]) -> None:
@@ -142,9 +237,18 @@ def on_train_step(step: int) -> None:
         return
     for ev in plan.matching("slow_step"):
         if ev.step == step and ev._take():
+            plan.persist_state()
             time.sleep(ev.delay_s)
+    for ev in plan.matching("proc_kill"):
+        if ev.step == step and ev._take():
+            # a REAL worker death: persist the firing first (the
+            # respawned process must not re-fire), then kill -9 self —
+            # no exception handling, no atexit, no flushed buffers
+            plan.persist_state()
+            os.kill(os.getpid(), signal.SIGKILL)
     for ev in plan.matching("train_step"):
         if ev.step == step and ev._take():
+            plan.persist_state()
             raise InjectedCrash(f"injected crash at train step {step}")
 
 
@@ -158,6 +262,7 @@ def on_shard_read(root: str, shard: int) -> None:
         return
     for ev in plan.matching("shard_read"):
         if (ev.shard is None or ev.shard == shard) and ev._take():
+            plan.persist_state()
             raise IOError(
                 f"injected transient IOError reading shard {shard} "
                 f"of {root!r} (firing {ev.fired}"
@@ -174,5 +279,20 @@ def on_ckpt_write(step: int) -> Optional[str]:
         return None
     for ev in plan.matching("ckpt_write"):
         if (ev.at_save is None or ev.at_save == step) and ev._take():
+            plan.persist_state()
             return ev.mode
     return None
+
+
+def on_manifest_write(step: int) -> None:
+    """Called by ``ckpt.coordinated`` on the committing rank after all
+    rank payloads are durable, immediately before the step manifest
+    commits — the window where a rank-0 death must leave the previous
+    checkpoint authoritative.  A matching event kills the process."""
+    plan = _ACTIVE
+    if plan is None:
+        return
+    for ev in plan.matching("manifest_write"):
+        if (ev.at_save is None or ev.at_save == step) and ev._take():
+            plan.persist_state()
+            os.kill(os.getpid(), signal.SIGKILL)

@@ -36,3 +36,18 @@ class BackoffPolicy:
                                         int(attempt)))).random()
             d *= 1.0 + float(self.jitter_frac) * (2.0 * u - 1.0)
         return d
+
+    def for_rank(self, rank: int) -> "BackoffPolicy":
+        """A copy whose jitter stream is de-correlated for gang rank
+        ``rank`` (same base/factor/cap).
+
+        A gang restart re-launches every worker at the same instant;
+        if all ranks share one jitter stream their retries stay in
+        lockstep and the thundering herd the jitter exists to break is
+        reproduced exactly.  The per-rank seed is derived through
+        ``SeedSequence`` (not ``seed + rank``) so neighbouring ranks
+        get unrelated streams, deterministically per ``(seed, rank)``.
+        """
+        derived = int(np.random.SeedSequence(
+            (int(self.seed), 0x5eed, int(rank))).generate_state(1)[0])
+        return dataclasses.replace(self, seed=derived)

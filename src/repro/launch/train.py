@@ -115,7 +115,10 @@ def run_linear(args) -> dict:
 def run_stream(args) -> dict:
     """Supervised streaming training over a sharded packed archive:
     crash-safe checkpoints, quarantine-checked restore, elastic device
-    folding, straggler watchdog — the single-host production loop."""
+    folding, straggler watchdog — the single-host production loop.
+    ``--procs N`` upgrades it to an N-process ``jax.distributed`` gang
+    under gang-restart supervision (coordinated checkpoints, respawn
+    from the latest committed step on any worker death)."""
     from repro.configs.rcv1_oph import CONFIG
     from repro.data import (SynthRcv1Config, generate_arrays,
                             preprocess_and_save, shard_row_counts)
@@ -134,6 +137,37 @@ def run_stream(args) -> dict:
                                     n_shards=4)
         print(f"preprocessed {stats['n']} docs into 4 shards in "
               f"{stats['seconds_hashing']:.1f}s (one-time cost)")
+
+    if args.procs and args.procs > 1:
+        from repro.train.supervisor import run_multiprocess_supervised
+        fault_spec = None
+        if args.fail_at is not None:
+            fault_spec = FaultPlan([
+                FaultEvent(site="proc_kill", step=args.fail_at,
+                           rank=args.procs - 1, times=1)]).to_spec()
+        run = run_multiprocess_supervised(
+            hashed_dir, BBitLinearConfig(k=args.k, b=args.b),
+            procs=args.procs,
+            run_dir=os.path.join(args.workdir, "gang"),
+            policy=CONFIG.restart_policy(),
+            fault_spec=fault_spec,
+            local_devices=args.local_devices,
+            ckpt_dir=os.path.join(args.workdir, "ckpt_stream"),
+            seed=args.seed,
+            **CONFIG.stream_kwargs(
+                epochs=args.epochs, batch_size=args.batch_size,
+                lr=args.lr, ckpt_every_shards=1,
+                data_parallel=args.data_parallel or args.procs))
+        rec = run.result
+        print(f"gang of {args.procs} procs streamed "
+              f"{rec['examples_seen']} rows x {args.epochs} epochs in "
+              f"{rec['train_seconds']:.1f}s: progressive_acc="
+              f"{rec['progressive_acc']:.4f} steps={rec['n_steps']} "
+              f"gang_restarts={run.restarts} "
+              f"topology={rec['lineage']}")
+        return dict(progressive_acc=rec["progressive_acc"],
+                    steps=rec["n_steps"], restarts=run.restarts,
+                    crashes=[c.error for c in run.crashes])
 
     if args.fail_at is not None:
         faults.arm_plan(FaultPlan([
@@ -245,6 +279,13 @@ def main() -> None:
     ap.add_argument("--data-parallel", type=int, default=None,
                     help="stream mode: logical data-parallel world "
                          "(elastic — folds onto available devices)")
+    ap.add_argument("--procs", type=int, default=None,
+                    help="stream mode: launch an N-process "
+                         "jax.distributed gang (localhost) under "
+                         "gang-restart supervision")
+    ap.add_argument("--local-devices", type=int, default=1,
+                    help="stream mode with --procs: fake CPU devices "
+                         "per gang worker")
     ap.add_argument("--profile", default=None,
                     help="perf cost-model profile JSON (default: the "
                          "config's profile_path if it exists; missing/"

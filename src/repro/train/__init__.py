@@ -32,7 +32,8 @@ from repro.train.linear_trainer import (
 )
 from repro.train.streaming import StreamFitResult, fit_streaming
 from repro.train.supervisor import (
-    CrashRecord, RestartPolicy, SupervisedRun, run_supervised,
+    CrashRecord, MultiProcessRun, RestartPolicy, SupervisedRun,
+    run_multiprocess_supervised, run_supervised,
 )
 
 __all__ = [
@@ -48,4 +49,5 @@ __all__ = [
     "train_bbit_sgd",
     "StreamFitResult", "fit_streaming",
     "CrashRecord", "RestartPolicy", "SupervisedRun", "run_supervised",
+    "MultiProcessRun", "run_multiprocess_supervised",
 ]

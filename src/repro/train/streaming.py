@@ -99,11 +99,13 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.ckpt import checkpoint as ckpt
+from repro.ckpt import coordinated
 from repro.ckpt.elastic import (
-    mesh_from_available_devices, physical_data_world, replicate_spec_tree,
-    reshard,
+    mesh_from_available_devices, physical_data_world, process_fold,
+    replicate_spec_tree, reshard,
 )
 from repro.core.bbit import packed_mask_width, packed_width
 from repro.data.hashed_dataset import _read_meta, shard_row_counts
@@ -119,8 +121,13 @@ from repro.models.linear import (
 )
 from repro.optim.averaging import average_or_none
 from repro.optim.optimizers import make_optimizer
+from repro.distributed.runtime import (
+    SHARD_OWNERSHIP, ProcessRuntime, current_runtime, heartbeat,
+    mesh_over_processes, process_slot_range, replicate_across_processes,
+)
 from repro.train.data_parallel import (
-    build_dp_averaged_train_step, device_put_sharded,
+    build_dp_averaged_train_step, device_put_process_local,
+    device_put_sharded,
 )
 from repro.train.losses import mean_loss_with_preds_fn, sum_loss_with_hits_fn
 from repro.train.steps import build_averaged_train_step, init_averaged_state
@@ -211,6 +218,9 @@ def fit_streaming(
     resume: bool = True,
     stop_after_shards: Optional[int] = None,
     watchdog: Optional[Any] = None,
+    runtime: Optional[ProcessRuntime] = None,
+    grad_compress: Optional[int] = None,
+    ckpt_barrier_timeout_s: float = 120.0,
 ) -> StreamFitResult:
     """Streams a format-v1/2/3 hashed archive through minibatch SGD.
 
@@ -244,6 +254,34 @@ def fit_streaming(
     the checkpoint stores the full averaged train state plus stream
     position and progressive-validation counters, so the continued run
     is bit-identical to an uninterrupted one.
+
+    **Multi-process gangs**: under an initialized
+    ``distributed.runtime`` (``runtime`` defaults to
+    ``current_runtime()``) the ``data_parallel`` logical slots split
+    into one contiguous block per process
+    (``runtime.process_slot_range``) — each rank STREAMS only its own
+    shards while the step-count/boundary bookkeeping stays global, so
+    every rank takes the identical step sequence and the two
+    all-reduces simply span the gang's mesh
+    (``runtime.mesh_over_processes``).  Checkpoints become coordinated
+    (``ckpt.coordinated``): every rank writes its own CRC'd payload
+    into a staging directory and rank 0 commits the step with an
+    atomic rename once all ``procs`` payloads landed
+    (``ckpt_barrier_timeout_s`` bounds the wait).  Elastic resume
+    extends across gang sizes: an N-process checkpoint resumes on
+    M ≠ N processes (including 1) under ``elastic=True`` by adopting
+    the checkpoint's logical schedule — bit-identically for
+    power-of-two realizations — with the gang size appended to the
+    topology lineage, never refused.
+
+    ``grad_compress`` (8 or 1, data-parallel only) swaps the exact
+    fp32 gradient all-reduce for the error-feedback compressed
+    exchange (``distributed.grad_compression`` — int8 blockwise-absmax
+    or sign+scale on the wire).  It changes the trained numerics (and
+    so is part of the run fingerprint); ``None`` (default) leaves the
+    exact path bitwise untouched.  The residual memory is NOT
+    checkpointed — it resets to zero on resume, so compressed runs
+    trade the bitwise-resume guarantee for bandwidth.
     """
     meta = _read_meta(root)
     if meta.get("shards", 0) <= 0 or meta.get("n", 0) <= 0:
@@ -291,6 +329,30 @@ def fit_streaming(
     # adoption of a checkpoint's schedule below.
     dp = data_parallel is not None
     logical = int(data_parallel) if dp else 1
+
+    rt = runtime if runtime is not None else (current_runtime()
+                                              or ProcessRuntime())
+    procs = rt.procs
+    if procs > 1:
+        if not dp:
+            raise ValueError(
+                f"a {procs}-process gang requires data_parallel — the "
+                "serial schedule has no shard slots to split across "
+                "processes")
+        # validates logical % procs up front (the stream, mesh and
+        # checkpoint protocol all assume even contiguous blocks)
+        process_slot_range(logical, procs, rt.rank)
+    if grad_compress is not None:
+        if not dp:
+            raise ValueError(
+                "grad_compress applies to the data-parallel gradient "
+                "all-reduce — pass data_parallel")
+        if grad_compress not in (1, 8):
+            raise ValueError(
+                f"grad_compress must be 8 (int8 blockwise) or 1 "
+                f"(sign+scale), got {grad_compress}")
+    compress = (None if grad_compress is None
+                else {"bits": int(grad_compress), "block": 256})
 
     # oph_zero archives carry a packed per-row empty bitmask; batches
     # then travel as (codes_bytes, mask_bytes) tuples.  v3 answers this
@@ -354,6 +416,13 @@ def fit_streaming(
         if sched is not None:
             ck_dp = bool(sched.get("dp"))
             ck_logical = int(sched.get("logical_world", 1))
+            ck_procs = int(sched.get("procs", 1))
+            if ck_procs != procs and not elastic:
+                raise ValueError(
+                    f"checkpoint under {ckpt_dir!r} was written by a "
+                    f"{ck_procs}-process gang but this run has {procs} "
+                    "process(es) — pass elastic=True to resume across "
+                    "gang sizes")
             if (ck_dp, ck_logical) != (dp, logical):
                 if not elastic:
                     raise ValueError(
@@ -395,7 +464,15 @@ def fit_streaming(
          "average": average, "avg_start_step": avg_start_step,
          "shuffle_shards": shuffle_shards,
          "world": logical,
-         "shard_assignment": ("contiguous_groups" if dp else "serial")})
+         "shard_assignment": ("contiguous_groups" if dp else "serial"),
+         # the slot→process mapping RULE is replay-relevant (a
+         # different ownership policy would stream different shards per
+         # rank); the gang SIZE is not — like the physical device
+         # count it rides the lineage record, so checkpoints resume
+         # across gang sizes
+         "process_topology": {"shard_ownership": SHARD_OWNERSHIP},
+         "grad_compress": (int(grad_compress) if grad_compress
+                           else None)})
 
     if restored_tree is not None:
         if int(restored_tree["fingerprint"]) != int(fingerprint):
@@ -412,17 +489,31 @@ def fit_streaming(
         hits = int(restored_tree["hits"])
         seen = int(restored_tree["seen"])
 
+    d_local = 1
     if dp:
         n_dev = len(jax.devices())
-        if not elastic and logical > n_dev:
-            raise ValueError(
-                f"data_parallel={logical} needs {logical} devices but "
-                f"only {n_dev} are visible — pass elastic=True to fold "
-                "the logical shard slots onto the available devices")
-        physical = physical_data_world(logical) if elastic else logical
-        mesh = mesh_from_available_devices(model_parallel=1,
-                                           max_devices=physical)
-        if restored_tree is not None:
+        if procs > 1:
+            # three-level fold: logical slots → per-process contiguous
+            # blocks → per-device fold within each process
+            _, d_local, physical = process_fold(
+                logical, procs, rt.local_devices, elastic=elastic)
+            mesh = mesh_over_processes(d_local)
+        else:
+            if not elastic and logical > n_dev:
+                raise ValueError(
+                    f"data_parallel={logical} needs {logical} devices "
+                    f"but only {n_dev} are visible — pass elastic=True "
+                    "to fold the logical shard slots onto the "
+                    "available devices")
+            physical = physical_data_world(logical) if elastic else logical
+            mesh = mesh_from_available_devices(model_parallel=1,
+                                               max_devices=physical)
+        if procs > 1:
+            # a gang mesh spans devices this process cannot address:
+            # both fresh and restored host state must be assembled
+            # into global replicated arrays (plain device_put fails)
+            astate = replicate_across_processes(astate, mesh)
+        elif restored_tree is not None:
             # place the restored host arrays explicitly onto the live
             # mesh, fully replicated — the elastic-restore re-shard
             astate = reshard(astate, replicate_spec_tree(astate, mesh))
@@ -434,10 +525,11 @@ def fit_streaming(
     # stored in each checkpoint's meta.json next to the schedule
     lineage = list(prior_lineage)
     realization = {"logical": int(logical), "physical": int(physical),
+                   "procs": int(procs),
                    "devices": int(len(jax.devices())),
                    "from_step": int(shards_done)}
     if not lineage or any(lineage[-1].get(key) != realization[key]
-                          for key in ("logical", "physical")):
+                          for key in ("logical", "physical", "procs")):
         lineage.append(realization)
 
     # the jitted step (and every compiled shape variant behind it) is
@@ -457,14 +549,15 @@ def fit_streaming(
                        "table_version": _perf_rep["table_version"],
                        "profile_loaded": _perf_rep["profile_loaded"]}
 
-    step_key = ("dp" if dp else "serial", logical, physical, cfg,
-                has_empty, loss, optimizer, lr, l2, chosen_impl)
+    step_key = ("dp" if dp else "serial", logical, physical, procs,
+                cfg, has_empty, loss, optimizer, lr, l2, chosen_impl,
+                grad_compress)
     step_fn = _STEP_CACHE.get(step_key)
     if step_fn is None:
         if dp:
             step_fn = build_dp_averaged_train_step(
                 sum_loss_with_hits_fn(fwd, loss), opt, mesh, l2=l2,
-                logical_world=logical)
+                logical_world=logical, compress=compress)
         else:
             # shared minibatch loss + matching decision rule (one
             # definition, train/losses.py); the pre-update predictions
@@ -482,22 +575,55 @@ def fit_streaming(
             _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
         _STEP_CACHE[step_key] = step_fn
 
+    # error-feedback residual memory for the compressed all-reduce:
+    # per-device local state with a leading (physical,) axis sharded
+    # over the mesh's data rows.  Deliberately NOT checkpointed — it
+    # resets to zero on resume (see the docstring's tradeoff note).
+    err0 = None
+    if compress is not None:
+        if procs > 1:
+            err0 = jax.tree.map(
+                lambda p: device_put_process_local(
+                    np.zeros((d_local,) + tuple(p.shape), np.float32),
+                    mesh, physical),
+                astate.state.params)
+        else:
+            err_sh = NamedSharding(mesh, PartitionSpec("data"))
+            err0 = jax.tree.map(
+                lambda p: jax.device_put(
+                    np.zeros((physical,) + tuple(p.shape), np.float32),
+                    err_sh),
+                astate.state.params)
+
     def save_boundary(next_epoch: int, next_pos: int) -> None:
         tree = {"astate": astate, "epoch": np.int64(next_epoch),
                 "pos": np.int64(next_pos),
                 "shards_done": np.int64(shards_done),
                 "hits": np.int64(hits), "seen": np.int64(seen),
                 "fingerprint": fingerprint}
-        ckpt.save(ckpt_dir, shards_done, tree,
-                  keep_last=ckpt_keep_last,
-                  extra_meta={"schedule": {"dp": dp,
-                                           "logical_world": int(logical)},
-                              "lineage": lineage,
-                              "dispatch": dispatch_record})
+        extra = {"schedule": {"dp": dp,
+                              "logical_world": int(logical),
+                              "procs": int(procs)},
+                 "lineage": lineage,
+                 "dispatch": dispatch_record}
+        if procs > 1:
+            # every rank writes its own CRC'd payload; rank 0 commits
+            # the step once all payloads landed (ckpt.coordinated)
+            coordinated.save_coordinated(
+                ckpt_dir, shards_done, tree, rank=rt.rank, procs=procs,
+                keep_last=ckpt_keep_last,
+                barrier_timeout_s=ckpt_barrier_timeout_s,
+                extra_meta=extra)
+            if not rt.is_leader:
+                return
+        else:
+            ckpt.save(ckpt_dir, shards_done, tree,
+                      keep_last=ckpt_keep_last, extra_meta=extra)
         # also publish the current EVAL iterate (Polyak average once
         # the tail window opened, else the raw iterate) as a params-
         # only snapshot under <ckpt_dir>/serve — what a live server's
-        # /reload (serving.reload) swaps in without a restart
+        # /reload (serving.reload) swaps in without a restart; rank 0
+        # only in a gang (one server, one snapshot)
         serve_now = (astate.avg_params
                      if float(astate.avg_count) > 0
                      else astate.state.params)
@@ -505,8 +631,19 @@ def fit_streaming(
 
     # ---- event stream: serial or grouped, inline or prefetched ------
     if dp:
-        def transfer(codes, empty, labels, valid):
+        if procs > 1:
+            # each rank streams ONLY its contiguous slot block; the
+            # global stacked batch is assembled from every process's
+            # local rows (mesh rows are process-contiguous by
+            # construction, so local slots == local mesh rows)
+            slot_range = process_slot_range(logical, procs, rt.rank)
+            put = lambda x: device_put_process_local(  # noqa: E731
+                x, mesh, logical)
+        else:
+            slot_range = None
             put = lambda x: device_put_sharded(x, mesh)  # noqa: E731
+
+        def transfer(codes, empty, labels, valid):
             batch = ((put(codes), put(empty)) if has_empty
                      else put(codes))
             return (batch, put(labels), put(valid))
@@ -517,7 +654,7 @@ def fit_streaming(
             shuffle=shuffle_shards, start_epoch=epoch0, start_pos=pos0,
             has_empty=has_empty, packed_width=packed_width(k, b),
             mask_width=packed_mask_width(k), transfer=transfer,
-            mmap=mmap)
+            mmap=mmap, slot_range=slot_range)
     else:
         def transfer(bp, bem, bl):
             batch = ((jnp.asarray(bp), jnp.asarray(bem)) if has_empty
@@ -548,7 +685,11 @@ def fit_streaming(
                 # mid-step — both as a real fault would
                 if faults._ACTIVE is not None:
                     faults.on_train_step(global_step)
-                astate, (_, h) = step_fn(astate, active, *ev.args)
+                if compress is not None:
+                    (astate, err0), (_, h) = step_fn(
+                        (astate, err0), active, *ev.args)
+                else:
+                    astate, (_, h) = step_fn(astate, active, *ev.args)
                 if watchdog is not None:
                     # dispatch is async: this observes host-side step
                     # latency (enqueue + any producer stall), which is
@@ -568,6 +709,9 @@ def fit_streaming(
             prev_done = shards_done
             shards_done += ev.shards_consumed
             processed_here += ev.shards_consumed
+            if rt.is_multiprocess:
+                heartbeat(rt, step=global_step,
+                          shards_done=shards_done)
             at_stop = (stop_after_shards is not None
                        and processed_here >= stop_after_shards)
             done = ev.next_epoch >= epochs

@@ -24,20 +24,40 @@ What counts as a crash: any exception EXCEPT
 A shared ``StepWatchdog`` (``repro.ft.watchdog``) rides along across
 restarts, so straggler escalations accumulate over the whole supervised
 run; its counters are surfaced on the returned ``SupervisedRun``.
+
+``run_multiprocess_supervised`` is the multi-HOST half: it launches a
+``procs``-wide gang of ``repro.train.worker`` subprocesses (each a real
+OS process joined through ``jax.distributed``), watches them, and
+**gang-restarts** on any worker death — a single rank cannot rejoin a
+live gloo gang, so the whole gang is SIGKILLed and respawned from the
+latest valid *coordinated* checkpoint (``ckpt.coordinated``).  Restart
+spawns are staggered per rank through ``BackoffPolicy.for_rank`` so a
+gang restart does not reproduce the thundering herd the jitter exists
+to break.  Exit code 64 from any worker is the config-error protocol
+(``train.worker``): deterministic, raised as ``ValueError``, never
+retried.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import logging
+import os
+import signal
+import socket
+import subprocess
+import sys
 import time
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.ft.retry import BackoffPolicy
 from repro.ft.watchdog import StepWatchdog
 from repro.train.streaming import StreamFitResult, fit_streaming
+from repro.train.worker import CONFIG_ERROR_EXIT
 
 __all__ = ["RestartPolicy", "CrashRecord", "SupervisedRun",
-           "run_supervised"]
+           "run_supervised", "MultiProcessRun",
+           "run_multiprocess_supervised"]
 
 log = logging.getLogger("repro.train.supervisor")
 
@@ -137,3 +157,205 @@ def run_supervised(
             crashes[-1].recover_s += time.perf_counter() - t_try
         return SupervisedRun(result=result, restarts=attempt,
                              crashes=crashes, watchdog=watchdog)
+
+
+# ------------------------------------------------ multi-process gang ----
+
+@dataclasses.dataclass
+class MultiProcessRun:
+    """A finished gang run: per-rank result records (rank → the dict
+    ``train.worker`` dumped), restart/crash accounting, and where each
+    rank left its final params (``params_paths[rank]``)."""
+    results: Dict[int, dict]
+    params_paths: Dict[int, str]
+    restarts: int
+    crashes: List[CrashRecord]
+    run_dir: str
+
+    @property
+    def result(self) -> dict:
+        return self.results[0]
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    try:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+    finally:
+        s.close()
+
+
+def _src_root() -> str:
+    # <src>/repro/train/supervisor.py → <src>, so spawned workers
+    # import the same tree regardless of the caller's cwd
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def _kill_gang(children) -> None:
+    for p in children:
+        if p.poll() is None:
+            try:
+                p.send_signal(signal.SIGKILL)
+            except OSError:
+                pass
+    for p in children:
+        try:
+            p.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            pass
+
+
+def _tail(path: str, n: int = 12) -> str:
+    try:
+        with open(path, errors="replace") as f:
+            return "".join(f.readlines()[-n:])
+    except OSError:
+        return "<no log>"
+
+
+def run_multiprocess_supervised(
+    root: str,
+    cfg: Any,
+    *,
+    procs: int,
+    run_dir: str,
+    policy: Optional[RestartPolicy] = None,
+    fault_spec: Optional[dict] = None,
+    local_devices: int = 1,
+    attempt_timeout_s: float = 600.0,
+    **fit_kwargs,
+) -> MultiProcessRun:
+    """Runs ``fit_streaming(root, cfg, **fit_kwargs)`` as a
+    ``procs``-process ``jax.distributed`` gang under gang-restart
+    supervision.
+
+    Each attempt binds a fresh coordinator port, writes one JSON spec
+    per rank under ``run_dir`` and execs ``python -m
+    repro.train.worker`` per rank (``local_devices`` fake CPU devices
+    each, via ``XLA_FLAGS``).  The first non-zero worker exit kills
+    the WHOLE gang (a dead rank cannot rejoin live collectives) and —
+    within ``policy.max_restarts`` — respawns it; every worker resumes
+    from the latest valid coordinated checkpoint, so the finished
+    gang's params are bit-identical to an uninterrupted run's.
+    ``fault_spec`` (``FaultPlan.to_spec``) ships a rank-targeted fault
+    plan to every worker; fired counts persist per rank under
+    ``run_dir`` so ``times=1`` kills do not re-fire after a respawn.
+    """
+    if procs < 1:
+        raise ValueError(f"procs must be >= 1, got {procs}")
+    if not fit_kwargs.get("ckpt_dir"):
+        raise ValueError(
+            "run_multiprocess_supervised requires ckpt_dir: a gang "
+            "restart without checkpoints would retrain from scratch")
+    if fit_kwargs.get("resume") is False:
+        raise ValueError(
+            "run_multiprocess_supervised forces resume=True — a gang "
+            "restart that refuses its own checkpoints cannot recover")
+    fit_kwargs["resume"] = True
+    policy = RestartPolicy() if policy is None else policy
+    os.makedirs(run_dir, exist_ok=True)
+
+    import dataclasses as _dc
+    cfg_dict = _dc.asdict(cfg)
+
+    env_base = dict(os.environ)
+    env_base["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(local_devices)}")
+    env_base["JAX_PLATFORMS"] = "cpu"
+    env_base["PYTHONPATH"] = (
+        _src_root() + os.pathsep + env_base.get("PYTHONPATH", ""))
+
+    crashes: List[CrashRecord] = []
+    attempt = 0
+    while True:
+        coordinator = f"127.0.0.1:{_free_port()}"
+        children, logs = [], []
+        for r in range(procs):
+            spec = {"root": root, "cfg": cfg_dict, "fit": fit_kwargs,
+                    "procs": procs, "rank": r,
+                    "coordinator": coordinator, "run_dir": run_dir,
+                    "fault_spec": fault_spec,
+                    "fault_state": os.path.join(
+                        run_dir, f"fault_state_rank{r}.json"),
+                    "result_path": os.path.join(
+                        run_dir, f"result_rank{r}.json"),
+                    "params_path": os.path.join(
+                        run_dir, f"params_rank{r}.npz")}
+            spec_path = os.path.join(run_dir, f"spec_rank{r}.json")
+            with open(spec_path, "w") as f:
+                json.dump(spec, f)
+            if attempt > 0:
+                # per-rank de-correlated stagger: a gang restart must
+                # not relaunch every rank at the same instant
+                time.sleep(policy.backoff.for_rank(r)
+                           .delay_s(attempt - 1))
+            log_path = os.path.join(run_dir,
+                                    f"log_rank{r}_try{attempt}.txt")
+            logs.append(log_path)
+            lf = open(log_path, "w")
+            # exec the worker FILE, not ``-m repro.train.worker``: -m
+            # would import repro.train.__init__ (and with it the whole
+            # jax training stack) before the worker can call
+            # jax.distributed.initialize, which must precede any jax
+            # computation
+            worker_path = os.path.join(
+                os.path.dirname(os.path.abspath(__file__)), "worker.py")
+            children.append(subprocess.Popen(
+                [sys.executable, worker_path, "--spec", spec_path],
+                env=env_base, stdout=lf, stderr=subprocess.STDOUT,
+                close_fds=True))
+            lf.close()
+
+        t_try = time.perf_counter()
+        failure: Optional[str] = None
+        while True:
+            codes = [p.poll() for p in children]
+            bad = [(r, c) for r, c in enumerate(codes)
+                   if c not in (None, 0)]
+            if bad:
+                r, c = bad[0]
+                if c == CONFIG_ERROR_EXIT:
+                    _kill_gang(children)
+                    raise ValueError(
+                        f"gang rank {r} reported a configuration "
+                        f"error (exit {c}):\n{_tail(logs[r])}")
+                failure = (f"rank {r} died with "
+                           + (f"signal {-c}" if c < 0 else f"exit {c}"))
+                break
+            if all(c == 0 for c in codes):
+                break
+            if time.perf_counter() - t_try > attempt_timeout_s:
+                failure = (f"gang attempt timed out after "
+                           f"{attempt_timeout_s:.0f}s")
+                break
+            time.sleep(0.02)
+        if failure is None and all(p.poll() == 0 for p in children):
+            if crashes:
+                crashes[-1].recover_s += time.perf_counter() - t_try
+            results, params = {}, {}
+            for r in range(procs):
+                with open(os.path.join(run_dir,
+                                       f"result_rank{r}.json")) as f:
+                    results[r] = json.load(f)
+                params[r] = os.path.join(run_dir,
+                                         f"params_rank{r}.npz")
+            return MultiProcessRun(results=results, params_paths=params,
+                                   restarts=attempt, crashes=crashes,
+                                   run_dir=run_dir)
+        _kill_gang(children)
+        if crashes:
+            crashes[-1].recover_s += time.perf_counter() - t_try
+        if attempt >= policy.max_restarts:
+            raise RuntimeError(
+                f"gang gave up after {attempt} restarts: {failure}\n"
+                + _tail(logs[0]))
+        delay = policy.backoff.delay_s(attempt)
+        log.warning("gang attempt %d failed (%s) — restarting in "
+                    "%.3fs (restart %d/%d)", attempt + 1, failure,
+                    delay, attempt + 1, policy.max_restarts)
+        crashes.append(CrashRecord(restart=attempt + 1, error=failure,
+                                   backoff_s=delay))
+        time.sleep(delay)
+        attempt += 1
